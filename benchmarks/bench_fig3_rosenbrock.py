@@ -1,0 +1,64 @@
+"""Fig. 3 reproduction: relaxed 100-D Rosenbrock — GP-H / GP-X (Alg. 1,
+RBF kernel, history 2, shared line search) vs BFGS.
+
+Paper claim: "All algorithms shared the same line search routine and show
+similar performance."  (scipy is unavailable offline; the BFGS baseline is
+our own implementation using the SAME strong-Wolfe search.)
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_gp import ROSEN
+from repro.optim import gp_optimize
+from repro.optim.classic import bfgs_optimize
+
+
+def _fg():
+    def f(x):
+        return jnp.sum(x[:-1] ** 2 + 2.0 * (x[1:] - x[:-1] ** 2) ** 2)
+
+    g = jax.grad(f)
+    return lambda x: (float(f(x)), g(x))
+
+
+def run() -> dict:
+    cfg = ROSEN
+    fg = _fg()
+    x0 = jnp.asarray(np.random.RandomState(cfg.seed + 3).randn(cfg.d)) * 0.5
+    out = {}
+    for name, kw in [
+        ("gp_h", dict(mode="gph", lam=cfg.lam_gph)),
+        ("gp_x", dict(mode="gpx", lam=cfg.lam_gpx)),
+    ]:
+        tr = gp_optimize(fg, x0, kernel="rbf", history=cfg.history,
+                         max_iters=cfg.max_iters, tol_grad=cfg.tol_grad,
+                         noise=1e-10, **kw)
+        out[name] = {"iters": len(tr.gnorms) - 1,
+                     "final_f": float(tr.fvals[-1]),
+                     "final_gnorm": float(tr.gnorms[-1]),
+                     "grad_evals": tr.n_grad_evals}
+    trb = bfgs_optimize(fg, x0, max_iters=cfg.max_iters,
+                        tol_grad=cfg.tol_grad)
+    out["bfgs"] = {"iters": len(trb.gnorms) - 1,
+                   "final_f": float(trb.fvals[-1]),
+                   "final_gnorm": float(trb.gnorms[-1]),
+                   "grad_evals": trb.n_grad_evals}
+    out["paper_claim"] = "GP-H / GP-X / BFGS show similar performance"
+    # "similar" per the paper's own Fig. 3: all three reach the optimum;
+    # GP-X is visibly the slowest there too. Criterion: every method
+    # converges (f < 1e-6) within an order of magnitude of the fastest.
+    ok = all(out[k]["final_f"] < 1e-6 for k in ("gp_h", "gp_x", "bfgs"))
+    spread = max(out[k]["iters"] for k in ("gp_h", "gp_x", "bfgs")) / \
+        max(1, min(out[k]["iters"] for k in ("gp_h", "gp_x", "bfgs")))
+    out["iter_spread"] = spread
+    out["claim_holds"] = bool(ok and spread < 10.0)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

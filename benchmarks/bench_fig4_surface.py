@@ -1,0 +1,77 @@
+"""Fig. 4 / Sec. 5.2 reproduction: infer the function surface of the 100-D
+relaxed Rosenbrock from N=1000 gradient observations with the matrix-free
+MVM + preconditioned CG (N > D regime — the Gram matrix would need > 74 GB;
+the factor set needs ~25 MB).
+
+Reported: iterations to tolerance, peak factor storage, error of the
+inferred function values along the (x1, x2) plane vs ground truth, and the
+memory ratio vs the dense Gram matrix.
+"""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_factors, cross_value_matvec, get_kernel,
+                        gram_cg_solve, posterior_grad)
+
+
+def run(n: int = 400, d: int = 100, tol: float = 1e-6) -> dict:
+    """Default N reduced to 400 for CI speed (paper: 1000; same regime
+    N*D >> 0, identical code path — pass n=1000 to reproduce exactly)."""
+    spec = get_kernel("rbf")
+    lam = 1.0 / (10.0 * d)                       # paper: ell^2 = 10*D
+
+    def f(x):
+        return jnp.sum(x[:-1] ** 2 + 2.0 * (x[1:] - x[:-1] ** 2) ** 2)
+
+    grad = jax.vmap(jax.grad(f))
+    rng = np.random.RandomState(0)
+    X = jnp.asarray(rng.uniform(-2, 2, size=(n, d)))
+    G = grad(X)
+
+    f_fac = build_factors(spec, X, lam=lam, noise=1e-8)
+    t0 = time.time()
+    res = gram_cg_solve(spec, f_fac, G, tol=tol, maxiter=2000)
+    dt = time.time() - t0
+
+    # memory accounting (paper Sec. 5.2 table-in-text)
+    dense_bytes = (n * d) ** 2 * 8
+    factor_bytes = (3 * n * d + 3 * n * n) * 8   # paper's own accounting
+
+    # surface check along the (x1, x2) plane
+    g1, g2 = jnp.meshgrid(jnp.linspace(-2, 2, 9), jnp.linspace(-2, 2, 9))
+    Xq = jnp.zeros((81, d)).at[:, 0].set(g1.ravel()).at[:, 1].set(g2.ravel())
+    vals = cross_value_matvec(spec, Xq, f_fac, res.x)
+    truth = jax.vmap(f)(Xq)
+    # posterior value is defined up to a constant: compare centered
+    vc = vals - vals.mean()
+    tc = truth - truth.mean()
+    corr = float(jnp.sum(vc * tc) /
+                 jnp.sqrt(jnp.sum(vc ** 2) * jnp.sum(tc ** 2)))
+    pg = posterior_grad(spec, X[:8], f_fac, res.x)
+    interp_err = float(jnp.max(jnp.abs(pg - G[:8])) / jnp.max(jnp.abs(G[:8])))
+
+    return {
+        "n": n, "d": d,
+        "cg_iters": int(res.iters),
+        "cg_relres": float(res.resnorm / jnp.linalg.norm(G)),
+        "seconds": round(dt, 2),
+        "dense_gram_gb": dense_bytes / 1e9,
+        "factor_mb": factor_bytes / 1e6,
+        "memory_ratio": dense_bytes / factor_bytes,
+        "surface_correlation": corr,
+        "train_grad_interp_relerr": interp_err,
+        "paper_claim": "74 GB dense vs 25 MB factors at N=1000; surface "
+                       "recovers minimum + elongation",
+        "claim_holds": bool(corr > 0.9 and interp_err < 1e-3),
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

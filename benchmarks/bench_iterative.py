@@ -1,0 +1,48 @@
+"""Preconditioning benchmark (paper Sec. 2.3: preconditioning "drastically
+reduces the required number of iterations" for the matrix-free CG path).
+
+The Kronecker term B = K' x Lambda gives a FREE preconditioner — B^{-1} is
+an N x N inverse; this bench measures CG iterations with and without it
+across lengthscales (conditioning regimes).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_factors, get_kernel, gram_cg_solve
+
+
+def run() -> dict:
+    spec = get_kernel("rbf")
+    rng = np.random.RandomState(0)
+    n, d = 24, 64
+    X = jnp.asarray(rng.randn(n, d)) * 2.0
+    G = jnp.asarray(rng.randn(n, d))
+    rows = []
+    for lam in [0.005, 0.02, 0.1]:
+        f = build_factors(spec, X, lam=lam, noise=1e-9)
+        it_p = int(gram_cg_solve(spec, f, G, tol=1e-8,
+                                 precondition=True).iters)
+        it_n = int(gram_cg_solve(spec, f, G, tol=1e-8,
+                                 precondition=False).iters)
+        rows.append({"lam": lam, "iters_precond": it_p,
+                     "iters_plain": it_n,
+                     "speedup": it_n / max(it_p, 1)})
+    return {
+        "rows": rows,
+        "paper_claim": "Kronecker-term preconditioning reduces CG iters",
+        # preconditioning wins in the ill-conditioned (small-lam) regime it
+        # is meant for, and must never hurt badly elsewhere
+        "claim_holds": bool(
+            any(r["speedup"] > 1.3 for r in rows)
+            and all(r["iters_precond"] <= r["iters_plain"] + 2
+                    for r in rows)),
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

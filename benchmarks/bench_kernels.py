@@ -1,0 +1,77 @@
+"""Pallas kernel microbenchmarks (interpret-mode correctness + jnp-path
+throughput on CPU; the BlockSpec geometry is the TPU deliverable).
+
+For each kernel: max abs error vs the ref.py oracle across a shape sweep,
+plus CPU wall time of the jnp reference path (the number that matters on
+this container; TPU timing requires hardware).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (fused_gram_norms, fused_gram_norms_ref,
+                           gram_update, gram_update_ref, skinny_gram,
+                           skinny_gram_ref)
+
+
+def _time(fn, reps=5):
+    fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        ts.append(time.time() - t0)
+    return min(ts)
+
+
+def run() -> dict:
+    rng = jax.random.PRNGKey(0)
+    out = {}
+    shapes = [(8, 8, 4096), (16, 16, 65536), (8, 8, 262144)]
+    rows = []
+    for na, nb, d in shapes:
+        A = jax.random.normal(jax.random.fold_in(rng, 1), (na, d))
+        B = jax.random.normal(jax.random.fold_in(rng, 2), (nb, d))
+        got = skinny_gram(A, B, 0.5, interpret=True)
+        want = skinny_gram_ref(A, B, 0.5)
+        # relative error (f32 accumulation noise grows ~sqrt(D))
+        err = float(jnp.max(jnp.abs(got - want)) /
+                    jnp.max(jnp.abs(want)))
+        ref = jax.jit(lambda a, b: skinny_gram_ref(a, b, 0.5))
+        t = _time(lambda: ref(A, B))
+        gbps = (A.size + B.size) * 4 / t / 1e9
+        rows.append({"shape": [na, nb, d], "interp_err": err,
+                     "jnp_seconds": t, "jnp_gb_per_s": gbps})
+    out["skinny_gram"] = rows
+
+    n, d = 8, 65536
+    K1 = jax.random.normal(jax.random.fold_in(rng, 3), (n, n))
+    M = jax.random.normal(jax.random.fold_in(rng, 4), (n, n))
+    V = jax.random.normal(jax.random.fold_in(rng, 5), (n, d))
+    X = jax.random.normal(jax.random.fold_in(rng, 6), (n, d))
+    err = float(jnp.max(jnp.abs(
+        gram_update(K1, M, V, X, 0.5, interpret=True) -
+        gram_update_ref(K1, M, V, X, 0.5))))
+    ref2 = jax.jit(lambda: gram_update_ref(K1, M, V, X, 0.5))
+    out["gram_update"] = {"shape": [n, d], "interp_err": err,
+                          "jnp_seconds": _time(lambda: ref2())}
+
+    A = jax.random.normal(jax.random.fold_in(rng, 7), (8, 65536))
+    P, na_, nb_ = fused_gram_norms(A, A, 0.3, interpret=True)
+    Pr, nar, nbr = fused_gram_norms_ref(A, A, 0.3)
+    out["fused_gram_norms"] = {
+        "interp_err": float(max(jnp.max(jnp.abs(P - Pr)),
+                                jnp.max(jnp.abs(na_ - nar[:, 0])))),
+    }
+    out["claim_holds"] = all(
+        r["interp_err"] < 1e-5 for r in rows) and \
+        out["gram_update"]["interp_err"] < 1e-4
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,44 @@
+"""Memory-footprint table (paper Sec. 2.3 "General Improvements" +
+Sec. 5.2 numbers): dense Gram storage vs factor storage across (N, D),
+including the paper's flagship N=1000, D=100 cell (74 GB vs 25 MB).
+"""
+import numpy as np
+
+
+def factor_bytes(n: int, d: int, dtype_bytes: int = 8) -> int:
+    # K', K'' (N^2 each), X (ND), plus CG workspace 2*ND (paper: 3ND+3N^2)
+    return (3 * n * d + 3 * n * n) * dtype_bytes
+
+
+def dense_bytes(n: int, d: int, dtype_bytes: int = 8) -> int:
+    return (n * d) ** 2 * dtype_bytes
+
+
+def run() -> dict:
+    cells = [(10, 100), (100, 100), (1000, 100), (8, 1_000_000),
+             (64, 1_000_000_000)]
+    rows = []
+    for n, d in cells:
+        db = dense_bytes(n, d)
+        fb = factor_bytes(n, d)
+        rows.append({
+            "n": n, "d": d,
+            "dense_gb": db / 1e9,
+            "factors_mb": fb / 1e6,
+            "ratio": db / fb,
+        })
+    flagship = rows[2]
+    return {
+        "rows": rows,
+        "paper_flagship": flagship,
+        "paper_claim": ">74 GB dense vs 25 MB factors at N=1000, D=100",
+        # paper rounds 3ND+3N^2 doubles (26.4 MB) down to "25 MB"
+        "claim_holds": bool(flagship["dense_gb"] > 74.0
+                            and flagship["factors_mb"] < 30.0),
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

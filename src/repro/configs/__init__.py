@@ -1,0 +1,36 @@
+"""Config registry: --arch <id> lookup for all assigned architectures."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models import ModelConfig
+
+_MODULES = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "gemma3-4b": "gemma3_4b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "mamba2-130m": "mamba2_130m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "zamba2-7b": "zamba2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = _module(arch)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_optimizer_name(arch: str) -> str:
+    return getattr(_module(arch), "OPTIMIZER", "adamw")

@@ -1,0 +1,44 @@
+"""deepseek-moe-16b — fine-grained MoE (arXiv:2401.06066).
+
+28L d_model=2048 16H (MHA: kv=16) d_ff=1408/expert vocab=102400,
+64 routed experts top-6 + 2 shared experts. ~16B params / ~2.8B active.
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    rope_style="full",
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="deepseek-moe-16b-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=32,
+    vocab_size=512,
+    n_experts=8,
+    n_shared_experts=2,
+    top_k=3,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

@@ -1,0 +1,46 @@
+"""gemma3-1b — dense, 5:1 local:global interleave (small sibling).
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144, head_dim=256,
+window=512, tied embeddings. long_500k RUNS.
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    window=512,
+    global_every=6,
+    tie_embeddings=True,
+    rope_theta=1e6,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="gemma3-1b-smoke",
+    family="dense",
+    n_layers=7,                 # 1 group + 1 remainder
+    d_model=48,
+    n_heads=2,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=512,
+    window=16,
+    global_every=6,
+    tie_embeddings=True,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

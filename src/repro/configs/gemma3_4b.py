@@ -1,0 +1,47 @@
+"""gemma3-4b — dense, 5:1 local:global sliding-window interleave, 128k ctx.
+
+34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144, head_dim=256,
+window=1024, tied embeddings. long_500k RUNS (sub-quadratic: only the 1-in-6
+global layers carry a full-length cache).
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    window=1024,
+    global_every=6,
+    tie_embeddings=True,
+    rope_theta=1e6,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="gemma3-4b-smoke",
+    family="dense",
+    n_layers=8,                 # 1 group of 6 + 2 remainder: hits both stacks
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    window=16,
+    global_every=6,
+    tie_embeddings=True,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

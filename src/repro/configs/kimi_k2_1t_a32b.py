@@ -1,0 +1,52 @@
+"""kimi-k2-1t-a32b — trillion-param MoE (Kimi K2, arXiv:2501.kimi2).
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048/expert vocab=163840,
+MoE 384 routed experts top-8 + 1 shared expert.
+~1.03T total params / ~32B active. head_dim = 7168/64 = 112.
+
+Memory note (EXPERIMENTS.md §Dry-run): params bf16 alone are 2 TB; with
+gradients this saturates a single 256-chip v5e pod's 4 TB HBM, so train_4k
+for this arch is multi-pod territory by physics — the optimizer therefore
+defaults to factored second moments (adafactor-style) + no master copy.
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab_size=163840,
+    n_experts=384,
+    n_shared_experts=1,
+    top_k=8,
+    rope_style="full",
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="kimi-k2-1t-a32b-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=32,
+    vocab_size=512,
+    n_experts=16,
+    n_shared_experts=1,
+    top_k=4,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adafactor"        # 1T params: factored stats or bust (see above)

@@ -1,0 +1,43 @@
+"""mamba2-130m — pure SSM, SSD/state-space duality (arXiv:2405.21060).
+
+24L d_model=768 (attention-free) vocab=50280, ssm_state=128,
+d_inner = 2*768 = 1536, head_dim 64 -> 24 SSM heads.
+Decode state is O(1)/layer: long_500k is the showcase shape.
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="mamba2-130m-smoke",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_chunk=16,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

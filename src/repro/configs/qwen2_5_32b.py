@@ -1,0 +1,41 @@
+"""qwen2.5-32b — dense GQA with QKV bias (hf:Qwen/Qwen2.5).
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
+40 heads over a 16-way TP axis is uneven -> GSPMD pads (roofline notes).
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152064,
+    rope_style="full",
+    rope_theta=1e6,
+    qkv_bias=True,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="qwen2.5-32b-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=80,
+    n_heads=5,                  # keep the uneven-heads property
+    n_kv_heads=1,
+    d_ff=192,
+    vocab_size=512,
+    qkv_bias=True,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

@@ -1,0 +1,46 @@
+"""qwen2-vl-7b — VLM backbone with M-RoPE (arXiv:2409.12191).
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064. The vision
+frontend is a STUB per assignment: input_specs() provides precomputed
+patch embeddings (B, n_patches, D) that replace the prompt prefix, plus
+3-stream (t/h/w) M-RoPE position ids.
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    rope_style="mrope",
+    rope_theta=1e6,
+    qkv_bias=True,
+    n_patches=256,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="qwen2-vl-7b-smoke",
+    family="vlm",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    rope_style="mrope",
+    qkv_bias=True,
+    n_patches=8,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

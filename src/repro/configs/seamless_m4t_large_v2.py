@@ -1,0 +1,41 @@
+"""seamless-m4t-large-v2 — enc-dec multimodal backbone (arXiv:2308.11596).
+
+24 encoder + 24 decoder layers, d_model=1024 16H (MHA kv=16) d_ff=8192
+vocab=256206. The audio frontend is a STUB per assignment: input_specs()
+provides precomputed frame embeddings (B, S_src, D). Decode shapes run
+(it has a decoder); long_500k is SKIPPED (full attention).
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="seamless-m4t-large-v2-smoke",
+    family="encdec",
+    n_layers=3,
+    n_enc_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

@@ -1,0 +1,53 @@
+"""zamba2-7b — hybrid: Mamba2 backbone + weight-tied shared attention
+block every 6 layers (arXiv:2411.15242).
+
+81L d_model=3584 32H (MHA kv=32) d_ff=14336 (in the shared block)
+vocab=32000, ssm_state=64. 81 = 13 groups of 6 + 3 trailing Mamba layers;
+the shared attn+MLP block fires 13 times with ONE set of weights.
+long_500k RUNS (SSM layers O(1); 13 full-length KV caches for the shared
+block invocations).
+"""
+from jax import numpy as jnp
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    attn_every=6,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    arch="zamba2-7b-smoke",
+    family="hybrid",
+    n_layers=8,                 # 2 groups of 3 + 2 remainder
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_chunk=16,
+    attn_every=3,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    remat=False,
+)
+
+OPTIMIZER = "adamw"

@@ -1,0 +1,22 @@
+"""Core: structured GP inference with derivative observations (the paper)."""
+from .gram import GramFactors, build_factors, dense_gram, dense_cross_gram, pairwise_r, scaled_gram
+from .inference import (
+    HessianOperator,
+    infer_optimum,
+    posterior_grad,
+    posterior_hessian,
+    posterior_value,
+)
+from .kernels import KernelSpec, get_kernel, kernel_names
+from .mvm import cross_grad_matvec, cross_value_matvec, gram_matvec, l_op, lt_op
+from .solvers import CGResult, cg, gram_cg_solve
+from .woodbury import dense_solve, poly2_quadratic_solve, woodbury_solve
+
+__all__ = [
+    "GramFactors", "build_factors", "dense_gram", "dense_cross_gram",
+    "pairwise_r", "scaled_gram", "HessianOperator", "infer_optimum",
+    "posterior_grad", "posterior_hessian", "posterior_value", "KernelSpec",
+    "get_kernel", "kernel_names", "cross_grad_matvec", "cross_value_matvec",
+    "gram_matvec", "l_op", "lt_op", "CGResult", "cg", "gram_cg_solve",
+    "dense_solve", "poly2_quadratic_solve", "woodbury_solve",
+]

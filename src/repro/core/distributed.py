@@ -1,0 +1,218 @@
+"""D-sharded (shard_map) variants of the structured Gram operations.
+
+The paper's decomposition has one systems-defining property: every O(D)
+object only appears inside tall-skinny contractions that reduce to (N, N).
+Sharding the dimension axis over the WHOLE mesh therefore makes each Gram
+op a purely local (N, D_loc) computation plus a psum of a few N x N
+matrices — O(N^2) bytes of collective traffic per solve, independent of D
+and of device count. That is the communication-avoiding scheme this module
+implements (DESIGN.md sec. 2/6).
+
+All functions here are written for use INSIDE shard_map (they take local
+shards and issue explicit psums over `axis_names`). ``sharded_*`` wrappers
+construct the shard_map for callers holding global arrays.
+
+Layout: (N, D) rows=observations, D sharded on the last axis. Lambda must
+be scalar, or a (D,) diagonal sharded like the data.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .gram import GramFactors
+from .kernels import KernelSpec
+from .mvm import l_op, lt_op
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Collective-side primitives (called inside shard_map)
+# ---------------------------------------------------------------------------
+
+def local_scaled_gram(A: Array, B: Array, lam, axis_names: Sequence[str]) -> Array:
+    """psum_d (A*lam) @ B^T for D-sharded A, B: the N^2-byte collective."""
+    part = (A * lam) @ B.T
+    return jax.lax.psum(part, axis_names)
+
+
+def local_pairwise_r(
+    spec: KernelSpec, A: Array, B: Array, lam, axis_names: Sequence[str],
+    c: Array | None = None,
+) -> Array:
+    """Pairwise r for D-sharded inputs; one fused psum of (gram, norms)."""
+    if spec.is_stationary:
+        part = (A * lam) @ B.T
+        da = jnp.sum((A * lam) * A, axis=-1)
+        db = jnp.sum((B * lam) * B, axis=-1)
+        g, da, db = jax.lax.psum((part, da, db), axis_names)
+        return jnp.maximum(da[:, None] + db[None, :] - 2.0 * g, 0.0)
+    At = A if c is None else A - c
+    Bt = B if c is None else B - c
+    return local_scaled_gram(At, Bt, lam, axis_names)
+
+
+def local_build_factors(
+    spec: KernelSpec, X: Array, lam, axis_names: Sequence[str],
+    c: Array | None = None, noise: float = 0.0,
+) -> GramFactors:
+    """GramFactors with local (N, D_loc) Xt but *global* (replicated) K1e/K2e."""
+    r = local_pairwise_r(spec, X, X, lam, axis_names, c=c)
+    Xt = X if (spec.is_stationary or c is None) else X - c
+    return GramFactors(K1e=spec.k1e(r), K2e=spec.k2e(r), Xt=Xt, lam=lam,
+                       noise=float(noise), c=None if spec.is_stationary else c)
+
+
+def local_gram_matvec(
+    f: GramFactors, V: Array, *, stationary: bool, axis_names: Sequence[str],
+) -> Array:
+    """(grad K grad') vec(V) with D-sharded V/Xt. One N^2 psum, rest local.
+
+    Identical math to core.mvm.gram_matvec: the only cross-device term is
+    M = (Xt*lam) @ V^T; the (N,N) algebra is replicated and the final
+    (N,N) @ (N,D_loc) matmuls are local.
+    """
+    M = local_scaled_gram(f.Xt, V, f.lam, axis_names)
+    if stationary:
+        Mt = f.K2e * (M - jnp.diagonal(M)[None, :])
+        small = jnp.diag(jnp.sum(Mt, axis=1)) - Mt
+    else:
+        small = f.K2e * M
+    W = (f.K1e @ V + small @ f.Xt) * f.lam
+    if f.noise:
+        W = W + f.noise * V
+    return W
+
+
+def local_woodbury_solve(
+    spec: KernelSpec, f: GramFactors, G: Array, axis_names: Sequence[str],
+    jitter: float = 1e-10,
+) -> Array:
+    """Exact Woodbury solve with D-sharded Xt/G (paper Eq. 6-8, distributed).
+
+    Cross-device traffic: exactly two (N,N) psums (S and the RHS skinny
+    contraction) — the N^2 x N^2 inner system is replicated on every device
+    and solved redundantly (cheaper than sharding an N<=64 solve).
+    """
+    n = f.n
+    dtype = G.dtype
+    K1 = f.K1e
+    if f.noise:
+        lam_s = jnp.asarray(f.lam)
+        K1 = K1 + (f.noise / lam_s) * jnp.eye(n, dtype=dtype)
+    K1i = jnp.linalg.inv(K1 + jitter * jnp.eye(n, dtype=dtype))
+    S = local_scaled_gram(f.Xt, f.Xt, f.lam, axis_names)
+    W0 = K1i @ G                                      # local (N, D_loc)
+    T_part = W0 @ f.Xt.T                              # needs psum: skinny
+    T = jax.lax.psum(T_part, axis_names)
+
+    if spec.is_stationary:
+        T = lt_op(T)
+
+        def inner(Q):
+            return -Q.T / f.K2e + lt_op(K1i @ l_op(Q) @ S)
+
+    else:
+
+        def inner(Q):
+            return Q.T / f.K2e + K1i @ Q @ S
+
+    eye = jnp.eye(n * n, dtype=dtype).reshape(n * n, n, n)
+    A = jax.vmap(inner)(eye).reshape(n * n, n * n).T
+    q = jnp.linalg.solve(A + jitter * jnp.eye(n * n, dtype=dtype), T.reshape(-1))
+    Q = q.reshape(n, n)
+
+    correction = (l_op(Q) if spec.is_stationary else Q) @ f.Xt
+    return K1i @ (G / f.lam - correction)
+
+
+def local_cross_grad_matvec(
+    spec: KernelSpec, Xq: Array, f: GramFactors, V: Array,
+    axis_names: Sequence[str],
+) -> Array:
+    """Posterior-mean gradient at D-sharded query rows Xq: (Nq, D_loc)."""
+    lam = f.lam
+    if spec.is_stationary:
+        r = local_pairwise_r(spec, Xq, f.Xt, lam, axis_names)
+        K1e, K2e = spec.k1e(r), spec.k2e(r)
+        m_part = (Xq * lam) @ V.T - jnp.sum((f.Xt * lam) * V, axis=-1)[None, :]
+        m = jax.lax.psum(m_part, axis_names)
+        Mt = K2e * m
+        W = K1e @ V + (Xq * jnp.sum(Mt, axis=1)[:, None] - Mt @ f.Xt)
+        return W * lam
+    Xqt = Xq if f.c is None else Xq - f.c
+    r = local_scaled_gram(Xqt, f.Xt, lam, axis_names)
+    K1e, K2e = spec.k1e(r), spec.k2e(r)
+    m = local_scaled_gram(Xqt, V, lam, axis_names)
+    W = K1e @ V + (K2e * m) @ f.Xt
+    return W * lam
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers over a full mesh (callers hold global arrays)
+# ---------------------------------------------------------------------------
+
+def _d_sharding(mesh: Mesh):
+    """Shard the last (D) axis over ALL mesh axes jointly."""
+    return P(None, tuple(mesh.axis_names))
+
+
+def sharded_gram_matvec(mesh: Mesh, spec: KernelSpec):
+    """Returns fn(f: GramFactors[global], V[global]) -> W[global]."""
+    names = tuple(mesh.axis_names)
+    dspec = _d_sharding(mesh)
+    lam_spec = P()  # scalar lam replicated; diagonal handled by caller
+
+    @partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(None, None), P(None, None), dspec, lam_spec, dspec),
+        out_specs=dspec,
+    )
+    def _run(K1e, K2e, Xt, lam, V):
+        f = GramFactors(K1e=K1e, K2e=K2e, Xt=Xt, lam=lam, noise=0.0, c=None)
+        return local_gram_matvec(f, V, stationary=spec.is_stationary,
+                                 axis_names=names)
+
+    def apply(f: GramFactors, V: Array) -> Array:
+        return _run(f.K1e, f.K2e, f.Xt, jnp.asarray(f.lam), V)
+
+    return apply
+
+
+def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
+    """Returns fn(X[global], G[global], lam, c) -> Z[global] (exact solve)."""
+    names = tuple(mesh.axis_names)
+    dspec = _d_sharding(mesh)
+
+    @partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(dspec, dspec, P()),
+        out_specs=dspec,
+    )
+    def _run_stationary(X, G, lam):
+        f = local_build_factors(spec, X, lam, names, noise=noise)
+        return local_woodbury_solve(spec, f, G, names)
+
+    @partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(dspec, dspec, P(), dspec),
+        out_specs=dspec,
+    )
+    def _run_dot(X, G, lam, c):
+        f = local_build_factors(spec, X, lam, names, c=c, noise=noise)
+        return local_woodbury_solve(spec, f, G, names)
+
+    def solve(X: Array, G: Array, lam=1.0, c: Array | None = None) -> Array:
+        lam = jnp.asarray(lam)
+        if spec.is_stationary:
+            return _run_stationary(X, G, lam)
+        if c is None:
+            c = jnp.zeros((1, X.shape[1]), X.dtype)
+        return _run_dot(X, G, lam, jnp.atleast_2d(c))
+
+    return solve

@@ -1,0 +1,139 @@
+"""Structured gradient-Gram-matrix factors (paper Sec. 2.2).
+
+Layout convention: data matrices are stored **(N, D)** — observations on the
+first (sublane) axis, dimension on the last (lane) axis. This is the
+TPU-friendly transpose of the paper's (D, N) notation; all formulas in this
+package have been re-derived for this layout (see DESIGN.md sec. 3).
+
+Lambda is restricted to scalar or diagonal (shape ``(D,)``) — the paper's own
+experiments use scalar Lambda; dense SPD Lambda would reintroduce O(D^2) work
+which is exactly what the method avoids at D ~ 1e9.
+
+The full DN x DN Gram matrix is *never* materialized outside of tests: it is
+fully described by ``GramFactors`` = (K1e, K2e, Xt, lam), i.e.
+O(N^2 + ND) storage instead of O((ND)^2) (paper Sec. 2.3, General
+Improvements).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .kernels import KernelSpec
+
+Array = jnp.ndarray
+
+
+def _lam_mul(lam: Array | float, V: Array) -> Array:
+    """Lambda @ v for scalar/diagonal Lambda, acting on the last axis."""
+    return V * lam
+
+
+def scaled_gram(A: Array, B: Array, lam: Array | float) -> Array:
+    """(N_a, N_b) matrix  A Lambda B^T  for (N, D)-layout inputs.
+
+    This is THE hot contraction of the whole method: every O(D) object only
+    ever appears inside this product. ``repro.kernels.skinny_gram`` is the
+    Pallas TPU kernel for it; this jnp form is the oracle and CPU path.
+    """
+    return _lam_mul(A, lam) @ B.T
+
+
+def pairwise_r(spec: KernelSpec, A: Array, B: Array, lam, c=None) -> Array:
+    """r(x_a, x_b) for all pairs; A: (Na, D), B: (Nb, D) -> (Na, Nb)."""
+    if spec.is_stationary:
+        g = scaled_gram(A, B, lam)
+        da = jnp.sum(_lam_mul(A, lam) * A, axis=-1)
+        db = jnp.sum(_lam_mul(B, lam) * B, axis=-1)
+        r = da[:, None] + db[None, :] - 2.0 * g
+        return jnp.maximum(r, 0.0)
+    At = A if c is None else A - c
+    Bt = B if c is None else B - c
+    return scaled_gram(At, Bt, lam)
+
+
+class GramFactors(NamedTuple):
+    """Everything needed to act with the DN x DN gradient Gram matrix.
+
+    K1e/K2e: (N, N) effective first/second kernel-derivative matrices.
+    Xt:      (N, D) centered inputs  (X - c for dot kernels, X for stationary).
+    lam:     scalar or (D,) diagonal of Lambda.
+    noise:   sigma^2 added to the Gram diagonal (scalar; exact paths require
+             scalar lam when noise > 0 so that it folds into K1e).
+    """
+
+    K1e: Array
+    K2e: Array
+    Xt: Array
+    lam: Array | float
+    noise: float = 0.0
+    c: Optional[Array] = None  # dot-kernel center; queries are centered with it
+
+    @property
+    def n(self) -> int:
+        return self.Xt.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.Xt.shape[1]
+
+
+def build_factors(
+    spec: KernelSpec,
+    X: Array,
+    lam: Array | float = 1.0,
+    c: Optional[Array] = None,
+    noise: float = 0.0,
+) -> GramFactors:
+    """Compute the O(N^2 + ND) factor set for observations at rows of X."""
+    r = pairwise_r(spec, X, X, lam, c=c)
+    K1e = spec.k1e(r)
+    K2e = spec.k2e(r)
+    Xt = X if (spec.is_stationary or c is None) else X - c
+    return GramFactors(K1e=K1e, K2e=K2e, Xt=Xt, lam=lam, noise=float(noise),
+                       c=None if spec.is_stationary else c)
+
+
+# --------------------------------------------------------------------------
+# Dense reference assembly — tests/benchmarks only (O((ND)^2) memory!).
+# --------------------------------------------------------------------------
+
+def dense_gram(spec: KernelSpec, X: Array, lam=1.0, c=None, noise: float = 0.0) -> Array:
+    """Explicit (N*D, N*D) gradient Gram matrix; index = a*D + i (Eq. 19)."""
+    n, d = X.shape
+    f = build_factors(spec, X, lam=lam, c=c)
+    lam_vec = jnp.broadcast_to(jnp.asarray(lam, X.dtype), (d,))
+    blocks = jnp.zeros((n, n, d, d), X.dtype)
+    base = jnp.diag(lam_vec)
+    if spec.is_stationary:
+        delta = _lam_mul(X[:, None, :] - X[None, :, :], lam)  # (n, n, d)
+        outer = delta[..., :, None] * delta[..., None, :]
+    else:
+        u = _lam_mul(f.Xt, lam)  # (n, d) = Lam x~
+        # block(a,b) = K1e ab * Lam + K2e ab * outer(Lam x~_b, Lam x~_a)
+        outer = u[None, :, :, None] * u[:, None, None, :]
+    blocks = f.K1e[:, :, None, None] * base[None, None] + f.K2e[:, :, None, None] * outer
+    full = blocks.transpose(0, 2, 1, 3).reshape(n * d, n * d)
+    if noise:
+        full = full + noise * jnp.eye(n * d, dtype=X.dtype)
+    return full
+
+
+def dense_cross_gram(spec: KernelSpec, Xq: Array, X: Array, lam=1.0, c=None) -> Array:
+    """Cross covariance cov(grad f(Xq), grad f(X)): (Nq*D, N*D)."""
+    nq, d = Xq.shape
+    n, _ = X.shape
+    r = pairwise_r(spec, Xq, X, lam, c=c)
+    K1e, K2e = spec.k1e(r), spec.k2e(r)
+    lam_vec = jnp.broadcast_to(jnp.asarray(lam, X.dtype), (d,))
+    base = jnp.diag(lam_vec)
+    if spec.is_stationary:
+        delta = _lam_mul(Xq[:, None, :] - X[None, :, :], lam)
+        outer = delta[..., :, None] * delta[..., None, :]
+    else:
+        uq = _lam_mul(Xq - (0.0 if c is None else c), lam)
+        ub = _lam_mul(X - (0.0 if c is None else c), lam)
+        outer = ub[None, :, :, None] * uq[:, None, None, :]
+    blocks = K1e[:, :, None, None] * base[None, None] + K2e[:, :, None, None] * outer
+    return blocks.transpose(0, 2, 1, 3).reshape(nq * d, n * d)

@@ -1,0 +1,126 @@
+"""Posterior inference from gradient observations (paper Sec. 4, App. D/E).
+
+Given Z solving (grad K grad') vec(Z) = vec(G - prior_grad):
+
+  * posterior mean gradient at x_q      — cross_grad_matvec (Eq. 26)
+  * posterior mean function at x_q      — cross_value_matvec (up to prior const)
+  * posterior mean Hessian at x_q       — Eq. 12 closed form, diag + rank-2N
+  * posterior optimum ("GP-X", Eq. 13)  — flipped inference x(g = 0)
+
+The Hessian closed forms below were re-derived from scratch for this repo's
+(N, D) layout and are validated against jax.hessian of the posterior mean
+function in tests/test_inference.py (which pins down every sign the paper is
+loose about).
+
+  dot:        Hbar = Lam [ Xt^T M Xt + Z^T Mh Xt + Xt^T Mh Z ] Lam
+              M  = diag(k3e(r_qb) * w_b),  w_b = x~_q^T Lam Z_b
+              Mh = diag(k2e(r_qb))                     (no trace term)
+  stationary: same structure with Xt -> (x_q - X), w -> m_b = (x_q-x_b)^T Lam Z_b,
+              coefficients (-8 k''' m_b), (-4 k''), plus Lam * sum_b(-4 k'' m_b).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .gram import GramFactors, scaled_gram, pairwise_r
+from .kernels import KernelSpec
+from .mvm import cross_grad_matvec, cross_value_matvec
+
+Array = jnp.ndarray
+
+
+def posterior_grad(spec: KernelSpec, xq: Array, f: GramFactors, Z: Array) -> Array:
+    """Posterior mean of grad f at query points xq: (Nq, D)."""
+    return cross_grad_matvec(spec, jnp.atleast_2d(xq), f, Z)
+
+
+def posterior_value(spec: KernelSpec, xq: Array, f: GramFactors, Z: Array) -> Array:
+    """Posterior mean of f at xq, up to the (unidentified) prior constant."""
+    return cross_value_matvec(spec, jnp.atleast_2d(xq), f, Z)
+
+
+class HessianOperator(NamedTuple):
+    """Posterior mean Hessian  H = lam*(c0) I + F diag(w) F^T-style low rank.
+
+    Materialized form:  H = diag(lam)*trace_coef + P W P^T  where
+    P = [Lam Xt^T, Lam Z^T]  (D, 2N)  and  W = [[M, Mh], [Mh, 0]]  (2N, 2N).
+    Stored factored so it can be applied or inverted in O(ND + N^3)
+    (Woodbury again — paper Sec. 4.1.1 "cost similar to quasi-Newton").
+    """
+
+    P: Array          # (D, 2N)
+    W: Array          # (2N, 2N)
+    diag: Array       # (D,)  or scalar broadcast; the Lam*trace term
+
+    @property
+    def d(self) -> int:
+        return self.P.shape[0]
+
+    def matvec(self, v: Array) -> Array:
+        return self.diag * v + self.P @ (self.W @ (self.P.T @ v))
+
+    def dense(self) -> Array:
+        return jnp.diag(jnp.broadcast_to(self.diag, (self.d,))) + self.P @ self.W @ self.P.T
+
+    def solve(self, rhs: Array, jitter: float = 1e-8, diag_floor: float = 1e-8) -> Array:
+        """(H)^{-1} rhs via Woodbury on the diag + low-rank structure."""
+        d0 = jnp.broadcast_to(self.diag, (self.d,))
+        # keep the base invertible; sign-indefinite W handled by dense inner solve
+        d0 = jnp.where(jnp.abs(d0) < diag_floor, diag_floor, d0)
+        Pd = self.P / d0[:, None]                      # D x 2N
+        k = self.W.shape[0]
+        inner = jnp.linalg.inv(self.W + jitter * jnp.eye(k, dtype=rhs.dtype)) + self.P.T @ Pd
+        y = jnp.linalg.solve(inner + jitter * jnp.eye(k, dtype=rhs.dtype), Pd.T @ rhs)
+        return rhs / d0 - Pd @ y
+
+
+def posterior_hessian(spec: KernelSpec, xq: Array, f: GramFactors, Z: Array) -> HessianOperator:
+    """Posterior mean Hessian at a single query point xq: (D,) (paper Eq. 12)."""
+    xq = jnp.asarray(xq)
+    lam = f.lam
+    n, d = f.Xt.shape
+    lam_vec = jnp.broadcast_to(jnp.asarray(lam, xq.dtype), (d,))
+
+    if spec.is_stationary:
+        Xt = xq[None, :] - f.Xt                       # (N, D), x_q - x_b
+        r = jnp.maximum(jnp.sum((Xt * lam) * Xt, axis=-1), 0.0)
+        m = jnp.sum((Xt * lam) * Z, axis=-1)          # (N,)
+        k2, k3 = spec.k2(r), spec.k3(r)
+        M = jnp.diag(-8.0 * k3 * m)
+        Mh = jnp.diag(-4.0 * k2)
+        diag = lam_vec * jnp.sum(-4.0 * k2 * m)
+    else:
+        xqt = xq if f.c is None else xq - f.c
+        Xt = f.Xt                                     # x~_b (already centered)
+        r = jnp.sum((Xt * lam) * xqt[None, :], axis=-1)       # r_qb
+        w = jnp.sum(xqt[None, :] * lam * Z, axis=-1)          # x~_q^T Lam Z_b
+        k2, k3 = spec.k2(r), spec.k3(r)
+        M = jnp.diag(k3 * w)
+        Mh = jnp.diag(k2)
+        diag = jnp.zeros((d,), xq.dtype)
+
+    P = jnp.concatenate([(Xt * lam).T, (Z * lam).T], axis=1)  # (D, 2N)
+    W = jnp.block([[M, Mh], [Mh, jnp.zeros((n, n), M.dtype)]])
+    return HessianOperator(P=P, W=W, diag=diag)
+
+
+def infer_optimum(
+    spec: KernelSpec,
+    f_g: GramFactors,
+    Z: Array,
+    x_t: Array,
+    g_query: Array | None = None,
+) -> Array:
+    """GP-X: flipped inference of the input where the gradient is g_query=0.
+
+    Paper Sec. 4.1.2 / Eq. 13: condition a gradient-GP whose *inputs* are the
+    observed gradients G (factors f_g built on G!) and whose *observations*
+    are the displacements X - x_t; then read off the posterior mean at
+    g = g_query (default 0). Z solves the flipped Gram system.
+    """
+    d = f_g.Xt.shape[1]
+    gq = jnp.zeros((1, d), Z.dtype) if g_query is None else jnp.atleast_2d(g_query)
+    step = cross_grad_matvec(spec, gq, f_g, Z)[0]
+    return x_t + step

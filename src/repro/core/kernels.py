@@ -1,0 +1,226 @@
+"""Kernel zoo: scalar kernels k(r) with derivatives w.r.t. the scalar r.
+
+Every kernel is expressed through a scalar intermediate r(x_a, x_b)
+(paper Def. 2):
+
+  dot-product kernels:  r = (x_a - c)^T Lambda (x_b - c)
+  stationary kernels:   r = (x_a - x_b)^T Lambda (x_a - x_b)
+
+The gradient Gram matrix blocks only need k'(r), k''(r) (paper Eq. 2);
+Hessian inference additionally needs k'''(r) (paper Eq. 11).
+
+``effective'' coefficients absorb the chain-rule factors of r so that for
+BOTH families the (a,b) block of the gradient Gram matrix reads
+
+    block_ab = K1e[a,b] * Lambda + K2e[a,b] * outer(u_ab, w_ab)
+
+  dot:        K1e = k'(r),    K2e = k''(r),    u_ab = Lam x~_b, w_ab = Lam x~_a
+  stationary: K1e = -2 k'(r), K2e = -4 k''(r), u_ab = w_ab = Lam (x_a - x_b)
+
+(derivation: paper Eq. 3/4, App. B.2/B.3).  Third-derivative effective
+coefficient K3e is k''' (dot) and -8 k''' (stationary); see
+``core/inference.py`` for where the signs enter Hessian inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# Guard for kernels whose r-derivatives are singular at r=0 (Matern family).
+# The singular factors are always multiplied by powers of ||x_a-x_b|| that
+# vanish at least as fast, so clamping r is exact in the limit and keeps the
+# decomposition finite (see DESIGN.md section 9).
+_R_EPS = 1e-12
+
+
+def _safe_sqrt(r: Array) -> Array:
+    return jnp.sqrt(jnp.maximum(r, _R_EPS))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A scalar kernel k(r) and its first three derivatives in r."""
+
+    name: str
+    family: str  # 'dot' | 'stationary'
+    k0: Callable[[Array], Array]
+    k1: Callable[[Array], Array]
+    k2: Callable[[Array], Array]
+    k3: Callable[[Array], Array]
+    # True if gradient GP is mathematically well defined (k once
+    # differentiable as a covariance, i.e. k' finite at r=0 for stationary).
+    grad_ok: bool = True
+
+    @property
+    def is_stationary(self) -> bool:
+        return self.family == "stationary"
+
+    # -- effective coefficients used by gram/mvm/woodbury/inference --------
+    def k1e(self, r: Array) -> Array:
+        v = self.k1(r)
+        return -2.0 * v if self.is_stationary else v
+
+    def k2e(self, r: Array) -> Array:
+        v = self.k2(r)
+        return -4.0 * v if self.is_stationary else v
+
+    def k3e(self, r: Array) -> Array:
+        v = self.k3(r)
+        return -8.0 * v if self.is_stationary else v
+
+
+# --------------------------------------------------------------------------
+# Stationary kernels (paper Table 2).  r is the SQUARED scaled distance.
+# --------------------------------------------------------------------------
+
+def _rbf() -> KernelSpec:
+    k0 = lambda r: jnp.exp(-0.5 * r)
+    return KernelSpec(
+        "rbf", "stationary",
+        k0=k0,
+        k1=lambda r: -0.5 * k0(r),
+        k2=lambda r: 0.25 * k0(r),
+        k3=lambda r: -0.125 * k0(r),
+    )
+
+
+def _matern12() -> KernelSpec:
+    # k = exp(-sqrt(r)); k' singular at 0 -> gradient GP ill-defined.
+    k0 = lambda r: jnp.exp(-_safe_sqrt(r))
+    return KernelSpec(
+        "matern12", "stationary",
+        k0=k0,
+        k1=lambda r: -k0(r) / (2.0 * _safe_sqrt(r)),
+        k2=lambda r: (_safe_sqrt(r) + 1.0) / (4.0 * _safe_sqrt(r) ** 3) * k0(r),
+        k3=lambda r: -(3.0 + 3.0 * _safe_sqrt(r) + r)
+        / (8.0 * _safe_sqrt(r) ** 5) * k0(r),
+        grad_ok=False,
+    )
+
+
+def _matern32() -> KernelSpec:
+    # k = (1+s) e^{-s}, s = sqrt(3 r).  Stable closed forms:
+    #   k'  = -(3/2) e^{-s}                      (finite at r=0)
+    #   k'' = (3 sqrt(3) / (4 sqrt(r))) e^{-s}    (singular; clamped)
+    def k0(r):
+        s = jnp.sqrt(3.0 * jnp.maximum(r, 0.0))
+        return (1.0 + s) * jnp.exp(-s)
+
+    def k1(r):
+        s = jnp.sqrt(3.0 * jnp.maximum(r, 0.0))
+        return -1.5 * jnp.exp(-s)
+
+    def k2(r):
+        sr = _safe_sqrt(r)
+        return (3.0 * jnp.sqrt(3.0) / (4.0 * sr)) * jnp.exp(-jnp.sqrt(3.0) * sr)
+
+    def k3(r):
+        sr = _safe_sqrt(r)
+        s = jnp.sqrt(3.0) * sr
+        # d/dr k2 = k2 * (-1/(2r) - sqrt(3)/(2 sqrt(r)))
+        return k2(r) * (-0.5 / jnp.maximum(r, _R_EPS) - jnp.sqrt(3.0) / (2.0 * sr))
+
+    return KernelSpec("matern32", "stationary", k0, k1, k2, k3)
+
+
+def _matern52() -> KernelSpec:
+    # k = (1 + s + s^2/3) e^{-s}, s = sqrt(5 r).  Stable closed forms:
+    #   k'   = -(5/6)(1+s) e^{-s}
+    #   k''  = (25/12) e^{-s}          (finite!  Matern-5/2 is C^2)
+    #   k''' = -(125/24) e^{-s} / s    (singular; clamped)
+    def k0(r):
+        s = jnp.sqrt(5.0 * jnp.maximum(r, 0.0))
+        return (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+
+    def k1(r):
+        s = jnp.sqrt(5.0 * jnp.maximum(r, 0.0))
+        return -(5.0 / 6.0) * (1.0 + s) * jnp.exp(-s)
+
+    def k2(r):
+        s = jnp.sqrt(5.0 * jnp.maximum(r, 0.0))
+        return (25.0 / 12.0) * jnp.exp(-s)
+
+    def k3(r):
+        s = jnp.sqrt(5.0 * jnp.maximum(r, _R_EPS))
+        return -(125.0 / 24.0) * jnp.exp(-s) / s
+
+    return KernelSpec("matern52", "stationary", k0, k1, k2, k3)
+
+
+def _rational_quadratic(alpha: float = 2.0) -> KernelSpec:
+    a = float(alpha)
+
+    def base(r, p):
+        return (1.0 + r / (2.0 * a)) ** (-a - p)
+
+    return KernelSpec(
+        f"rq{a:g}", "stationary",
+        k0=lambda r: base(r, 0.0),
+        k1=lambda r: -0.5 * base(r, 1.0),
+        k2=lambda r: (a + 1.0) / (4.0 * a) * base(r, 2.0),
+        k3=lambda r: -(a + 1.0) * (a + 2.0) / (8.0 * a * a) * base(r, 3.0),
+    )
+
+
+# --------------------------------------------------------------------------
+# Dot-product kernels (paper Table 1).  r is the centered scaled dot product.
+# --------------------------------------------------------------------------
+
+def _poly2() -> KernelSpec:
+    return KernelSpec(
+        "poly2", "dot",
+        k0=lambda r: 0.5 * r * r,
+        k1=lambda r: r,
+        k2=lambda r: jnp.ones_like(r),
+        k3=lambda r: jnp.zeros_like(r),
+    )
+
+
+def _poly(p: int) -> KernelSpec:
+    p = int(p)
+    if p < 2:
+        raise ValueError("polynomial kernel needs p >= 2 for gradient GPs")
+
+    return KernelSpec(
+        f"poly{p}", "dot",
+        k0=lambda r: r**p / (p * (p - 1)),
+        k1=lambda r: r ** (p - 1) / (p - 1),
+        k2=lambda r: r ** (p - 2),
+        k3=lambda r: (p - 2) * r ** (p - 3) if p >= 3 else jnp.zeros_like(r),
+    )
+
+
+def _exp_dot() -> KernelSpec:
+    e = lambda r: jnp.exp(r)
+    return KernelSpec("expdot", "dot", e, e, e, e)
+
+
+_REGISTRY: dict[str, Callable[[], KernelSpec]] = {
+    "rbf": _rbf,
+    "matern12": _matern12,
+    "matern32": _matern32,
+    "matern52": _matern52,
+    "rq": _rational_quadratic,
+    "poly2": _poly2,
+    "poly3": lambda: _poly(3),
+    "poly4": lambda: _poly(4),
+    "expdot": _exp_dot,
+}
+
+
+def get_kernel(name: str, **kwargs) -> KernelSpec:
+    """Look up a kernel by name. ``rq`` takes ``alpha``; ``poly<p>`` is fixed."""
+    if name == "rq":
+        return _rational_quadratic(**kwargs)
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
+
+
+def kernel_names() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,112 @@
+"""Matrix-free products with the gradient Gram matrix (paper Alg. 2 / Eq. 9).
+
+All D-sized objects are (N, D); the Gram matrix acts on vec(V) with
+vec(V)[a*D + i] = V[a, i].  Cost per product: O(N^2 D); storage O(ND + N^2).
+
+Derivations (this layout; see DESIGN.md):
+
+  dot:         W = (K1e @ V + (K2e * M) @ Xt) * lam,      M = (Xt*lam) @ V^T
+  stationary:  W = (K1e @ V + (diag(rowsum(Mt)) - Mt) @ X) * lam,
+               Mt = K2e * (P - diag(P)[None, :]),         P = (X*lam) @ V^T
+
+The stationary form is paper Alg. 2 with the sparse L operator folded in:
+  L (Q)  = diag(rowsum(Q)) - Q
+  L^T(M) = diag(M)[:, None] - M          (both O(N^2)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .gram import GramFactors, scaled_gram, pairwise_r
+from .kernels import KernelSpec
+
+Array = jnp.ndarray
+
+
+def l_op(Q: Array) -> Array:
+    """L(Q) = diag(rowsum(Q)) - Q  (paper App. A, stationary-kernel U = (I x Lam X) L)."""
+    return jnp.diag(jnp.sum(Q, axis=1)) - Q
+
+
+def lt_op(M: Array) -> Array:
+    """L^T(M)[a,b] = M[a,a] - M[a,b]."""
+    return jnp.diagonal(M)[:, None] - M
+
+
+def gram_matvec(f: GramFactors, V: Array, *, stationary: bool, gram_xv: Array | None = None) -> Array:
+    """(grad K grad') vec(V) without materializing the Gram matrix.
+
+    f.Xt is X-c for dot kernels and X for stationary ones.  ``gram_xv`` lets a
+    caller (e.g. the distributed psum path or a Pallas kernel) supply the
+    precomputed (N, N) contraction (Xt*lam) @ V^T.
+    """
+    M = scaled_gram(f.Xt, V, f.lam) if gram_xv is None else gram_xv
+    if stationary:
+        Mt = f.K2e * (M - jnp.diagonal(M)[None, :])
+        small = jnp.diag(jnp.sum(Mt, axis=1)) - Mt
+    else:
+        small = f.K2e * M
+    W = (f.K1e @ V + small @ f.Xt) * f.lam
+    if f.noise:
+        W = W + f.noise * V
+    return W
+
+
+def cross_grad_matvec(
+    spec: KernelSpec,
+    Xq: Array,
+    f: GramFactors,
+    V: Array,
+    lam=None,
+) -> Array:
+    """Posterior-mean style contraction: sum_b block(q, b) @ V[b].
+
+    Xq: (Nq, D) query points; returns (Nq, D).  With V = Z (the Gram solve of
+    the observed gradients) this IS the posterior mean of grad f at Xq
+    (paper Eq. 26 / App. D).
+    """
+    lam = f.lam if lam is None else lam
+    if spec.is_stationary:
+        r = pairwise_r(spec, Xq, f.Xt, lam)
+        K1e, K2e = spec.k1e(r), spec.k2e(r)
+        # m[q, b] = (x_q - x_b)^T Lam V[b]
+        m = scaled_gram(Xq, V, lam) - jnp.sum((f.Xt * lam) * V, axis=-1)[None, :]
+        Mt = K2e * m
+        W = K1e @ V + (Xq * jnp.sum(Mt, axis=1)[:, None] - Mt @ f.Xt)
+        return W * lam
+    Xqt = Xq if f.c is None else Xq - f.c
+    r = scaled_gram(Xqt, f.Xt, lam)
+    K1e, K2e = spec.k1e(r), spec.k2e(r)
+    # block(q,b)^{ij} = K1e Lam^{ij} + K2e [Lam x~_b]^i [Lam x~_q]^j
+    # row q: sum_b K1e[q,b] Lam V[b] + sum_b K2e[q,b] (Lam x~_b) (x~_q . Lam V[b])
+    m = scaled_gram(Xqt, V, lam)  # m[q,b] = x~_q^T Lam V[b]
+    W = K1e @ V + (K2e * m) @ f.Xt
+    return W * lam
+
+
+def cross_value_matvec(
+    spec: KernelSpec,
+    Xq: Array,
+    f: GramFactors,
+    V: Array,
+) -> Array:
+    """cov(f(Xq), grad f(X)) contracted with V: (Nq,).
+
+    cov(f(x_q), g_b)^j = d k(x_q, x_b) / d x_b^j = k'(r) * dr/dx_b.
+      dot:        dr/dx_b = Lam x~_q
+      stationary: dr/dx_b = -2 Lam (x_q - x_b)
+    Used for posterior mean of the *function* from gradient observations
+    (paper Fig. 4) — defined up to an additive constant (the prior mean).
+    """
+    lam = f.lam
+    if spec.is_stationary:
+        r = pairwise_r(spec, Xq, f.Xt, lam)
+        k1 = spec.k1(r)
+        # sum_b k1[q,b] * (-2) * (x_q - x_b)^T Lam V[b]
+        m = scaled_gram(Xq, V, lam) - jnp.sum((f.Xt * lam) * V, axis=-1)[None, :]
+        return jnp.sum(-2.0 * k1 * m, axis=1)
+    Xqt = Xq if f.c is None else Xq - f.c
+    r = scaled_gram(Xqt, f.Xt, lam)
+    k1 = spec.k1(r)
+    m = scaled_gram(Xqt, V, lam)
+    return jnp.sum(k1 * m, axis=1)

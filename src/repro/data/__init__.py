@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, batch_for_step, batch_shard_for_step
+
+__all__ = ["DataConfig", "batch_for_step", "batch_shard_for_step"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the paper's compute hot spots (see DESIGN.md §3).
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
+padded, jit'd public entry points. Validated in interpret mode on CPU and
+shaped for TPU v5e VMEM/MXU on the real target.
+"""
+from .ops import (
+    fused_gram_norms,
+    fused_gram_norms_ref,
+    gram_update,
+    gram_update_ref,
+    skinny_gram,
+    skinny_gram_ref,
+)
+
+__all__ = [
+    "fused_gram_norms", "fused_gram_norms_ref", "gram_update",
+    "gram_update_ref", "skinny_gram", "skinny_gram_ref",
+]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused Gram-MVM second sweep  W = (K1 @ V + M @ X) * lam.
+
+This is the D-streaming half of paper Alg. 2 (the (N,N) Hadamard/L-operator
+algebra happens outside — it is O(N^2) and irrelevant). Fusing the two small
+matmuls and the Lambda scaling into one pass halves HBM traffic vs. the
+naive two-pass form (read V, read X, write W — no intermediates), which is
+what matters for a memory-bound op.
+
+Grid over D-blocks; every block does two (N,N)x(N,block_d) MXU matmuls.
+Padding contract as in skinny_gram; K1/M are (N, N) and live in VMEM whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _kernel(k1_ref, m_ref, v_ref, x_ref, lam_ref, o_ref):
+    k1 = k1_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.dot(k1, v, preferred_element_type=jnp.float32)
+    acc += jnp.dot(m, x, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * lam_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram_update_padded(
+    K1: Array, M: Array, V: Array, X: Array, lam: Array,
+    *, block_d: int = 1024, interpret: bool = False,
+) -> Array:
+    """W = (K1 @ V + M @ X) * lam with V, X: (N, D) streamed over D-blocks."""
+    n, d = V.shape
+    assert X.shape == (n, d) and K1.shape == (n, n) and M.shape == (n, n)
+    assert d % block_d == 0, (d, block_d)
+    lam2 = jnp.broadcast_to(lam, (d,)).reshape(1, d)
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), V.dtype),
+        interpret=interpret,
+    )(K1, M, V, X, lam2)

@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles the padding contract (N to sublane multiples, D to block multiples,
+zero-padded lam so padding cancels exactly), backend dispatch (interpret
+mode on CPU — executes the kernel bodies in Python for validation), and
+fallback to the jnp reference for tiny shapes where kernel launch overhead
+dominates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fused_gram_norms import fused_gram_norms_padded
+from .gram_update import gram_update_padded
+from .skinny_gram import skinny_gram_padded
+
+Array = jnp.ndarray
+
+_SUBLANE = 8
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(A: Array, to: int) -> Array:
+    n = A.shape[0]
+    return A if n == to else jnp.pad(A, ((0, to - n), (0, 0)))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block_d(d: int, block_d: int) -> int:
+    # shrink the block for small D so padding stays bounded
+    while block_d > 128 and d <= block_d // 2:
+        block_d //= 2
+    return block_d
+
+
+def skinny_gram(A: Array, B: Array, lam, *, block_d: int = 1024,
+                interpret: bool | None = None) -> Array:
+    """P = (A * lam) @ B^T, f32 accumulation; A: (Na, D), B: (Nb, D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    na, d = A.shape
+    nb = B.shape[0]
+    block_d = _pick_block_d(d, block_d)
+    dp = _round_up(d, block_d)
+    nap, nbp = _round_up(na, _SUBLANE), _round_up(nb, _SUBLANE)
+    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
+    lam_p = jnp.pad(lam_f, (0, dp - d))
+    Ap = _pad_rows(jnp.pad(A, ((0, 0), (0, dp - d))), nap)
+    Bp = _pad_rows(jnp.pad(B, ((0, 0), (0, dp - d))), nbp)
+    P = skinny_gram_padded(Ap, Bp, lam_p, block_d=block_d, interpret=interpret)
+    return P[:na, :nb]
+
+
+def gram_update(K1: Array, M: Array, V: Array, X: Array, lam, *,
+                block_d: int = 1024, interpret: bool | None = None) -> Array:
+    """W = (K1 @ V + M @ X) * lam; V, X: (N, D) streamed."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = V.shape
+    block_d = _pick_block_d(d, block_d)
+    dp = _round_up(d, block_d)
+    np_ = _round_up(n, _SUBLANE)
+    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
+    lam_p = jnp.pad(lam_f, (0, dp - d))
+    Vp = _pad_rows(jnp.pad(V, ((0, 0), (0, dp - d))), np_)
+    Xp = _pad_rows(jnp.pad(X, ((0, 0), (0, dp - d))), np_)
+    K1p = jnp.pad(K1, ((0, np_ - n), (0, np_ - n)))
+    Mp = jnp.pad(M, ((0, np_ - n), (0, np_ - n)))
+    W = gram_update_padded(K1p, Mp, Vp, Xp, lam_p, block_d=block_d,
+                           interpret=interpret)
+    return W[:n, :d]
+
+
+def fused_gram_norms(A: Array, B: Array, lam, *, block_d: int = 1024,
+                     interpret: bool | None = None):
+    """(P, norms_A, norms_B) in one pass; used for stationary pairwise r."""
+    interpret = _interpret_default() if interpret is None else interpret
+    na, d = A.shape
+    nb = B.shape[0]
+    block_d = _pick_block_d(d, block_d)
+    dp = _round_up(d, block_d)
+    nap, nbp = _round_up(na, _SUBLANE), _round_up(nb, _SUBLANE)
+    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
+    lam_p = jnp.pad(lam_f, (0, dp - d))
+    Ap = _pad_rows(jnp.pad(A, ((0, 0), (0, dp - d))), nap)
+    Bp = _pad_rows(jnp.pad(B, ((0, 0), (0, dp - d))), nbp)
+    P, na_o, nb_o = fused_gram_norms_padded(Ap, Bp, lam_p, block_d=block_d,
+                                            interpret=interpret)
+    return P[:na, :nb], na_o[:na, 0], nb_o[:nb, 0]
+
+
+# jnp references re-exported for benchmarking parity
+skinny_gram_ref = ref.skinny_gram_ref
+gram_update_ref = ref.gram_update_ref
+fused_gram_norms_ref = ref.fused_gram_norms_ref

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def skinny_gram_ref(A: Array, B: Array, lam) -> Array:
+    """P = (A * lam) @ B^T in f32 accumulation."""
+    a = A.astype(jnp.float32) * jnp.asarray(lam, jnp.float32)
+    return a @ B.astype(jnp.float32).T
+
+
+def gram_update_ref(K1: Array, M: Array, V: Array, X: Array, lam) -> Array:
+    """W = (K1 @ V + M @ X) * lam, result in V.dtype."""
+    acc = K1.astype(jnp.float32) @ V.astype(jnp.float32)
+    acc = acc + M.astype(jnp.float32) @ X.astype(jnp.float32)
+    return (acc * jnp.asarray(lam, jnp.float32)).astype(V.dtype)
+
+
+def fused_gram_norms_ref(A: Array, B: Array, lam):
+    lamv = jnp.asarray(lam, jnp.float32)
+    a = A.astype(jnp.float32)
+    b = B.astype(jnp.float32)
+    P = (a * lamv) @ b.T
+    na = jnp.sum(a * lamv * a, axis=1, keepdims=True)
+    nb = jnp.sum(b * lamv * b, axis=1, keepdims=True)
+    return P, na, nb

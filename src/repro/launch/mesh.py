@@ -1,0 +1,23 @@
+"""Production mesh construction (assignment contract).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before the first jax call and only then
+asks for the mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (8 fake host devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,69 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Prefills a batch of prompts (half the shape's seq_len) and greedily
+decodes into the remaining cache space with the KV-cache / SSM-state
+serve step. On this CPU container use --smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import SHAPES, build_model, make_concrete_batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tokens", type=int, default=12)
+    ap.add_argument("--shape", default="smoke_prefill")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ss = SHAPES[args.shape]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    full = make_concrete_batch(cfg, args.shape)
+    prompt_len = ss.seq_len // 2
+    max_len = ss.seq_len
+
+    def crop(k, v):
+        if k == "tokens":
+            return v[:, :prompt_len]
+        if k == "positions":
+            return v[..., :prompt_len]
+        return v
+
+    prompt = {k: crop(k, v) for k, v in full.items()}
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+    decode = jax.jit(model.decode)
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompt)
+    print(f"prefill: {prompt['tokens'].shape} in {time.time() - t0:.2f}s")
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    n_tok = min(args.tokens, max_len - prompt_len - 1)
+    for i in range(n_tok):
+        pos = jnp.full((ss.global_batch,), prompt_len + i, jnp.int32)
+        logits, cache = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    toks = jnp.stack(out, axis=1)
+    print(f"decoded {n_tok} tokens/seq in {dt:.2f}s "
+          f"({n_tok * ss.global_batch / max(dt, 1e-9):.1f} tok/s)")
+    print("sample:", toks[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

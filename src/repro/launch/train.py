@@ -1,0 +1,87 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the available devices (CPU smoke / TPU pod alike):
+builds the mesh that fits the device count, shards params/opt-state/batch
+per the production rules, wraps the loop in run_with_recovery
+(checkpoint/restart + optional failure injection drill), and logs loss.
+
+On this CPU container use --smoke for the reduced configs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_optimizer_name
+from repro.data import DataConfig, batch_for_step
+from repro.launch.mesh import make_test_mesh
+from repro.models import SHAPES
+from repro.optim import get_optimizer
+from repro.runtime import FailureInjector, RecoveryConfig, run_with_recovery
+from repro.train import build_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--shape", default="smoke_train")
+    ap.add_argument("--optimizer", default="")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", default="",
+                    help="comma-separated steps for a failure drill")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    n_dev = len(jax.devices())
+    if n_dev >= 8:
+        mesh = make_test_mesh((2, n_dev // 2), ("data", "model"))
+    else:
+        mesh = make_test_mesh((1, n_dev), ("data", "model"))
+    opt_name = args.optimizer or get_optimizer_name(args.arch)
+    opt = get_optimizer(opt_name, lr=args.lr)
+    bundle = build_train_step(cfg, opt, mesh, shape=args.shape,
+                              microbatches=args.microbatches, donate=False)
+
+    ss = SHAPES[args.shape]
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=ss.seq_len,
+                    global_batch=ss.global_batch, seed=args.seed)
+    params = jax.device_put(bundle.model.init(jax.random.PRNGKey(args.seed)),
+                            bundle.in_shardings[0])
+    opt_state = jax.device_put(bundle.opt.init(params),
+                               bundle.in_shardings[1])
+
+    t0 = time.time()
+
+    def on_metrics(step, metrics):
+        if step % 5 == 0 or step == 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    injector = None
+    if args.fail_at:
+        injector = FailureInjector(
+            fail_at=tuple(int(s) for s in args.fail_at.split(",")))
+
+    params, opt_state, stats = run_with_recovery(
+        bundle.step, lambda step: batch_for_step(dc, step), params, opt_state,
+        n_steps=args.steps,
+        config=RecoveryConfig(ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every),
+        injector=injector,
+        shardings=(bundle.in_shardings[0], bundle.in_shardings[1]),
+        on_metrics=on_metrics)
+    print(f"done: {args.steps} steps, stats={stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .solvers import (cg_solve, hessian_probabilistic_solver,
+                      solution_probabilistic_solver, make_test_matrix)
+
+__all__ = ["cg_solve", "hessian_probabilistic_solver",
+           "solution_probabilistic_solver", "make_test_matrix"]

@@ -1,0 +1,157 @@
+"""Probabilistic linear solvers (paper Sec. 4.2 / 5.1, Fig. 2 reproduction).
+
+Quadratic objective f(x) = 1/2 (x-x*)^T A (x-x*); minimizing == solving
+A x = b. Three solvers, all using the optimal quadratic step length
+alpha = -d^T g / d^T A d (as the paper's probabilistic methods do):
+
+  * cg_solve                       — the gold-standard baseline
+  * solution_probabilistic_solver  — GP-X flipped inference, poly2 kernel
+      with c = g_m and prior mean x_m; closed-form Eq. 29 / App. E.2.
+      Cost per iteration O(N^2 D + N^3).
+  * hessian_probabilistic_solver   — GP-H with fixed c = 0 and prior
+      gradient mean g_c = -b (App. F.1); the O(N^2 D + N^3) special case
+      of Sec. 4.2 via poly2_quadratic_solve. The paper notes this variant
+      "compromises the performance" vs GP-X — reproduced as-is.
+
+All keep the FULL observation history (paper: "retained all the
+observations to operate similarly to other probabilistic linear algebra
+routines").
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_factors, get_kernel, poly2_quadratic_solve, posterior_hessian
+
+Array = jnp.ndarray
+
+
+class SolveTrace(NamedTuple):
+    x: Array
+    relres: np.ndarray      # ||A x_t - b|| / ||A x_0 - b|| per iteration
+    iters: int
+
+
+def make_test_matrix(d: int, *, lam_min: float = 0.5, lam_max: float = 100.0,
+                     rho: float = 0.6, seed: int = 0) -> Array:
+    """App. F.1 spectrum: ~15 eigenvalues in [1, 100], rest near 0.5,
+    condition number 200.
+
+    NOTE: the paper's literal formula
+    lam_i = lam_min + (lam_max-lam_min)/(N-1) * rho^{N-i} * (N-i)
+    peaks at ~2.34 (max of x*rho^x is 0.72/(N-1)-scaled), contradicting its
+    own stated lam_max = 100 / kappa = 200. We therefore normalize the
+    shape term to hit lam_max exactly — this reproduces every property the
+    paper states (~15 large eigenvalues, kappa = 200, CG converging in
+    "slightly more than 15 iterations").
+    """
+    i = np.arange(1, d + 1, dtype=np.float64)
+    shape = rho ** (d - i) * (d - i)
+    shape[-1] = 0.0
+    lam = lam_min + (lam_max - lam_min) * shape / shape.max()
+    rng = np.random.RandomState(seed)
+    Q, _ = np.linalg.qr(rng.randn(d, d))
+    return jnp.asarray(Q @ np.diag(lam) @ Q.T)
+
+
+def _run(step_dir: Callable, A: Array, b: Array, x0: Array, tol: float,
+         max_iters: int) -> SolveTrace:
+    """Shared loop: direction from `step_dir`, exact quadratic line search."""
+    x = jnp.asarray(x0, jnp.float64)
+    g = A @ x - b
+    g0 = float(jnp.linalg.norm(g))
+    hist_x, hist_g = [x], [g]
+    rel = [1.0]
+    for it in range(max_iters):
+        if rel[-1] <= tol:
+            break
+        if it == 0:
+            d = -g                      # Alg. 1 bootstrap: d_0 = -g(x_0)
+        else:
+            d = step_dir(jnp.stack(hist_x), jnp.stack(hist_g), x, g)
+        if float(jnp.vdot(d, g)) > 0:
+            d = -d
+        dAd = float(d @ (A @ d))
+        if not np.isfinite(dAd) or abs(dAd) < 1e-300:
+            break
+        alpha = float(-(d @ g) / dAd)
+        x = x + alpha * d
+        g = A @ x - b
+        hist_x.append(x)
+        hist_g.append(g)
+        rel.append(float(jnp.linalg.norm(g)) / g0)
+    return SolveTrace(x=x, relres=np.array(rel), iters=len(rel) - 1)
+
+
+def cg_solve(A: Array, b: Array, x0: Array, *, tol: float = 1e-5,
+             max_iters: int = 200) -> SolveTrace:
+    x = jnp.asarray(x0, jnp.float64)
+    r = b - A @ x
+    p = r
+    g0 = float(jnp.linalg.norm(r))
+    rel = [1.0]
+    rs = float(r @ r)
+    for it in range(max_iters):
+        if rel[-1] <= tol:
+            break
+        Ap = A @ p
+        alpha = rs / float(p @ Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = float(r @ r)
+        rel.append(float(np.sqrt(rs_new)) / g0)
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    return SolveTrace(x=x, relres=np.array(rel), iters=len(rel) - 1)
+
+
+def solution_probabilistic_solver(
+    A: Array, b: Array, x0: Array, *, lam: float = 1.0, tol: float = 1e-5,
+    max_iters: int = 200, jitter: float = 1e-12,
+) -> SolveTrace:
+    """GP-X / Eq. 29: poly2 kernel on gradients, c = g_m, prior mean x_m."""
+
+    def direction(X, G, x_m, g_m):
+        Xt = X - x_m                      # (N, D) rows
+        Gt = G - g_m
+        S = (Gt * lam) @ Gt.T             # G~^T Lam G~ in paper layout
+        n = S.shape[0]
+        Sj = S + jitter * jnp.trace(S) / max(n, 1) * jnp.eye(n, dtype=S.dtype) \
+            + 1e-300 * jnp.eye(n, dtype=S.dtype)
+        v = -g_m                          # query gradient g_a = 0
+        u = (Gt * lam) @ v
+        a = jnp.linalg.solve(Sj, u)
+        term1 = Xt.T @ a
+        bb = Xt @ v - (Gt @ Xt.T) @ a
+        term2 = lam * (Gt.T @ jnp.linalg.solve(Sj, bb))
+        return term1 + term2              # = x_hat - x_m
+
+    return _run(direction, A, b, x0, tol, max_iters)
+
+
+def hessian_probabilistic_solver(
+    A: Array, b: Array, x0: Array, *, lam: float = 1.0, tol: float = 1e-5,
+    max_iters: int = 200, jitter: float = 1e-10,
+) -> SolveTrace:
+    """GP-H / Sec. 4.2: poly2, fixed c = 0, prior grad mean g_c = -b."""
+    spec = get_kernel("poly2")
+    d_dim = x0.shape[0]
+    c = jnp.zeros((d_dim,), jnp.float64)
+    g_c = -jnp.asarray(b, jnp.float64)
+
+    def direction(X, G, x_t, g_t):
+        f = build_factors(spec, X, lam=lam, c=c)
+        Z = poly2_quadratic_solve(f, G, g_c=g_c, jitter=jitter)
+        H = posterior_hessian(spec, x_t, f, Z)
+        # H is pure low-rank for dot kernels (diag == 0): regularize with a
+        # scale-aware ridge so the Woodbury solve stays sane.
+        tau = jnp.maximum(jnp.abs(jnp.trace(H.W @ (H.P.T @ H.P))) / d_dim,
+                          1e-12) * 1e-9
+        H = H._replace(diag=H.diag + tau)
+        return -H.solve(g_t, jitter=jitter)
+
+    return _run(direction, A, b, x0, tol, max_iters)

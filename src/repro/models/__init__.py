@@ -1,0 +1,13 @@
+"""Model zoo: the 10 assigned architectures behind one functional API."""
+from .common import (LOGICAL_RULES, ModelConfig, batch_axes_of,
+                     logical_to_mesh, param_partition_specs, rms_norm,
+                     set_activation_rules, shard_activation)
+from .registry import (SHAPES, Model, ShapeSpec, batch_specs, build_model,
+                       decode_specs, make_concrete_batch, shape_applicable)
+
+__all__ = [
+    "LOGICAL_RULES", "ModelConfig", "batch_axes_of", "logical_to_mesh",
+    "param_partition_specs", "rms_norm", "set_activation_rules",
+    "shard_activation", "SHAPES", "Model", "ShapeSpec", "batch_specs",
+    "build_model", "decode_specs", "make_concrete_batch", "shape_applicable",
+]

@@ -1,0 +1,248 @@
+"""Shared model substrate: config, init helpers, norms, sharding hooks.
+
+Design notes (DESIGN.md sec. 5/6):
+  * Parameters are nested dicts; per-layer params are STACKED on a leading
+    `layers` axis and consumed with lax.scan so HLO size is depth-independent.
+  * Every parameter carries a logical-axis annotation (via the parallel
+    `specs` tree built by the init functions); `logical_to_mesh` maps
+    logical axes to mesh axes (TP over 'model', FSDP over 'data'(+'pod'),
+    EP over 'model').
+  * Activation sharding is enforced with `shard_activation` hooks
+    (batch -> data axes, optional sequence -> 'model' between layers =
+    Megatron-style sequence parallelism), so that GSPMD has no freedom to
+    replicate the residual stream at large scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jnp.ndarray
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config to describe every assigned architecture (see configs/)."""
+
+    arch: str = "custom"
+    family: str = "dense"            # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 0                # 0 => d_model // n_heads
+    d_ff: int = 256
+    vocab_size: int = 256
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    rope_style: str = "full"         # full | half (chatglm 2d) | mrope (qwen2-vl)
+    # -- sliding-window interleave (gemma3): every `global_every`-th layer is
+    #    global, others use `window`; 0 disables (all global) --
+    window: int = 0
+    global_every: int = 6
+    # -- MoE --
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "gather"     # 'gather' (argsort dispatch, §Perf) |
+    #                              'dense' (GShard one-hot einsum baseline)
+    # -- SSM (mamba2 / zamba2) --
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    attn_every: int = 0              # zamba2: shared attn block every k layers
+    # -- enc-dec (seamless) --
+    n_enc_layers: int = 0
+    # -- vlm --
+    n_patches: int = 0               # patch embeddings scattered into prefix
+    # -- norm / numerics --
+    norm_eps: float = 1e-6
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    # -- parallelism --
+    remat: bool = True
+    seq_shard_activations: bool = True
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM, hybrid, or sliding-window interleave."""
+        return self.family in ("ssm", "hybrid") or self.window > 0
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# Default rules: TP over 'model', FSDP over 'data' (+'pod' folded into data
+# sharding only for the optimizer/flat vectors; weights use 'data' alone so
+# inter-pod traffic stays gradient-only).
+LOGICAL_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "stack": None,
+    "conv": None,
+    "state": None,
+    "ssm_heads": "model",
+    None: None,
+}
+
+
+def logical_to_mesh(axes: Sequence[Optional[str]]) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    return P(*(LOGICAL_RULES.get(a, None) for a in axes))
+
+
+class SpecTree(dict):
+    """Parallel dict tree holding logical-axis tuples for each param."""
+
+
+def param_partition_specs(specs: Any) -> Any:
+    """Convert a logical-axes tree (same structure as params) to PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: logical_to_mesh(axes),
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers — every init returns (param, logical_axes)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype, axes=("embed", "mlp"),
+               scale: float | None = None):
+    s = scale if scale is not None else 1.0 / jnp.sqrt(in_dim)
+    w = (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * s).astype(dtype)
+    return w, axes
+
+
+def embed_init(rng, vocab: int, d_model: int, dtype):
+    w = (jax.random.normal(rng, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+    return w, ("vocab", "embed")
+
+
+def zeros_init(shape, dtype, axes):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones_init(shape, dtype, axes):
+    return jnp.ones(shape, dtype), axes
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hooks
+# ---------------------------------------------------------------------------
+
+
+def batch_axes_of(mesh) -> tuple[str, ...]:
+    names = tuple(mesh.axis_names)
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+_ACTIVATION_RULES: dict[str, P] = {}
+_DATA_SHARDS: list[int] = [1]
+
+
+def data_shard_count() -> int:
+    """Number of batch shards the current mesh provides (1 on CPU tests).
+
+    MoE routing is SHARD-LOCAL (per-data-shard capacity): the dispatch
+    indices then never cross shards, which is what keeps the gather path
+    collective-free (EXPERIMENTS.md §Perf iteration 2b)."""
+    return _DATA_SHARDS[0]
+
+
+def set_activation_rules(mesh, seq_shard: bool) -> None:
+    """Install global activation-sharding rules for the current mesh.
+
+    Called once by the step builders (train/serve) before tracing; layers
+    call ``shard_activation(x, kind)``. Keeping this a module-global avoids
+    threading mesh context through every layer signature.
+    """
+    b = batch_axes_of(mesh)
+    seq = "model" if seq_shard else None
+    import numpy as _np
+
+    _DATA_SHARDS[0] = int(_np.prod([mesh.shape[a] for a in b]))
+    _ACTIVATION_RULES.clear()
+    _ACTIVATION_RULES.update({
+        # Megatron-style sequence parallelism: the residual stream between
+        # layers is sharded on (batch, seq); inside attention/MLP the
+        # activations are resharded to (batch, heads/hidden) — GSPMD turns
+        # the transitions into all-gather / reduce-scatter pairs.
+        "residual": P(b, seq, None),          # (B, S, D) between layers
+        # GQA 5-D layouts (B, S, Hk, G, hd): shard whichever axis the
+        # config's attention chose (attention.gqa_shard_axis)
+        "q5_hk": P(b, None, "model", None, None),
+        "q5_g": P(b, None, None, "model", None),
+        "q5_hk_stats": P(b, "model", None, None),   # (B, Hk, G, Sq)
+        "q5_g_stats": P(b, None, "model", None),
+        "kv4": P(b, None, "model", None),     # (B, S, Hk, hd)
+        "experts3": P("model", None, None),   # (E, C, D) MoE dispatch
+        "experts4": P(b, "model", None, None),  # (shards, E, C, D)
+        "ffh": P(b, None, "model"),           # (B, S, d_ff) inside MLP
+        "logits": P(b, None, "model"),        # (B, S, V) vocab-sharded
+        "batch_only": P(b),
+    })
+
+
+def shard_activation(x: Array, kind: str) -> Array:
+    spec = _ACTIVATION_RULES.get(kind)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        # outside jit / no mesh context (CPU smoke tests): no-op
+        return x
+
+
+def maybe_remat(fn, enabled: bool):
+    if not enabled:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)

@@ -1,0 +1,271 @@
+"""Hybrid SSM+attention assemblies: mamba2 (pure SSM) and zamba2 (hybrid).
+
+zamba2-7b: a stack of Mamba2 blocks with ONE weight-tied ("shared") GQA
+attention block invoked after every `attn_every` Mamba layers (paper:
+arXiv:2411.15242). The shared block's weights appear once in the param
+tree; each invocation carries its own KV cache. Layout for n_layers=81,
+attn_every=6: 13 groups of (6 mamba + shared attn) + 3 trailing mamba.
+
+mamba2-130m: attn_every=0 -> plain scan over Mamba2 blocks; decode state
+is O(1) per layer, which is why long_500k runs trivially for SSM archs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import KVCache, attn_decode, attn_forward, init_attn, init_cache
+from .common import ModelConfig, embed_init, maybe_remat, rms_norm, shard_activation
+from .mamba2 import (MambaState, init_mamba, init_mamba_state, mamba_decode,
+                     mamba_forward)
+from .mlp import init_mlp, mlp_forward
+from .transformer import _pack_full_cache, _prepend_axes
+
+Array = jnp.ndarray
+
+
+def _init_mamba_layer(rng, cfg: ModelConfig):
+    p, s = {}, {}
+    p["ln"], s["ln"] = jnp.ones((cfg.d_model,), cfg.param_dtype), ("embed",)
+    p["mix"], s["mix"] = init_mamba(rng, cfg)
+    return p, s
+
+
+def _axes_of(init_fn, cfg):
+    box = {}
+
+    def f(r):
+        params, specs = init_fn(r, cfg)
+        box["s"] = specs
+        return params
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["s"]
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(groups, mamba_per_group, remainder)."""
+    if cfg.attn_every <= 0:
+        return 0, 0, cfg.n_layers
+    g = cfg.n_layers // cfg.attn_every
+    return g, cfg.attn_every, cfg.n_layers % cfg.attn_every
+
+
+def init_hybrid(rng, cfg: ModelConfig):
+    groups, per, rem = _layout(cfg)
+    ks = jax.random.split(rng, 5)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                        cfg.param_dtype)
+    w = (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+         * 0.02).astype(cfg.param_dtype)
+    p["unembed"], s["unembed"] = w, ("embed", "vocab")
+    p["ln_f"], s["ln_f"] = jnp.ones((cfg.d_model,), cfg.param_dtype), ("embed",)
+
+    layer_axes = _axes_of(_init_mamba_layer, cfg)
+    n_grouped = groups * per
+    if n_grouped:
+        rngs = jax.random.split(ks[2], groups)
+
+        def ginit(r):
+            return jax.vmap(lambda rr: _init_mamba_layer(rr, cfg)[0])(
+                jax.random.split(r, per))
+
+        p["mamba"] = jax.vmap(ginit)(rngs)
+        s["mamba"] = _prepend_axes(layer_axes, ("layers", "stack"))
+        # ONE shared transformer block (attn + MLP, weight-tied across
+        # invocations — zamba2's d_ff lives here)
+        p["shared_ln"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        s["shared_ln"] = ("embed",)
+        p["shared_attn"], s["shared_attn"] = init_attn(ks[3], cfg)
+        if cfg.d_ff:
+            kmlp = jax.random.fold_in(ks[3], 1)
+            p["shared_ln2"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+            s["shared_ln2"] = ("embed",)
+            p["shared_mlp"], s["shared_mlp"] = init_mlp(kmlp, cfg)
+    if rem:
+        rngs = jax.random.split(ks[4], rem)
+        p["rem"] = jax.vmap(lambda r: _init_mamba_layer(r, cfg)[0])(rngs)
+        s["rem"] = _prepend_axes(layer_axes, ("layers",))
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _mamba_body(cfg):
+    def body(lp, x):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        return shard_activation(x + mamba_forward(lp["mix"], cfg, h),
+                                "residual")
+    return body
+
+
+def hybrid_logits(p, cfg: ModelConfig, batch: dict):
+    groups, per, rem = _layout(cfg)
+    x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
+    x = shard_activation(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    body = maybe_remat(_mamba_body(cfg), cfg.remat)
+
+    def shared(x_):
+        h = rms_norm(x_, p["shared_ln"], cfg.norm_eps)
+        x_ = x_ + attn_forward(p["shared_attn"], cfg, h, positions,
+                               kind="causal")
+        if "shared_mlp" in p:
+            h = rms_norm(x_, p["shared_ln2"], cfg.norm_eps)
+            x_ = x_ + mlp_forward(p["shared_mlp"], h)
+        return x_
+
+    if groups:
+        shared_r = maybe_remat(shared, cfg.remat)
+
+        def group(x_, gp):
+            def inner(x2, lp):
+                return body(lp, x2), None
+
+            x_, _ = jax.lax.scan(inner, x_, gp)
+            return shared_r(x_), None
+
+        x, _ = jax.lax.scan(group, x, p["mamba"])
+    if rem:
+        def f(x_, lp):
+            return body(lp, x_), None
+
+        x, _ = jax.lax.scan(f, x, p["rem"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = (x @ p["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return shard_activation(logits, "logits"), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+class HybridCache(NamedTuple):
+    mamba: Any          # MambaState stacked (G, per, ...) or None
+    attn: Any           # KVCache stacked (G, ...) or None
+    rem: Any            # MambaState stacked (rem, ...) or None
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    groups, per, rem = _layout(cfg)
+
+    def mstack(prefix):
+        one = init_mamba_state(cfg, batch)
+        return MambaState(
+            conv=jnp.zeros(prefix + one.conv.shape, one.conv.dtype),
+            ssm=jnp.zeros(prefix + one.ssm.shape, one.ssm.dtype),
+        )
+
+    mam = attn = remc = None
+    if groups:
+        mam = mstack((groups, per))
+        one = init_cache(cfg, batch, max_len)
+        attn = KVCache(
+            k=jnp.zeros((groups,) + one.k.shape, one.k.dtype),
+            v=jnp.zeros((groups,) + one.v.shape, one.v.dtype),
+            pos=jnp.full((groups,) + one.pos.shape, -1, jnp.int32),
+        )
+    if rem:
+        remc = mstack((rem,))
+    return HybridCache(mamba=mam, attn=attn, rem=remc)
+
+
+def _mamba_forward_with_state(lp, cfg: ModelConfig, x: Array):
+    """Full-seq mamba + exact final MambaState (chunk-scan carry, no extra
+    pass — see mamba2.mamba_forward(return_state=True))."""
+    return mamba_forward(lp["mix"], cfg, x, return_state=True)
+
+
+def hybrid_prefill(p, cfg: ModelConfig, batch: dict, max_len: int):
+    groups, per, rem = _layout(cfg)
+    x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    pos_row = positions[0]
+
+    def mbody(lp, x_):
+        h = rms_norm(x_, lp["ln"], cfg.norm_eps)
+        y, st = _mamba_forward_with_state(lp, cfg, h)
+        return x_ + y, st
+
+    mam_c = attn_c = rem_c = None
+    if groups:
+        def group(x_, gp):
+            def inner(x2, lp):
+                x2, st = mbody(lp, x2)
+                return x2, st
+
+            x_, sts = jax.lax.scan(inner, x_, gp)
+            h = rms_norm(x_, p["shared_ln"], cfg.norm_eps)
+            attn_out, (k, v) = attn_forward(p["shared_attn"], cfg, h,
+                                            positions, kind="causal",
+                                            return_kv=True)
+            x_ = x_ + attn_out
+            if "shared_mlp" in p:
+                h = rms_norm(x_, p["shared_ln2"], cfg.norm_eps)
+                x_ = x_ + mlp_forward(p["shared_mlp"], h)
+            return x_, (sts, k, v)
+
+        x, (mam_c, ks_, vs_) = jax.lax.scan(group, x, p["mamba"])
+        attn_c = jax.vmap(lambda k_, v_: _pack_full_cache(k_, v_, pos_row,
+                                                          max_len))(ks_, vs_)
+    if rem:
+        def f(x_, lp):
+            x_, st = mbody(lp, x_)
+            return x_, st
+
+        x, rem_c = jax.lax.scan(f, x, p["rem"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ p["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return logits, HybridCache(mamba=mam_c, attn=attn_c, rem=rem_c)
+
+
+def hybrid_decode(p, cfg: ModelConfig, cache: HybridCache, tokens: Array,
+                  pos: Array):
+    groups, per, rem = _layout(cfg)
+    x = jnp.take(p["embed"], tokens[:, None], axis=0).astype(cfg.compute_dtype)
+
+    def mdec(lp, x_, st):
+        h = rms_norm(x_, lp["ln"], cfg.norm_eps)
+        y, st_new = mamba_decode(lp["mix"], cfg, h, st)
+        return x_ + y, st_new
+
+    new_mam = new_attn = new_rem = None
+    if groups:
+        def group(x_, gc):
+            gp, gst, c_attn = gc
+
+            def inner(x2, lc):
+                lp, st = lc
+                x2, st_new = mdec(lp, x2, st)
+                return x2, st_new
+
+            x_, st_new = jax.lax.scan(inner, x_, (gp, gst))
+            h = rms_norm(x_, p["shared_ln"], cfg.norm_eps)
+            attn_out, c_new = attn_decode(p["shared_attn"], cfg, h, pos,
+                                          c_attn)
+            x_ = x_ + attn_out
+            if "shared_mlp" in p:
+                h = rms_norm(x_, p["shared_ln2"], cfg.norm_eps)
+                x_ = x_ + mlp_forward(p["shared_mlp"], h)
+            return x_, (st_new, c_new)
+
+        x, (new_mam, new_attn) = jax.lax.scan(
+            group, x, (p["mamba"], cache.mamba, cache.attn))
+    if rem:
+        def f(x_, lc):
+            lp, st = lc
+            x_, st_new = mdec(lp, x_, st)
+            return x_, st_new
+
+        x, new_rem = jax.lax.scan(f, x, (p["rem"], cache.rem))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ p["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return logits, HybridCache(mamba=new_mam, attn=new_attn, rem=new_rem)

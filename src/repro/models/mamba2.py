@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+Faithful to the minimal SSD algorithm of Dao & Gu (arXiv:2405.21060):
+within-chunk computation is quadratic attention-like (einsums against a
+causal decay mask), across chunks a state of size (heads, head_dim, d_state)
+is carried by a lax.scan. Decode is a single recurrent state update —
+the property that makes long_500k trivial for SSM archs.
+
+Shapes: d_inner = expand * d_model; n_heads = d_inner / ssm_head_dim;
+state per layer = (conv ring (B, conv_width-1, conv_channels),
+                   ssm state (B, n_heads, head_dim, d_state)).
+
+Sharding: SSM heads are the TP axis (logical "ssm_heads" -> 'model');
+B/C projections (d_state-sized, shared across heads: n_groups=1) are
+replicated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm, shard_activation
+
+Array = jnp.ndarray
+
+
+def _dims(cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d, d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(rng, cfg: ModelConfig, *, d_model: int | None = None):
+    d, d_inner, h, p_, n = _dims(cfg, d_model)
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 8)
+    p, s = {}, {}
+    p["in_z"], s["in_z"] = dense_init(ks[0], d, d_inner, dt, ("embed", "ssm_heads"))
+    p["in_x"], s["in_x"] = dense_init(ks[1], d, d_inner, dt, ("embed", "ssm_heads"))
+    p["in_B"], s["in_B"] = dense_init(ks[2], d, n, dt, ("embed", "state"))
+    p["in_C"], s["in_C"] = dense_init(ks[3], d, n, dt, ("embed", "state"))
+    p["in_dt"], s["in_dt"] = dense_init(ks[4], d, h, dt, ("embed", "ssm_heads"))
+    # conv over channels [x | B | C]
+    cw = cfg.conv_width
+    p["conv_w"] = (jax.random.normal(ks[5], (cw, d_inner + 2 * n), jnp.float32)
+                   / jnp.sqrt(cw)).astype(dt)
+    s["conv_w"] = ("conv", "ssm_heads")
+    p["conv_b"] = jnp.zeros((d_inner + 2 * n,), dt)
+    s["conv_b"] = ("ssm_heads",)
+    # per-head scalars: A (negative), D (skip), dt bias
+    p["A_log"] = jnp.zeros((h,), jnp.float32)          # A = -exp(A_log)
+    s["A_log"] = ("ssm_heads",)
+    p["D"] = jnp.ones((h,), jnp.float32)
+    s["D"] = ("ssm_heads",)
+    p["dt_bias"] = jnp.full((h,), -2.0, jnp.float32)   # softplus ~ 0.12
+    s["dt_bias"] = ("ssm_heads",)
+    p["norm_w"] = jnp.ones((d_inner,), dt)
+    s["norm_w"] = ("ssm_heads",)
+    p["out"], s["out"] = dense_init(ks[6], d_inner, d, dt, ("ssm_heads", "embed"))
+    return p, s
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: u (B, L, C), w (W, C) -> (B, L, C)."""
+    width = w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(width):                 # tiny static loop (W = 4)
+        out = out + u_pad[:, i:i + u.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(a: Array) -> Array:
+    """a (..., q) -> (..., q, q) lower-tri cumulative sums; -inf above diag."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+class MambaState(NamedTuple):
+    conv: Array   # (B, conv_width-1, d_inner + 2*d_state)
+    ssm: Array    # (B, n_heads, head_dim, d_state) f32
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, *,
+                     d_model: int | None = None, dtype=None) -> MambaState:
+    d, d_inner, h, p_, n = _dims(cfg, d_model)
+    dt = dtype or cfg.compute_dtype
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_inner + 2 * n), dt),
+        ssm=jnp.zeros((batch, h, p_, n), jnp.float32),
+    )
+
+
+def _project(p, cfg: ModelConfig, x: Array, d_inner: int, n: int, h: int):
+    z = x @ p["in_z"]
+    xbc = jnp.concatenate([x @ p["in_x"], x @ p["in_B"], x @ p["in_C"]],
+                          axis=-1)
+    dt_raw = (x @ p["in_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    return z, xbc, dt
+
+
+def mamba_forward(p, cfg: ModelConfig, x: Array, *,
+                  d_model: int | None = None, return_state: bool = False):
+    """Full-sequence SSD. x: (B, L, D) -> (B, L, D) [, final MambaState].
+
+    The final state falls out of the chunk scan's carry for free (padding
+    is state-neutral: padded dt = 0 -> decay 1, contribution 0), so prefill
+    hands decode an exact state with zero extra passes.
+    """
+    d, d_inner, h, hp, n = _dims(cfg, d_model)
+    b, length, _ = x.shape
+    z, xbc_raw, dt = _project(p, cfg, x, d_inner, n, h)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_inner].reshape(b, length, h, hp)
+    Bm = xbc[..., d_inner:d_inner + n].astype(jnp.float32)
+    Cm = xbc[..., d_inner + n:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                       # (h,)
+
+    q = min(cfg.ssm_chunk, length)
+    nc = -(-length // q)
+    pad = nc * q - length
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    # chunked shapes
+    xc = xs.reshape(b, nc, q, h, hp).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, q, n)
+    Cc = Cm.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+    dtx = xc * dtc[..., None]                      # x * dt
+    dta = dtc * A                                  # A * dt, (b,nc,q,h)
+
+    a_cum = jnp.cumsum(dta, axis=2)                # (b,nc,q,h)
+    L = jnp.exp(_segsum(dta.transpose(0, 1, 3, 2)))        # (b,nc,h,q,q)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc, L, dtx)
+
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)    # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_states, dtx)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])              # (b,nc,h)
+
+    def body(S, xs_c):
+        st_c, dec_c = xs_c                                 # (b,h,p,n), (b,h)
+        S_new = S * dec_c[..., None, None] + st_c
+        return S_new, S                                    # emit state BEFORE chunk
+
+    S0 = jnp.zeros((b, h, hp, n), jnp.float32)
+    S_final, S_prev = jax.lax.scan(
+        body, S0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)               # (b,nc,h,p,n)
+
+    state_decay = jnp.exp(a_cum)                           # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, S_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, hp)[:, :length]
+    y = y + xs[:, :length].astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, length, d_inner).astype(x.dtype)
+    y = shard_activation(y, "ffh")
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out"]
+    if not return_state:
+        return out
+    cw = cfg.conv_width
+    conv_hist = xbc_raw[:, -(cw - 1):, :]
+    if length < cw - 1:
+        conv_hist = jnp.pad(xbc_raw, ((0, 0), (cw - 1 - length, 0), (0, 0)))
+    state = MambaState(conv=conv_hist.astype(cfg.compute_dtype), ssm=S_final)
+    return out, state
+
+
+def mamba_decode(p, cfg: ModelConfig, x1: Array, state: MambaState, *,
+                 d_model: int | None = None):
+    """One-token decode. x1: (B, 1, D) -> (y (B,1,D), new state)."""
+    d, d_inner, h, hp, n = _dims(cfg, d_model)
+    b = x1.shape[0]
+    z, xbc, dt = _project(p, cfg, x1, d_inner, n, h)       # (B,1,*)
+    # conv over ring of last (W-1) inputs + current
+    hist = jnp.concatenate([state.conv, xbc.astype(state.conv.dtype)], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)                           # (B, C)
+    xs = xbc1[:, :d_inner].reshape(b, h, hp)
+    B1 = xbc1[:, d_inner:d_inner + n]
+    C1 = xbc1[:, d_inner + n:]
+    dt1 = dt[:, 0]                                         # (B, h)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A)                               # (B, h)
+    dtx = xs * dt1[..., None]                              # (B,h,p)
+    ssm = state.ssm * decay[..., None, None] + \
+        jnp.einsum("bn,bhp->bhpn", B1, dtx)
+    y = jnp.einsum("bn,bhpn->bhp", C1, ssm) + xs * p["D"][:, None]
+    y = y.reshape(b, 1, d_inner).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    new_state = MambaState(conv=hist[:, 1:], ssm=ssm)
+    return y @ p["out"], new_state

@@ -1,0 +1,28 @@
+"""Gated MLP (SwiGLU) — the dense FFN used by every assigned transformer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, shard_activation, swiglu
+
+Array = jnp.ndarray
+
+
+def init_mlp(rng, cfg: ModelConfig, *, d_model: int | None = None,
+             d_ff: int | None = None, axes=("embed", "mlp")):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 3)
+    p, s = {}, {}
+    p["gate"], s["gate"] = dense_init(ks[0], d, f, dt, axes)
+    p["up"], s["up"] = dense_init(ks[1], d, f, dt, axes)
+    p["down"], s["down"] = dense_init(ks[2], f, d, dt, axes[::-1])
+    return p, s
+
+
+def mlp_forward(p, x: Array) -> Array:
+    h = swiglu(x @ p["gate"], x @ p["up"])
+    h = shard_activation(h, "ffh")
+    return h @ p["down"]

@@ -1,0 +1,190 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP sharding.
+
+Covers both assigned MoE archs:
+  * kimi-k2-1t-a32b  — 384 routed experts, top-8, 1 shared expert
+  * deepseek-moe-16b — 64 routed experts, top-6, 2 shared experts
+    (fine-grained experts: d_ff per expert is small; shared experts run
+    densely for every token)
+
+Dispatch is GShard/Switch-style with a capacity factor: tokens pick top-k
+experts, each expert processes at most C = cf * T * k / E tokens, overflow
+is dropped (contributes zero — the residual connection carries the token).
+Dispatch/combine are einsums against a (T, E, C) one-hot tensor — the
+XLA-friendly dense formulation whose sharded lowering produces the
+all-to-all pattern on the `model` (expert) axis.
+
+Expert weights have logical axes ("experts", "embed", "expert_mlp") so EP
+maps experts -> 'model' while each expert's FFN stays unsharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, shard_activation, swiglu
+from .mlp import init_mlp, mlp_forward
+
+Array = jnp.ndarray
+
+
+def init_moe(rng, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p, s = {}, {}
+    p["router"] = (jax.random.normal(ks[0], (d, e), jnp.float32) * scale
+                   ).astype(jnp.float32)           # router kept in f32
+    s["router"] = ("embed", "experts")
+
+    def ew(rng_, shape):
+        return (jax.random.normal(rng_, shape, jnp.float32) * scale).astype(dt)
+
+    p["w_gate"] = ew(ks[1], (e, d, f))
+    p["w_up"] = ew(ks[2], (e, d, f))
+    p["w_down"] = (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / jnp.sqrt(f)).astype(dt)
+    s["w_gate"] = ("experts", "embed", "expert_mlp")
+    s["w_up"] = ("experts", "embed", "expert_mlp")
+    s["w_down"] = ("experts", "expert_mlp", "embed")
+    if cfg.n_shared_experts:
+        p["shared"], s["shared"] = init_mlp(
+            ks[4], cfg, d_ff=f * cfg.n_shared_experts)
+    return p, s
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    cap = int(cfg.capacity_factor * tokens * cfg.top_k / cfg.n_experts)
+    return max(cap, 4)
+
+
+def moe_forward(p, cfg: ModelConfig, x: Array):
+    """x: (B, S, D) -> (B, S, D); aux load-balance loss returned too."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renormalize
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    f_e = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (t * k)) * k
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    cap = _capacity(cfg, t)
+    if cfg.moe_impl == "gather":
+        y = _dispatch_gather(p, cfg, xt, expert_idx, gate_vals, cap)
+        if cfg.n_shared_experts:
+            y = y + mlp_forward(p["shared"], xt)
+        return y.reshape(b, s, d), aux
+
+    # ---- dense one-hot baseline (GShard formulation) ----
+    pos_onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T,k,E)
+    # rank of token t among tokens routed to the same expert (per k-slot,
+    # cumulative over flattened (k, T) priority order: slot 0 first)
+    prio = pos_onehot.transpose(1, 0, 2).reshape(k * t, e)   # (k*T, E)
+    ranks = jnp.cumsum(prio, axis=0) - prio                  # 0-based
+    ranks = ranks.reshape(k, t, e).transpose(1, 0, 2)        # (T, k, E)
+    within = jnp.sum(ranks * pos_onehot, axis=-1)            # (T, k)
+    keep = within < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch (T, E, C) one-hot: token t -> expert e at queue slot c
+    slot_onehot = jax.nn.one_hot(within, cap, dtype=xt.dtype)        # (T,k,C)
+    disp = jnp.einsum("tke,tkc->tec", pos_onehot.astype(xt.dtype) *
+                      keep[..., None].astype(xt.dtype), slot_onehot)
+    comb = jnp.einsum("tke,tkc,tk->tec", pos_onehot.astype(jnp.float32),
+                      slot_onehot.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32)).astype(xt.dtype)
+
+    xe = jnp.einsum("tec,td->ecd", disp, xt)                 # (E, C, D)
+    xe = shard_activation(xe, None)  # experts already sharded via weights
+    h = swiglu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]),
+               jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (E, C, D)
+    y = jnp.einsum("tec,ecd->td", comb, ye)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_forward(p["shared"], xt)
+    return y.reshape(b, s, d), aux
+
+
+def _dispatch_gather(p, cfg: ModelConfig, xt: Array, expert_idx: Array,
+                     gate_vals: Array, cap_global: int) -> Array:
+    """Shard-local argsort-gather dispatch (§Perf iteration 2).
+
+    Two problems with the GShard one-hot formulation, both measured on
+    kimi-k2 train_4k:
+      (a) the (T, E, C) dispatch einsums are O(T*E*C*D) FLOPs — 97% of
+          the cell's compute (150 s/step of the 170 s total);
+      (b) GLOBAL routing makes every dispatch op cross data shards, which
+          GSPMD can only lower as partial-scatter + 6.8 TB of all-reduce.
+
+    Fix: tokens are viewed as (n_data_shards, T_local); routing, capacity,
+    argsort, scatter and gather are vmapped over the shard axis, so every
+    index op stays on-shard (capacity becomes per-shard — the standard
+    local-capacity semantics of real EP systems). Compute drops to the
+    expert FFN itself; the MoE block adds no collectives beyond the FSDP
+    weight gathers.
+
+    Priority semantics within a shard match the dense path exactly:
+    slot-major, token order within a slot (on a 1-shard mesh the two
+    implementations agree to float tolerance — tested).
+    """
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    from .common import data_shard_count
+
+    ns = data_shard_count()
+    if t % ns != 0:
+        ns = 1
+    tl = t // ns
+    cap = max(int(cfg.capacity_factor * tl * k / e), 4)
+
+    xs = xt.reshape(ns, tl, d)
+    ei = expert_idx.reshape(ns, tl, k)
+    gv = gate_vals.reshape(ns, tl, k)
+
+    def one_shard(x_s, ei_s, gv_s):
+        # slot-major flattening: row j*tl + t <-> (choice j, token t)
+        flat_e = ei_s.T.reshape(-1)                       # (k*tl,)
+        flat_tok = jnp.tile(jnp.arange(tl), k)
+        flat_gate = gv_s.T.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)          # group by expert
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+        rank = jnp.arange(k * tl) - seg_start[sorted_e]
+        keep = rank < cap
+        slot = jnp.where(keep, sorted_e * cap + rank, e * cap)
+        src_tok = flat_tok[order]
+        xe_flat = jnp.zeros((e * cap, d), x_s.dtype).at[slot].set(
+            x_s[src_tok], mode="drop")
+        # inverse map for the combine gather
+        slot_of = jnp.zeros((k * tl,), jnp.int32).at[order].set(
+            slot.astype(jnp.int32))
+        return xe_flat.reshape(e, cap, d), slot_of, flat_gate
+
+    xe, slot_of, flat_gate = jax.vmap(one_shard)(xs, ei, gv)
+    xe = shard_activation(xe, "experts4")                 # (ns, E, C, D)
+
+    h = swiglu(jnp.einsum("secd,edf->secf", xe, p["w_gate"]),
+               jnp.einsum("secd,edf->secf", xe, p["w_up"]))
+    ye = jnp.einsum("secf,efd->secd", h, p["w_down"])
+    ye = shard_activation(ye, "experts4")
+
+    def combine(ye_s, slot_of_s, gate_s):
+        ye_flat = jnp.concatenate(
+            [ye_s.reshape(e * cap, d),
+             jnp.zeros((1, d), ye_s.dtype)], axis=0)      # OOB row = 0
+        picked = ye_flat[slot_of_s].reshape(k, tl, d)
+        return jnp.sum(picked.astype(jnp.float32) *
+                       gate_s.reshape(k, tl, 1), axis=0)
+
+    y = jax.vmap(combine)(ye, slot_of, flat_gate)
+    return y.reshape(t, d).astype(xt.dtype)

@@ -1,0 +1,173 @@
+"""Unified Model API over all architecture families + per-shape input specs.
+
+Model exposes pure functions (params are explicit pytrees):
+  init(rng) -> params                      logits(params, batch) -> (lg, aux)
+  abstract() -> (param SDS tree, axes)     prefill(params, batch, max_len)
+  init_cache(batch, max_len)               decode(params, cache, tokens, pos)
+
+`input_specs(cfg, shape)` builds ShapeDtypeStruct stand-ins for every input
+of the step that the shape exercises (train_4k -> train_step;
+prefill_32k -> prefill; decode_32k / long_500k -> decode with a filled
+cache) — the dry-run contract: shardable, weak-type-correct, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from . import encdec, hybrid, transformer
+
+Array = jnp.ndarray
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    abstract: Callable[[], tuple[Any, Any]]
+    logits: Callable[..., tuple[Array, Array]]
+    prefill: Callable[..., tuple[Array, Any]]
+    decode: Callable[..., tuple[Array, Any]]
+    init_cache: Callable[..., Any]
+
+
+def _abstract_of(init_fn):
+    def fn():
+        box = {}
+
+        def f(r):
+            p, s = init_fn(r)
+            box["s"] = s
+            return p
+
+        pa = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return pa, box["s"]
+
+    return fn
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        init = lambda rng: transformer.init_lm(rng, cfg)
+        return Model(
+            cfg=cfg,
+            init=lambda rng: init(rng)[0],
+            abstract=_abstract_of(init),
+            logits=lambda p, b: transformer.lm_logits(p, cfg, b),
+            prefill=lambda p, b, ml: transformer.lm_prefill(p, cfg, b, ml),
+            decode=lambda p, c, t, pos: transformer.lm_decode(p, cfg, c, t, pos),
+            init_cache=lambda b, ml: transformer.lm_init_cache(cfg, b, ml),
+        )
+    if fam in ("ssm", "hybrid"):
+        init = lambda rng: hybrid.init_hybrid(rng, cfg)
+        return Model(
+            cfg=cfg,
+            init=lambda rng: init(rng)[0],
+            abstract=_abstract_of(init),
+            logits=lambda p, b: hybrid.hybrid_logits(p, cfg, b),
+            prefill=lambda p, b, ml: hybrid.hybrid_prefill(p, cfg, b, ml),
+            decode=lambda p, c, t, pos: hybrid.hybrid_decode(p, cfg, c, t, pos),
+            init_cache=lambda b, ml: hybrid.hybrid_init_cache(cfg, b, ml),
+        )
+    if fam == "encdec":
+        init = lambda rng: encdec.init_encdec(rng, cfg)
+        return Model(
+            cfg=cfg,
+            init=lambda rng: init(rng)[0],
+            abstract=_abstract_of(init),
+            logits=lambda p, b: encdec.encdec_logits(p, cfg, b),
+            prefill=lambda p, b, ml: encdec.encdec_prefill(p, cfg, b, ml),
+            decode=lambda p, c, t, pos: encdec.encdec_decode(p, cfg, c, t, pos),
+            init_cache=lambda b, ml, src_len=None: encdec.encdec_init_cache(
+                cfg, b, ml, src_len if src_len is not None else ml),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+    # reduced shapes for CPU smoke tests
+    "smoke_train": ShapeSpec("smoke_train", 64, 2, "train"),
+    "smoke_prefill": ShapeSpec("smoke_prefill", 32, 2, "prefill"),
+    "smoke_decode": ShapeSpec("smoke_decode", 32, 2, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    ss = SHAPES[shape]
+    if ss.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 500k decode needs "
+                       "sub-quadratic attention (skip per spec)")
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStructs for the train/prefill *batch* dict."""
+    ss = SHAPES[shape]
+    b, s = ss.global_batch, ss.seq_len
+    specs: dict[str, Any] = {"tokens": _i32((b, s))}
+    if cfg.family == "encdec":
+        specs["src_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.compute_dtype)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+        specs["positions"] = _i32((b, 3, s))
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStructs for the decode step: cache + one token + pos."""
+    ss = SHAPES[shape]
+    b, s = ss.global_batch, ss.seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"cache": cache, "tokens": _i32((b,)), "pos": _i32((b,))}
+
+
+def make_concrete_batch(cfg: ModelConfig, shape: str, seed: int = 0) -> dict:
+    """Real (random) batch for smoke tests / examples."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, sds in batch_specs(cfg, shape).items():
+        key, k = jax.random.split(key)
+        if name == "positions":
+            # M-RoPE position streams: sequential (text-like), identical
+            # across t/h/w so serving (which tracks a scalar position)
+            # agrees with the full forward
+            s = sds.shape[-1]
+            out[name] = jnp.broadcast_to(jnp.arange(s, dtype=sds.dtype),
+                                         sds.shape)
+        elif jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, sds.shape, 0,
+                                           min(cfg.vocab_size, 1000),
+                                           dtype=sds.dtype)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(
+                sds.dtype)
+    return out

@@ -1,0 +1,104 @@
+"""Rotary position embeddings: full, half (ChatGLM 2D), and M-RoPE (Qwen2-VL).
+
+All variants share one primitive: rotate pairs (even, odd) of feature
+channels by position-dependent angles. They differ in WHICH channels rotate
+and WHERE the position indices come from:
+
+  full   — every channel pair, positions = token index (Llama/Qwen/Gemma).
+  half   — only the first half of head_dim rotates (ChatGLM's "RoPE 2d" /
+           partial rotary); the rest passes through.
+  mrope  — channel pairs are split into 3 groups (temporal/height/width)
+           rotated by 3 separate position streams (Qwen2-VL M-RoPE). Text
+           tokens carry identical t/h/w positions, so mrope == full there.
+
+Inputs may have ANY number of head axes between (B, S, ...) and the
+trailing hd axis — the GQA layout passes q as (B,S,Hk,G,hd) and k as
+(B,S,Hk,hd); cos/sin broadcast across the middle axes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# M-RoPE channel-group split (fractions of head_dim/2): temporal, height, width
+_MROPE_SPLIT = (0.25, 0.375, 0.375)
+
+
+def _angles(positions: Array, dim: int, theta: float) -> tuple[Array, Array]:
+    """cos/sin tables: positions (..., S) -> (..., S, dim//2)."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _expand(t: Array, ndim: int) -> Array:
+    """(B, S, c) -> (B, S, 1...1, c) matching an ndim-rank head tensor."""
+    return t.reshape(t.shape[0], t.shape[1], *([1] * (ndim - 3)), t.shape[-1])
+
+
+def _rotate(x: Array, cos: Array, sin: Array) -> Array:
+    """Rotate halves: x (..., dim) with cos/sin broadcastable (..., dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _mrope_tables(positions: Array, hd: int, theta: float):
+    cos, sin = _angles(positions, hd, theta)      # (B, 3, S, hd/2)
+    half = hd // 2
+    sizes = [int(round(f * half)) for f in _MROPE_SPLIT]
+    sizes[-1] = half - sizes[0] - sizes[1]
+    parts_c, parts_s = [], []
+    off = 0
+    for g, sz in enumerate(sizes):
+        parts_c.append(cos[:, g, :, off:off + sz])
+        parts_s.append(sin[:, g, :, off:off + sz])
+        off += sz
+    return jnp.concatenate(parts_c, axis=-1), jnp.concatenate(parts_s, axis=-1)
+
+
+def apply_rope(
+    q: Array,
+    k: Array,
+    positions: Array,
+    *,
+    style: str = "full",
+    theta: float = 10000.0,
+) -> tuple[Array, Array]:
+    """q: (B,S,...,hd); k: (B,S,...,hd); positions (B,S) or (B,3,S)."""
+    hd = q.shape[-1]
+    dtype = q.dtype
+
+    if style == "mrope":
+        if positions.ndim == 2:       # text-only: replicate into 3 streams
+            positions = jnp.broadcast_to(
+                positions[:, None, :],
+                (positions.shape[0], 3, positions.shape[1]))
+        cos, sin = _mrope_tables(positions, hd, theta)       # (B,S,hd/2)
+        q_out = _rotate(q.astype(jnp.float32), _expand(cos, q.ndim),
+                        _expand(sin, q.ndim))
+        k_out = _rotate(k.astype(jnp.float32), _expand(cos, k.ndim),
+                        _expand(sin, k.ndim))
+        return q_out.astype(dtype), k_out.astype(dtype)
+
+    if style == "half":
+        rot = hd // 2
+        cos, sin = _angles(positions, rot, theta)            # (B,S,rot/2)
+        q32, k32 = q.astype(jnp.float32), k.astype(jnp.float32)
+        q_out = jnp.concatenate(
+            [_rotate(q32[..., :rot], _expand(cos, q.ndim),
+                     _expand(sin, q.ndim)), q32[..., rot:]], axis=-1)
+        k_out = jnp.concatenate(
+            [_rotate(k32[..., :rot], _expand(cos, k.ndim),
+                     _expand(sin, k.ndim)), k32[..., rot:]], axis=-1)
+        return q_out.astype(dtype), k_out.astype(dtype)
+
+    # full
+    cos, sin = _angles(positions, hd, theta)
+    q_out = _rotate(q.astype(jnp.float32), _expand(cos, q.ndim),
+                    _expand(sin, q.ndim))
+    k_out = _rotate(k.astype(jnp.float32), _expand(cos, k.ndim),
+                    _expand(sin, k.ndim))
+    return q_out.astype(dtype), k_out.astype(dtype)

@@ -1,0 +1,433 @@
+"""Decoder-only LM assembly (dense / MoE / sliding-window-interleave / VLM).
+
+Structure notes:
+  * Per-layer params are stacked and consumed with lax.scan -> HLO size is
+    depth-independent; remat is applied per layer body.
+  * Sliding-window archs (gemma3, 5 local : 1 global) use a GROUPED scan:
+    the layer stack splits into `full_groups` groups of (`global_every`-1
+    local + 1 global) layers plus a local-only remainder stack. Local
+    layers carry ring-buffer caches of size `window`; global layers carry
+    full-length caches — this is what makes long_500k decode genuinely
+    sub-quadratic in memory AND keeps 5/6 of prefill attention O(S*W).
+  * VLM (qwen2-vl): patch embeddings from the (stubbed) vision frontend
+    replace the first n_patches token embeddings; M-RoPE positions
+    (B, 3, S) come in through the batch.
+
+Batch dict keys: tokens (B,S) int32; positions (B,S) or (B,3,S);
+optional patch_embeds (B, n_patches, D).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attn_decode, attn_forward, init_attn,
+                        init_cache)
+from .common import (ModelConfig, embed_init, maybe_remat, rms_norm,
+                     shard_activation)
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Layer
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 3)
+    p, s = {}, {}
+    p["ln1"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    s["ln1"] = ("embed",)
+    p["ln2"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    s["ln2"] = ("embed",)
+    p["attn"], s["attn"] = init_attn(ks[0], cfg)
+    if cfg.n_experts:
+        p["ff"], s["ff"] = init_moe(ks[1], cfg)
+    else:
+        p["ff"], s["ff"] = init_mlp(ks[1], cfg)
+    return p, s
+
+
+def _layer_fwd(cfg: ModelConfig, lp, x: Array, positions: Array, *,
+               kind: str, window: int):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + attn_forward(lp["attn"], cfg, h, positions, kind=kind,
+                         window=window)
+    x = shard_activation(x, "residual")
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ff, aux = moe_forward(lp["ff"], cfg, h)
+    else:
+        ff, aux = mlp_forward(lp["ff"], h), jnp.zeros((), jnp.float32)
+    x = shard_activation(x + ff, "residual")
+    return x, aux
+
+
+def _layer_prefill(cfg: ModelConfig, lp, x: Array, positions: Array, *,
+                   kind: str, window: int):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, (k, v) = attn_forward(lp["attn"], cfg, h, positions, kind=kind,
+                                    window=window, return_kv=True)
+    x = x + attn_out
+    x = shard_activation(x, "residual")
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ff, _ = moe_forward(lp["ff"], cfg, h)
+    else:
+        ff = mlp_forward(lp["ff"], h)
+    x = shard_activation(x + ff, "residual")
+    return x, (k, v)
+
+
+def _layer_decode(cfg: ModelConfig, lp, x1: Array, pos: Array,
+                  cache: KVCache, *, window: int):
+    h = rms_norm(x1, lp["ln1"], cfg.norm_eps)
+    attn_out, cache = attn_decode(lp["attn"], cfg, h, pos, cache,
+                                  window=window)
+    x1 = x1 + attn_out
+    h = rms_norm(x1, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ff, _ = moe_forward(lp["ff"], cfg, h)
+    else:
+        ff = mlp_forward(lp["ff"], h)
+    return x1 + ff, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    """How n_layers splits into scanned stacks."""
+
+    full_groups: int      # groups of (locals_per_group local + 1 global)
+    locals_per_group: int
+    remainder: int        # trailing local-only layers
+
+    @classmethod
+    def of(cls, cfg: ModelConfig) -> "StackLayout":
+        if cfg.window <= 0:
+            return cls(full_groups=0, locals_per_group=0,
+                       remainder=cfg.n_layers)
+        g = cfg.global_every
+        return cls(full_groups=cfg.n_layers // g, locals_per_group=g - 1,
+                   remainder=cfg.n_layers % g)
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def _prepend_axes(tree, prefix: tuple):
+    return jax.tree_util.tree_map(lambda ax: prefix + ax, tree,
+                                  is_leaf=is_axes_leaf)
+
+
+def _layer_axes(cfg: ModelConfig):
+    """Axes tree of one layer WITHOUT materializing params (eval_shape +
+    static side-channel; matters at 16B params/layer)."""
+    box = {}
+
+    def f(r):
+        params, specs = _init_layer(r, cfg)
+        box["s"] = specs
+        return params
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["s"]
+
+
+def init_lm(rng, cfg: ModelConfig):
+    """Returns (params, logical-axes tree)."""
+    lay = StackLayout.of(cfg)
+    ks = jax.random.split(rng, 6)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                        cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        w = (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size),
+                               jnp.float32) * 0.02).astype(cfg.param_dtype)
+        p["unembed"], s["unembed"] = w, ("embed", "vocab")
+    p["ln_f"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    s["ln_f"] = ("embed",)
+
+    layer_axes = _layer_axes(cfg)
+    if lay.full_groups:
+        # local stack (G, locals_per_group, ...) and global stack (G, ...)
+        def group_init(r):
+            rl = jax.random.split(r, lay.locals_per_group)
+            pl = jax.vmap(lambda rr: _init_layer(rr, cfg)[0])(rl)
+            pg = _init_layer(jax.random.fold_in(r, 7), cfg)[0]
+            return pl, pg
+
+        rngs = jax.random.split(ks[2], lay.full_groups)
+        p["local"], p["global"] = jax.vmap(group_init)(rngs)
+        s["local"] = _prepend_axes(layer_axes, ("layers", "stack"))
+        s["global"] = _prepend_axes(layer_axes, ("layers",))
+    if lay.remainder:
+        rngs = jax.random.split(ks[3], lay.remainder)
+        p["rem"] = jax.vmap(lambda r: _init_layer(r, cfg)[0])(rngs)
+        s["rem"] = _prepend_axes(layer_axes, ("layers",))
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(p, cfg: ModelConfig, batch: dict) -> Array:
+    tokens = batch["tokens"]
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    if cfg.n_patches and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:, :]], axis=1)
+    return shard_activation(x, "residual")
+
+
+def _head(p, cfg: ModelConfig, x: Array) -> Array:
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return shard_activation(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def _positions_of(batch: dict) -> Array:
+    if "positions" in batch:
+        return batch["positions"]
+    t = batch["tokens"]
+    return jnp.broadcast_to(jnp.arange(t.shape[1]), t.shape)
+
+
+def lm_logits(p, cfg: ModelConfig, batch: dict):
+    """Full-sequence forward: (logits (B,S,V) f32, aux loss)."""
+    lay = StackLayout.of(cfg)
+    x = _embed_tokens(p, cfg, batch)
+    positions = _positions_of(batch)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    local_body = maybe_remat(
+        lambda lp, x_: _layer_fwd(cfg, lp, x_, positions, kind="window",
+                                  window=cfg.window), cfg.remat)
+    global_body = maybe_remat(
+        lambda lp, x_: _layer_fwd(cfg, lp, x_, positions, kind="causal",
+                                  window=0), cfg.remat)
+    plain_body = maybe_remat(
+        lambda lp, x_: _layer_fwd(cfg, lp, x_, positions, kind="causal",
+                                  window=0), cfg.remat)
+
+    if lay.full_groups:
+        def group(carry, gp):
+            x_, aux = carry
+            pl, pg = gp
+
+            def inner(c2, lp):
+                x2, a2 = c2
+                x2, a = local_body(lp, x2)
+                return (x2, a2 + a), None
+
+            (x_, aux), _ = jax.lax.scan(inner, (x_, aux), pl)
+            x_, a = global_body(pg, x_)
+            return (x_, aux + a), None
+
+        (x, aux0), _ = jax.lax.scan(group, (x, aux0),
+                                    (p["local"], p["global"]))
+        rem_body = local_body                      # remainder layers are local
+    else:
+        rem_body = plain_body
+    if lay.remainder:
+        def f(carry, lp):
+            x_, aux = carry
+            x_, a = rem_body(lp, x_)
+            return (x_, aux + a), None
+
+        (x, aux0), _ = jax.lax.scan(f, (x, aux0), p["rem"])
+    return _head(p, cfg, x), aux0
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+class LMCache(NamedTuple):
+    local: Any      # KVCache stacked (G, locals_per_group, ...) or None
+    global_: Any    # KVCache stacked (G, ...) or None
+    rem: Any        # KVCache stacked (rem, ...) or None
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> LMCache:
+    lay = StackLayout.of(cfg)
+
+    def stack(prefix: tuple, window: int):
+        one = init_cache(cfg, batch, max_len, window=window)
+        return KVCache(
+            k=jnp.zeros(prefix + one.k.shape, one.k.dtype),
+            v=jnp.zeros(prefix + one.v.shape, one.v.dtype),
+            pos=jnp.full(prefix + one.pos.shape, -1, jnp.int32),
+        )
+
+    local = glob = rem = None
+    if lay.full_groups:
+        local = stack((lay.full_groups, lay.locals_per_group), cfg.window)
+        glob = stack((lay.full_groups,), 0)
+    if lay.remainder:
+        rem = stack((lay.remainder,), cfg.window if lay.full_groups else 0)
+    return LMCache(local=local, global_=glob, rem=rem)
+
+
+def _pack_window_cache(k: Array, v: Array, positions: Array, size: int) -> KVCache:
+    """Build a ring cache from full-seq K/V (keep last `size` positions)."""
+    b, s = k.shape[0], k.shape[1]
+    if s >= size:
+        k_last, v_last = k[:, s - size:], v[:, s - size:]
+        pos_last = positions[s - size:]
+        shift = s % size
+        return KVCache(
+            k=jnp.roll(k_last, shift, axis=1),
+            v=jnp.roll(v_last, shift, axis=1),
+            pos=jnp.broadcast_to(jnp.roll(pos_last, shift)[None],
+                                 (b, size)).astype(jnp.int32),
+        )
+    pad = size - s
+    return KVCache(
+        k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        pos=jnp.pad(jnp.broadcast_to(positions[None], (b, s)).astype(jnp.int32),
+                    ((0, 0), (0, pad)), constant_values=-1),
+    )
+
+
+def _pack_full_cache(k: Array, v: Array, positions: Array, size: int) -> KVCache:
+    b, s = k.shape[0], k.shape[1]
+    pad = size - s
+    return KVCache(
+        k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        pos=jnp.pad(jnp.broadcast_to(positions[None], (b, s)).astype(jnp.int32),
+                    ((0, 0), (0, pad)), constant_values=-1),
+    )
+
+
+def lm_prefill(p, cfg: ModelConfig, batch: dict, max_len: int):
+    """Prefill: returns (last-position logits (B, V), LMCache)."""
+    lay = StackLayout.of(cfg)
+    x = _embed_tokens(p, cfg, batch)
+    positions = _positions_of(batch)
+    pos1d = positions[:, 0] if positions.ndim == 3 else positions
+    pos_row = pos1d[0]
+    s = x.shape[1]
+
+    def local_pre(lp, x_):
+        return _layer_prefill(cfg, lp, x_, positions, kind="window",
+                              window=cfg.window)
+
+    def global_pre(lp, x_):
+        return _layer_prefill(cfg, lp, x_, positions, kind="causal", window=0)
+
+    local_c = glob_c = rem_c = None
+    if lay.full_groups:
+        def group(x_, gp):
+            pl, pg = gp
+
+            def inner(x2, lp):
+                x2, kv = local_pre(lp, x2)
+                return x2, kv
+
+            x_, kv_l = jax.lax.scan(inner, x_, pl)
+            x_, kv_g = global_pre(pg, x_)
+            return x_, (kv_l, kv_g)
+
+        x, (kv_l, kv_g) = jax.lax.scan(group, x, (p["local"], p["global"]))
+        # kv_l: (G, 5, B, S, Hk, hd); kv_g: (G, B, S, Hk, hd)
+        local_c = jax.vmap(jax.vmap(
+            lambda k_, v_: _pack_window_cache(k_, v_, pos_row, cfg.window)))(
+                kv_l[0], kv_l[1])
+        glob_c = jax.vmap(
+            lambda k_, v_: _pack_full_cache(k_, v_, pos_row, max_len))(
+                kv_g[0], kv_g[1])
+        rem_kind = local_pre
+        rem_window = cfg.window
+    else:
+        rem_kind = global_pre
+        rem_window = 0
+    if lay.remainder:
+        def f(x_, lp):
+            x_, kv = rem_kind(lp, x_)
+            return x_, kv
+
+        x, kv_r = jax.lax.scan(f, x, p["rem"])
+        if rem_window:
+            rem_c = jax.vmap(
+                lambda k_, v_: _pack_window_cache(k_, v_, pos_row, rem_window))(
+                    kv_r[0], kv_r[1])
+        else:
+            rem_c = jax.vmap(
+                lambda k_, v_: _pack_full_cache(k_, v_, pos_row, max_len))(
+                    kv_r[0], kv_r[1])
+
+    logits_last = _head(p, cfg, x[:, -1:, :])[:, 0]
+    return logits_last, LMCache(local=local_c, global_=glob_c, rem=rem_c)
+
+
+def lm_decode(p, cfg: ModelConfig, cache: LMCache, tokens: Array, pos: Array):
+    """One-token decode. tokens: (B,) int32; pos: (B,) absolute positions.
+
+    Returns (logits (B, V), new LMCache).
+    """
+    lay = StackLayout.of(cfg)
+    batch = {"tokens": tokens[:, None]}
+    x = _embed_tokens(p, cfg, batch)
+
+    def local_dec(lp, x_, c):
+        return _layer_decode(cfg, lp, x_, pos, c, window=cfg.window)
+
+    def global_dec(lp, x_, c):
+        return _layer_decode(cfg, lp, x_, pos, c, window=0)
+
+    new_local = new_glob = new_rem = None
+    if lay.full_groups:
+        def group(x_, gp):
+            pl, pg, cl, cg = gp
+
+            def inner(x2, lc):
+                lp_, c_ = lc
+                x2, c_new = local_dec(lp_, x2, c_)
+                return x2, c_new
+
+            x_, cl_new = jax.lax.scan(inner, x_, (pl, cl))
+            x_, cg_new = global_dec(pg, x_, cg)
+            return x_, (cl_new, cg_new)
+
+        x, (new_local, new_glob) = jax.lax.scan(
+            group, x, (p["local"], p["global"], cache.local, cache.global_))
+        rem_dec = local_dec
+    else:
+        rem_dec = global_dec
+    if lay.remainder:
+        def f(x_, lc):
+            lp_, c_ = lc
+            x_, c_new = rem_dec(lp_, x_, c_)
+            return x_, c_new
+
+        x, new_rem = jax.lax.scan(f, x, (p["rem"], cache.rem))
+
+    logits = _head(p, cfg, x)[:, 0]
+    return logits, LMCache(local=new_local, global_=new_glob, rem=new_rem)

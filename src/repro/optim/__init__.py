@@ -1,0 +1,14 @@
+"""Optimizers: classic pytree optimizers + the paper's GP-gradient methods."""
+from .optimizers import (Optimizer, adafactor, adamw, adamw8bit, get_optimizer,
+                         momentum, sgd)
+from .gp_precond import gp_precond
+from .gp_directions import gph_direction, gpx_direction
+from .classic import GPOptState, gp_optimize, strong_wolfe
+from .compression import ef_int8_compress, ef_int8_decompress
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "adamw8bit", "get_optimizer",
+    "momentum", "sgd", "gp_precond", "gph_direction", "gpx_direction",
+    "GPOptState", "gp_optimize", "strong_wolfe", "ef_int8_compress",
+    "ef_int8_decompress",
+]

@@ -1,0 +1,63 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+At 1000+ nodes the cross-pod gradient all-reduce dominates the collective
+roofline term. Standard mitigation: quantize the all-reduced payload to
+int8 with per-block scales and carry the quantization error forward
+(error feedback keeps SGD-style convergence guarantees).
+
+This module provides the compress/decompress pair and a psum wrapper; the
+train step applies it ONLY across the 'pod' axis (slow links) — intra-pod
+reduction stays full precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_BLOCK = 256
+
+
+def _pad(x: Array) -> Array:
+    pad = (-x.shape[0]) % _BLOCK
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def ef_int8_compress(flat: Array, error: Array) -> tuple[Array, Array, Array]:
+    """(grad + carried error) -> (int8 codes, f32 block scales, new error)."""
+    n = flat.shape[0]
+    x = _pad(flat + error)
+    xb = x.reshape(-1, _BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0,
+                        1e-12)
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    deq = (codes.astype(jnp.float32) * scale).reshape(-1)[:n]
+    new_error = (x.reshape(-1)[:n] - deq)
+    return codes.reshape(-1), scale[:, 0], new_error
+
+
+def ef_int8_decompress(codes: Array, scales: Array, n: int) -> Array:
+    xb = codes.reshape(-1, _BLOCK).astype(jnp.float32) * scales[:, None]
+    return xb.reshape(-1)[:n]
+
+
+def compressed_psum(flat: Array, error: Array, axis_name: str):
+    """psum over `axis_name` with int8 payload + error feedback.
+
+    Inside shard_map: each member quantizes its contribution, the int8
+    codes are summed in int32 (psum), and the shared scale statistics are
+    reduced alongside. Returns (reduced f32 gradient, new local error).
+    """
+    codes, scales, new_error = ef_int8_compress(flat, error)
+    # sum of per-member dequantized payloads == dequantize(sum codes) only
+    # for a shared scale; use the max scale across members so codes remain
+    # comparable, then rescale local codes before the integer psum.
+    scale_max = jax.lax.pmax(scales, axis_name)
+    ratio = scales / scale_max
+    codes_rescaled = jnp.round(
+        codes.reshape(-1, _BLOCK).astype(jnp.float32) * ratio[:, None]
+    ).astype(jnp.int32)
+    summed = jax.lax.psum(codes_rescaled, axis_name)
+    out = (summed.astype(jnp.float32) * scale_max[:, None]).reshape(-1)
+    return out[: flat.shape[0]], new_error

@@ -1,0 +1,62 @@
+"""GP-H / GP-X step directions (paper Alg. 1) as pure jittable functions.
+
+Shared by the classic optimizer loop (optim/classic.py, reproduces Fig. 2/3)
+and the training-time preconditioner (optim/gp_precond.py). Both take the
+observation history X, G as (N, D) matrices — N is the bounded history m.
+
+GP-H (Sec. 4.1.1): condition a gradient-GP on (X, G), read off the
+posterior-mean Hessian at x_t (Eq. 12, diag + rank-2N), return
+-H^{-1} g_t via the factored Woodbury solve (HessianOperator.solve).
+
+GP-X (Sec. 4.1.2 / Eq. 13): FLIP inputs and outputs — condition a GP whose
+inputs are the observed gradients and whose observations are displacements
+X - x_t, then query the posterior mean at g = 0. The returned step is
+x̄* - x_t.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import (build_factors, get_kernel, infer_optimum,
+                        posterior_hessian, woodbury_solve)
+
+Array = jnp.ndarray
+
+
+def gph_direction(
+    X: Array, G: Array, x_t: Array, g_t: Array, *,
+    kernel: str = "rbf", lam=1.0, noise: float = 0.0, jitter: float = 1e-8,
+) -> Array:
+    """Quasi-Newton step -H̄(x_t)^{-1} g_t from gradient history (X, G)."""
+    spec = get_kernel(kernel)
+    f = build_factors(spec, X, lam=lam, noise=noise)
+    Z = woodbury_solve(spec, f, G, jitter=jitter)
+    H = posterior_hessian(spec, x_t, f, Z)
+    return -H.solve(g_t, jitter=jitter)
+
+
+def gpx_direction(
+    X: Array, G: Array, x_t: Array, *,
+    kernel: str = "rbf", lam=1.0, noise: float = 0.0, jitter: float = 1e-8,
+) -> Array:
+    """Step towards the inferred optimum x̄*(g=0) (flipped inference)."""
+    spec = get_kernel(kernel)
+    f_g = build_factors(spec, G, lam=lam, noise=noise)
+    Z = woodbury_solve(spec, f_g, X - x_t, jitter=jitter)
+    x_star = infer_optimum(spec, f_g, Z, x_t)
+    return x_star - x_t
+
+
+def auto_lengthscale(X: Array, factor: float = 10.0) -> Array:
+    """Isotropic Λ = 1 / (factor * mean pairwise squared distance).
+
+    The paper fixes ℓ² = 10·D for the D-dim Rosenbrock (Λ = 1/(10D) · I,
+    App. F.2); at training time the scale of parameter moves varies wildly,
+    so we set ℓ² = factor * mean ||x_a - x_b||² from the live history —
+    the same r statistics the Gram factors need anyway.
+    """
+    sq = jnp.sum(X * X, axis=1)
+    r = sq[:, None] + sq[None, :] - 2.0 * (X @ X.T)
+    n = X.shape[0]
+    mean_r = jnp.sum(jnp.maximum(r, 0.0)) / jnp.maximum(n * (n - 1), 1)
+    return 1.0 / jnp.maximum(factor * mean_r, 1e-20)

@@ -1,0 +1,101 @@
+"""GP-preconditioned training optimizer (the paper's method as a first-class
+distributed optimizer).
+
+Maintains a bounded history of m flattened (params, grads) pairs — two
+(m, D) matrices sharded over the WHOLE mesh like every D-vector — and
+produces a quasi-Newton step from the nonparametric Hessian posterior
+(GP-H) or the flipped optimum inference (GP-X). Until the history buffer
+fills, it falls back to plain momentum.
+
+Why this is cheap at scale (DESIGN.md sec. 2): all O(D) work in the GP
+solve is the skinny contraction X̃ᵀΛV; under jit+GSPMD with D sharded, the
+per-step collective cost on top of the gradient all-reduce is a handful of
+m×m psums — O(m²) bytes, independent of D and of chip count.
+
+State layout: ring buffers xs, gs of shape (m, D_pad) f32, a scalar count,
+and the fallback momentum buffer.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.flat import FlatSpec, flatten_pytree, make_flat_spec, unflatten_pytree
+
+from .gp_directions import auto_lengthscale, gph_direction, gpx_direction
+from .optimizers import Optimizer
+
+Array = jnp.ndarray
+
+
+def gp_precond(
+    lr: float = 1.0,
+    *,
+    history: int = 6,
+    mode: str = "gph",            # 'gph' | 'gpx'
+    kernel: str = "rbf",
+    lengthscale_factor: float = 10.0,
+    noise: float = 1e-6,
+    fallback_lr: float = 3e-4,
+    fallback_beta: float = 0.9,
+    max_step_rms: float = 1e-2,
+    pad_to: int = 1,
+) -> Optimizer:
+    """GP-H/GP-X as a drop-in pytree optimizer (trust-region-clipped)."""
+
+    def init(params):
+        spec = make_flat_spec(params, pad_to=pad_to)
+        d = spec.padded
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "count": jnp.zeros((), jnp.int32),
+            "xs": jnp.zeros((history, d), jnp.float32),
+            "gs": jnp.zeros((history, d), jnp.float32),
+            "m": jnp.zeros((d,), jnp.float32),
+        }
+
+    def update(grads, state, params):
+        spec = make_flat_spec(params, pad_to=pad_to)
+        x_t = flatten_pytree(params, spec)
+        g_t = flatten_pytree(grads, spec)
+
+        # ring-buffer append (shift up, write last)
+        xs = jnp.concatenate([state["xs"][1:], x_t[None]], axis=0)
+        gs = jnp.concatenate([state["gs"][1:], g_t[None]], axis=0)
+        count = jnp.minimum(state["count"] + 1, history)
+        m_buf = fallback_beta * state["m"] + g_t
+
+        def gp_branch(_):
+            lam = auto_lengthscale(xs, lengthscale_factor)
+            if mode == "gph":
+                d_ = gph_direction(xs, gs, x_t, g_t, kernel=kernel, lam=lam,
+                                   noise=noise)
+            else:
+                d_ = gpx_direction(xs, gs, x_t, kernel=kernel, lam=lam,
+                                   noise=noise)
+                # descent safeguard (paper Alg. 1: flip if uphill)
+                d_ = jnp.where(jnp.vdot(d_, g_t) > 0, -d_, d_)
+            # trust region: clip update RMS; reject non-finite directions
+            d_ = jnp.where(jnp.isfinite(d_), d_, 0.0)
+            rms = jnp.sqrt(jnp.mean(d_ * d_) + 1e-30)
+            d_ = d_ * jnp.minimum(1.0, max_step_rms / rms)
+            return lr * d_
+
+        def fallback_branch(_):
+            return -fallback_lr * m_buf
+
+        upd = jax.lax.cond(count >= history, gp_branch, fallback_branch,
+                           operand=None)
+        new_flat = x_t + upd
+        new_params = jax.tree_util.tree_map(
+            lambda n, o: n.astype(o.dtype), unflatten_pytree(new_flat, spec),
+            params)
+        return new_params, {
+            "step": state["step"] + 1, "count": count,
+            "xs": xs, "gs": gs, "m": m_buf,
+        }
+
+    return Optimizer(init, update, f"gp_{mode}")

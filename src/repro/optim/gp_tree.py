@@ -1,0 +1,228 @@
+"""Pytree-native GP-H preconditioner: zero-marshalling distributed form.
+
+The flat-vector gp_precond flattens params/grads into one (D,) vector each
+step. Mathematically free — but on a mesh the flatten/unflatten is a
+RESHARD of every parameter (measured: 2.8x the collective bytes of the
+gradient all-reduce itself, EXPERIMENTS.md §Perf iteration 3). The paper's
+own structure says none of that is necessary: every O(D) object appears
+only inside inner products. So this module keeps the (m, D) histories as
+PYTREES of stacked leaves ((m,) + leaf.shape, sharded exactly like the
+leaf) and computes
+
+    <A, B>_ab = sum_leaves tensordot(A_l[a], B_l[b])        (m x m, psum)
+    (M @ H)_l = tensordot(M, H_l, axes=[[1],[0]])           (leaf-local)
+
+— contractions over sharded axes lower to local partials + an m^2-float
+all-reduce; linear combinations are embarrassingly local. The Woodbury /
+Hessian algebra from core/ is re-expressed in those two primitives
+(RBF/stationary kernels; scalar Lambda auto-scaled as in gp_precond).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_kernel
+from repro.core.mvm import l_op, lt_op
+
+from .optimizers import Optimizer
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Tree-of-stacked-leaves primitives
+# ---------------------------------------------------------------------------
+
+
+def tree_zeros_hist(params: Any, m: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params)
+
+
+def tree_push(hist: Any, new: Any) -> Any:
+    """Ring-buffer append along the leading axis."""
+    return jax.tree_util.tree_map(
+        lambda h, n: jnp.concatenate(
+            [h[1:], n[None].astype(jnp.float32)], axis=0), hist, new)
+
+
+def tree_inner(a: Any, b: Any) -> Array:
+    """(m, n) Gram of two stacked-leaf trees: sum of per-leaf tensordots."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    total = 0.0
+    for la, lb in zip(leaves_a, leaves_b):
+        axes = list(range(1, la.ndim))
+        total = total + jnp.tensordot(la.astype(jnp.float32),
+                                      lb.astype(jnp.float32),
+                                      axes=(axes, axes))
+    return total
+
+
+def tree_lincomb(M: Array, hist: Any) -> Any:
+    """(r, m) @ (m, D)-tree -> (r, D)-tree, leaf-local."""
+    return jax.tree_util.tree_map(
+        lambda h: jnp.tensordot(M, h.astype(jnp.float32), axes=[[1], [0]]),
+        hist)
+
+
+def tree_axpy(alpha: float, x: Any, y: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a, b: alpha * a.astype(jnp.float32) + b.astype(jnp.float32),
+        x, y)
+
+
+def tree_row(hist: Any, i: int) -> Any:
+    return jax.tree_util.tree_map(lambda h: h[i], hist)
+
+
+# ---------------------------------------------------------------------------
+# GP-H direction, leaf-wise (stationary kernels; scalar Lambda)
+# ---------------------------------------------------------------------------
+
+
+def gph_direction_tree(xs: Any, gs: Any, g_t: Any, *, kernel: str = "rbf",
+                       lengthscale_factor: float = 10.0, noise: float = 1e-6,
+                       jitter: float = 1e-8):
+    """-H̄(x_t)^{-1} g_t with histories as stacked-leaf trees.
+
+    Mirrors core.woodbury.woodbury_solve + core.inference.posterior_hessian
+    for stationary kernels, with every O(D) contraction replaced by
+    tree_inner / tree_lincomb. Returns the direction as a params-like tree.
+    """
+    spec = get_kernel(kernel)
+    assert spec.is_stationary, "tree path implements stationary kernels"
+    XX = tree_inner(xs, xs)                     # (m, m), unit-lam gram
+    n = XX.shape[0]
+    sq = jnp.diagonal(XX)
+    r0 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * XX, 0.0)
+    mean_r = jnp.sum(r0) / jnp.maximum(n * (n - 1), 1)
+    lam = 1.0 / jnp.maximum(lengthscale_factor * mean_r, 1e-20)
+    r = lam * r0
+
+    K1e, K2e = spec.k1e(r), spec.k2e(r)
+    dtype = K1e.dtype
+    K1 = K1e + (noise / lam) * jnp.eye(n, dtype=dtype)
+    K1i = jnp.linalg.inv(K1 + jitter * jnp.eye(n, dtype=dtype))
+    S = lam * XX
+
+    GX = tree_inner(gs, xs)                     # (m, m) = G Xᵀ (no Λ —
+    T = lt_op(K1i @ GX)                         # matches core.woodbury)
+
+    def inner(Q):
+        return -Q.T / K2e + lt_op(K1i @ l_op(Q) @ S)
+
+    eye = jnp.eye(n * n, dtype=dtype).reshape(n * n, n, n)
+    A = jax.vmap(inner)(eye).reshape(n * n, n * n).T
+    q = jnp.linalg.solve(A + jitter * jnp.eye(n * n, dtype=dtype),
+                         T.reshape(-1))
+    Q = q.reshape(n, n)
+
+    # Z = K1i @ (G / lam - l_op(Q) @ X)   (m, D)-tree
+    Zg = tree_lincomb(K1i / lam, gs)
+    Zx = tree_lincomb(K1i @ l_op(Q), xs)
+    Z = tree_axpy(-1.0, Zx, Zg)
+
+    # ---- posterior Hessian at x_t = xs[-1] (Eq. 12, stationary) ----
+    # Xt_h[b] = x_t - x_b  as an (m, D)-tree
+    sel = (-jnp.ones((n, n), dtype)
+           .at[jnp.arange(n), jnp.arange(n)].add(0.0))
+    E_last = jnp.zeros((n, n), dtype).at[:, n - 1].set(1.0)
+    Xt_h = tree_lincomb(E_last - jnp.eye(n, dtype=dtype), xs)
+    r_q = lam * jnp.maximum(sq[n - 1] + sq - 2.0 * XX[n - 1], 0.0)  # (m,)
+    mvec = lam * jnp.diagonal(tree_inner(Xt_h, Z))                  # (m,)
+    k2, k3 = spec.k2(r_q), spec.k3(r_q)
+    M = jnp.diag(-8.0 * k3 * mvec)
+    Mh = jnp.diag(-4.0 * k2)
+    diag0 = lam * jnp.sum(-4.0 * k2 * mvec)
+    W = jnp.block([[M, Mh], [Mh, jnp.zeros((n, n), dtype)]])
+
+    # H = diag0*I + P W Pᵀ, P = lam * [Xt_hᵀ, Zᵀ]  (D, 2m)
+    d0 = jnp.where(jnp.abs(diag0) < 1e-8, 1e-8, diag0)
+    # PᵀP (2m, 2m) via tree inners
+    XX_h = tree_inner(Xt_h, Xt_h)
+    XZ_h = tree_inner(Xt_h, Z)
+    ZZ_h = tree_inner(Z, Z)
+    PtP = lam * lam * jnp.block([[XX_h, XZ_h], [XZ_h.T, ZZ_h]])
+    # Pᵀ g  (2m,)
+    g1 = jax.tree_util.tree_map(lambda g: g[None], g_t)
+    Pg = lam * jnp.concatenate([tree_inner(Xt_h, g1)[:, 0],
+                                tree_inner(Z, g1)[:, 0]])
+    k2n = W.shape[0]
+    inner_m = jnp.linalg.inv(W + jitter * jnp.eye(k2n, dtype=dtype)) + \
+        PtP / d0
+    y = jnp.linalg.solve(inner_m + jitter * jnp.eye(k2n, dtype=dtype),
+                         Pg / d0)
+    # dir = -(g/d0 - P @ y / d0);  P @ y = lam*(Xt_hᵀ y1 + Zᵀ y2)
+    Py_x = tree_lincomb((lam * y[:n])[None], Xt_h)      # (1, D)-tree
+    Py_z = tree_lincomb((lam * y[n:])[None], Z)
+    direction = jax.tree_util.tree_map(
+        lambda g, a, b: -(g.astype(jnp.float32) - a[0] - b[0]) / d0,
+        g_t, Py_x, Py_z)
+    return direction
+
+
+# ---------------------------------------------------------------------------
+# Optimizer wrapper
+# ---------------------------------------------------------------------------
+
+
+def gp_precond_tree(
+    lr: float = 1.0,
+    *,
+    history: int = 6,
+    kernel: str = "rbf",
+    lengthscale_factor: float = 10.0,
+    noise: float = 1e-6,
+    fallback_lr: float = 3e-4,
+    fallback_beta: float = 0.9,
+    max_step_rms: float = 1e-2,
+) -> Optimizer:
+    """GP-H preconditioner with pytree-native histories (no flatten)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "count": jnp.zeros((), jnp.int32),
+            "xs": tree_zeros_hist(params, history),
+            "gs": tree_zeros_hist(params, history),
+            "m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        xs = tree_push(state["xs"], params)
+        gs = tree_push(state["gs"], grads)
+        count = jnp.minimum(state["count"] + 1, history)
+        m_buf = jax.tree_util.tree_map(
+            lambda m_, g: fallback_beta * m_ + g.astype(jnp.float32),
+            state["m"], grads)
+
+        def gp_branch(_):
+            d = gph_direction_tree(xs, gs, grads, kernel=kernel,
+                                   lengthscale_factor=lengthscale_factor,
+                                   noise=noise)
+            sq = sum(jnp.sum(jnp.square(l))
+                     for l in jax.tree_util.tree_leaves(d))
+            cnt = sum(l.size for l in jax.tree_util.tree_leaves(d))
+            rms = jnp.sqrt(sq / cnt + 1e-30)
+            scale = jnp.where(jnp.isfinite(rms),
+                              jnp.minimum(1.0, max_step_rms / rms), 0.0)
+            return jax.tree_util.tree_map(
+                lambda l: jnp.where(jnp.isfinite(l), l, 0.0) * scale * lr, d)
+
+        def fb_branch(_):
+            return jax.tree_util.tree_map(lambda m_: -fallback_lr * m_,
+                                          m_buf)
+
+        upd = jax.lax.cond(count >= history, gp_branch, fb_branch, None)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, upd)
+        return new_params, {"step": state["step"] + 1, "count": count,
+                            "xs": xs, "gs": gs, "m": m_buf}
+
+    return Optimizer(init, update, "gp_tree")

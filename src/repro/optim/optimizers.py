@@ -1,0 +1,255 @@
+"""Pytree training optimizers: SGD / momentum / AdamW / 8-bit AdamW /
+Adafactor.
+
+All follow one tiny functional API:
+  opt.init(params) -> state
+  opt.update(grads, state, params) -> (new_params, new_state)
+
+Numerics: moments are stored f32 (adamw), int8 blockwise-quantized
+(adamw8bit — the memory story for the 1T-param kimi config), or factored
+(adafactor — rank-1 second-moment statistics, the default for kimi).
+Weight updates happen in f32 and are cast back to the param dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    name: str = "opt"
+
+
+def _cast_like(new, old):
+    return jax.tree_util.tree_map(lambda n, o: n.astype(o.dtype), new, old)
+
+
+# ---------------------------------------------------------------------------
+# SGD / momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        new = jax.tree_util.tree_map(
+            lambda p, g: p.astype(jnp.float32) - lr * g.astype(jnp.float32),
+            params, grads)
+        return _cast_like(new, params), {"step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr: float = 1e-2, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        m = jax.tree_util.tree_map(
+            lambda m_, g: beta * m_ + g.astype(jnp.float32), state["m"], grads)
+        new = jax.tree_util.tree_map(
+            lambda p, m_: p.astype(jnp.float32) - lr * m_, params, m)
+        return _cast_like(new, params), {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+# ---------------------------------------------------------------------------
+# AdamW (f32 moments)
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, wd: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - b1 ** tf
+        c2 = 1.0 - b2 ** tf
+
+        def upd(p, g, m_, v_):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m_ + (1 - b1) * g
+            v_new = b2 * v_ + (1 - b2) * g * g
+            step_ = lr * (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            p_new = p.astype(jnp.float32) * (1.0 - lr * wd) - step_
+            return p_new, m_new, v_new
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"],
+                                     state["v"])
+        leaves, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        new = jax.tree_util.tree_unflatten(treedef, [l[0] for l in leaves])
+        m = jax.tree_util.tree_unflatten(treedef, [l[1] for l in leaves])
+        v = jax.tree_util.tree_unflatten(treedef, [l[2] for l in leaves])
+        return _cast_like(new, params), {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# 8-bit AdamW: blockwise-quantized moments (block 256, per-block absmax)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+
+
+def _q8(x: Array) -> tuple[Array, Array]:
+    """f32 (n,) -> (int8 codes (n,), f32 scales (n/B,)). n padded by caller."""
+    xb = x.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(-1), scale[:, 0]
+
+
+def _dq8(codes: Array, scale: Array) -> Array:
+    xb = codes.reshape(-1, _BLOCK).astype(jnp.float32) * scale[:, None]
+    return xb.reshape(-1)
+
+
+def _pad_to_block(flat: Array) -> Array:
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def adamw8bit(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+              eps: float = 1e-8, wd: float = 0.0) -> Optimizer:
+    """AdamW with int8 moments: 2 bytes/param optimizer state instead of 8."""
+
+    def init(params):
+        def zq(p):
+            n = _pad_to_block(jnp.zeros((p.size,), jnp.float32)).shape[0]
+            return {
+                "mq": jnp.zeros((n,), jnp.int8),
+                "ms": jnp.zeros((n // _BLOCK,), jnp.float32),
+                "vq": jnp.zeros((n,), jnp.int8),
+                "vs": jnp.zeros((n // _BLOCK,), jnp.float32),
+            }
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "q": jax.tree_util.tree_map(zq, params),
+        }
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - b1 ** tf
+        c2 = 1.0 - b2 ** tf
+
+        def upd(p, g, q):
+            g = _pad_to_block(g.reshape(-1).astype(jnp.float32))
+            m_ = _dq8(q["mq"], q["ms"])
+            v_ = _dq8(q["vq"], q["vs"])
+            m_new = b1 * m_ + (1 - b1) * g
+            v_new = b2 * v_ + (1 - b2) * g * g
+            step_ = lr * (m_new / c1) / (jnp.sqrt(jnp.maximum(v_new, 0) / c2)
+                                         + eps)
+            p_new = (p.astype(jnp.float32) * (1.0 - lr * wd)
+                     - step_[:p.size].reshape(p.shape))
+            mq, ms = _q8(m_new)
+            vq, vs = _q8(v_new)
+            return p_new, {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["q"],
+                                     is_leaf=lambda x: isinstance(x, dict)
+                                     and "mq" in x)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        new = jax.tree_util.tree_unflatten(treedef, [l[0] for l in leaves])
+        q = jax.tree_util.tree_unflatten(treedef, [l[1] for l in leaves])
+        return _cast_like(new, params), {"step": t, "q": q}
+
+    return Optimizer(init, update, "adamw8bit")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; momentum-free) — the 1T-param default
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: float = 3e-4, decay: float = 0.95, eps: float = 1e-30,
+              clip: float = 1.0) -> Optimizer:
+    def init(params):
+        def stats(p):
+            if p.ndim >= 2:
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "s": jax.tree_util.tree_map(
+                stats, params, is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+        }
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                r = decay * s["r"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                c = decay * s["c"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True),
+                                    eps)[..., None]
+                vhat = (r[..., None] * c[..., None, :]) / denom
+                s_new = {"r": r, "c": c}
+            else:
+                vhat = decay * s["v"] + (1 - decay) * g2
+                s_new = {"v": vhat}
+            u = g / jnp.sqrt(vhat + eps)
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip)
+            return p.astype(jnp.float32) - lr * u, s_new
+
+        out = jax.tree_util.tree_map(
+            upd, params, grads, state["s"],
+            is_leaf=lambda x: isinstance(x, dict) and ("r" in x or "v" in x))
+        leaves, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        new = jax.tree_util.tree_unflatten(treedef, [l[0] for l in leaves])
+        s = jax.tree_util.tree_unflatten(treedef, [l[1] for l in leaves])
+        return _cast_like(new, params), {"step": t, "s": s}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, lr: float = 3e-4, **kw) -> Optimizer:
+    table = {
+        "sgd": sgd, "momentum": momentum, "adamw": adamw,
+        "adamw8bit": adamw8bit, "adafactor": adafactor,
+    }
+    if name == "gp":
+        from .gp_precond import gp_precond
+        return gp_precond(lr=lr, **kw)
+    if name == "gp_tree":
+        from .gp_tree import gp_precond_tree
+        return gp_precond_tree(lr=lr, **kw)
+    return table[name](lr=lr, **kw)

@@ -1,0 +1,6 @@
+from .recovery import (FailureInjector, RecoveryConfig, SimulatedFailure,
+                       run_with_recovery)
+from .straggler import masked_gradient_mean
+
+__all__ = ["FailureInjector", "RecoveryConfig", "SimulatedFailure",
+           "run_with_recovery", "masked_gradient_mean"]

@@ -1,0 +1,36 @@
+"""Straggler mitigation: bounded gradient-skip via masked replica mean.
+
+At 1000+ nodes the slowest data-parallel replica sets the step time. The
+standard mitigation is to proceed without replicas that miss a deadline:
+scale the gradient all-reduce by the LIVE replica count instead of the
+nominal one. Inside shard_map that is a psum of (mask * grads) divided by
+psum(mask) — a masked mean. Dropped replicas' examples are skipped (the
+stateless pipeline makes the skip reproducible), and a bounded-staleness
+counter forces a barrier if the same replica lags repeatedly.
+
+This module is the mesh-side arithmetic; the liveness signal itself comes
+from the launcher (deadline timers) or the test injector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def masked_gradient_mean(grads, alive: Array, axis_name: str):
+    """Mean of grads over live members of `axis_name`.
+
+    grads: local gradient pytree (already summed over local examples);
+    alive: scalar 0/1 for THIS member. Returns the pytree averaged over
+    live members only; zero if none are alive (caller should skip step).
+    """
+    n_alive = jax.lax.psum(alive.astype(jnp.float32), axis_name)
+    denom = jnp.maximum(n_alive, 1.0)
+
+    def red(g):
+        contrib = g.astype(jnp.float32) * alive.astype(jnp.float32)
+        return jax.lax.psum(contrib, axis_name) / denom
+
+    return jax.tree_util.tree_map(red, grads), n_alive

@@ -1,0 +1,7 @@
+from .hmc import HMCResult, hmc, leapfrog
+from .gpg_hmc import GPGHMCResult, GradientSurrogate, gpg_hmc
+from .targets import banana_energy, banana_energy_rotated, random_rotation
+
+__all__ = ["HMCResult", "hmc", "leapfrog", "GPGHMCResult",
+           "GradientSurrogate", "gpg_hmc", "banana_energy",
+           "banana_energy_rotated", "random_rotation"]

@@ -1,0 +1,36 @@
+"""Synthetic HMC targets (paper Eq. 30 / App. F.3).
+
+Banana-shaped in (x1, x2), Gaussian in all other dimensions:
+  E(x) = 1/2 (x1^2 + (a0 x1^2 + a1 x2 + a2)^2 + sum_{i>=3} a_i x_i^2),
+  a = [2, -2, 2, ..., 2].
+The rotated variant applies a random orthonormal matrix to the input so
+the isotropic RBF surrogate is NOT axis-aligned with the target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+def banana_energy(x: Array) -> Array:
+    """Potential energy E(x) = -log p(x) (up to a constant); x: (D,)."""
+    a0, a1, a2 = 2.0, -2.0, 2.0
+    quad = x[0] ** 2 + (a0 * x[0] ** 2 + a1 * x[1] + a2) ** 2
+    rest = 2.0 * jnp.sum(x[2:] ** 2)
+    return 0.5 * (quad + rest)
+
+
+def random_rotation(d: int, seed: int) -> Array:
+    rng = np.random.RandomState(seed)
+    q, _ = np.linalg.qr(rng.randn(d, d))
+    return jnp.asarray(q)
+
+
+def banana_energy_rotated(R: Array):
+    def e(x: Array) -> Array:
+        return banana_energy(R @ x)
+
+    return e

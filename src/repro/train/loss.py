@@ -1,0 +1,26 @@
+"""Next-token cross-entropy loss (all families; f32 logits).
+
+MoE aux (load-balance) loss enters with a standard 0.01 coefficient.
+The last position has no target and is masked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+AUX_COEF = 0.01
+
+
+def lm_loss(model, params, batch: dict):
+    logits, aux = model.logits(params, batch)          # (B, S, V) f32
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1, :]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    tgt_logit = jnp.take_along_axis(lg, targets[..., None],
+                                    axis=-1)[..., 0]
+    ce = jnp.mean(logz - tgt_logit)
+    loss = ce + AUX_COEF * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}

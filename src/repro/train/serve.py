@@ -1,0 +1,100 @@
+"""Serving step builders: prefill and one-token decode, sharding-annotated.
+
+decode_* shapes lower `serve_step` — one new token against a KV cache of
+seq_len — NOT train_step (assignment contract). The cache is donated so
+steady-state decode is allocation-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (SHAPES, ModelConfig, batch_specs, build_model,
+                          set_activation_rules)
+
+from .sharding import (batch_partition_specs, cache_partition_specs,
+                       param_named_shardings, sanitize_spec_tree)
+
+
+@dataclasses.dataclass
+class ServeBundle:
+    step: Callable
+    abstract_params: Any
+    abstract_inputs: tuple
+    in_shardings: tuple
+    model: Any
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, *,
+                       shape: str = "prefill_32k") -> ServeBundle:
+    model = build_model(cfg)
+    set_activation_rules(mesh, cfg.seq_shard_activations)
+    ss = SHAPES[shape]
+    pa, axes = model.abstract()
+    p_shard = param_named_shardings(mesh, axes, pa)
+    ba = batch_specs(cfg, shape)
+    b_pspecs = sanitize_spec_tree(batch_partition_specs(cfg, ba, mesh), ba,
+                                  mesh)
+    b_shard = {k: NamedSharding(mesh, v) for k, v in b_pspecs.items()}
+
+    def fn(params, batch):
+        return model.prefill(params, batch, ss.seq_len)
+
+    cache_abs = jax.eval_shape(lambda: model.init_cache(ss.global_batch,
+                                                        ss.seq_len))
+    c_specs = sanitize_spec_tree(
+        cache_partition_specs(cache_abs, mesh, ss.global_batch), cache_abs,
+        mesh)
+    c_shard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), c_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                     out_shardings=(NamedSharding(mesh, P()), c_shard))
+    return ServeBundle(step=jitted, abstract_params=pa,
+                       abstract_inputs=(ba,), in_shardings=(p_shard, b_shard),
+                       model=model)
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, *,
+                      shape: str = "decode_32k",
+                      donate: bool = True) -> ServeBundle:
+    model = build_model(cfg)
+    set_activation_rules(mesh, cfg.seq_shard_activations)
+    ss = SHAPES[shape]
+    pa, axes = model.abstract()
+    p_shard = param_named_shardings(mesh, axes, pa)
+
+    cache_abs = jax.eval_shape(lambda: model.init_cache(ss.global_batch,
+                                                        ss.seq_len))
+    c_specs = sanitize_spec_tree(
+        cache_partition_specs(cache_abs, mesh, ss.global_batch), cache_abs,
+        mesh)
+    c_shard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), c_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    tok_abs = jax.ShapeDtypeStruct((ss.global_batch,), "int32")
+    pos_abs = jax.ShapeDtypeStruct((ss.global_batch,), "int32")
+    from repro.models import batch_axes_of
+    b_ax = batch_axes_of(mesh)
+    import numpy as np
+    b_shards = int(np.prod([mesh.shape[a] for a in b_ax]))
+    tok_spec = P(b_ax) if ss.global_batch % b_shards == 0 and \
+        ss.global_batch >= b_shards else P()
+    tok_shard = NamedSharding(mesh, tok_spec)
+
+    def fn(params, cache, tokens, pos):
+        return model.decode(params, cache, tokens, pos)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, c_shard, tok_shard, tok_shard),
+        out_shardings=(NamedSharding(mesh, P()), c_shard),
+        donate_argnums=(1,) if donate else (),
+    )
+    return ServeBundle(step=jitted, abstract_params=pa,
+                       abstract_inputs=(cache_abs, tok_abs, pos_abs),
+                       in_shardings=(p_shard, c_shard, tok_shard, tok_shard),
+                       model=model)

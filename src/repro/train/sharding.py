@@ -1,0 +1,220 @@
+"""Sharding assignment for every train/serve input: params, optimizer
+state, batches, and serving caches.
+
+Rules (DESIGN.md sec. 6):
+  * params — logical axes -> mesh axes (TP on 'model', FSDP on 'data').
+  * optimizer state — mirrors param sharding; flat (history, D) GP/8-bit
+    buffers shard D over ALL mesh axes; scalars replicated; adafactor
+    factored stats inherit the surviving param axes.
+  * batch — leading batch axis over ('pod','data') / ('data',).
+  * caches — KV: batch over data axes when divisible, cache sequence over
+    'model' (flash-decoding-style sharded-KV attention falls out of the
+    GSPMD reduction); SSM states: heads over 'model'.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, batch_axes_of, param_partition_specs
+from repro.models.attention import KVCache
+from repro.models.mamba2 import MambaState
+
+Array = jnp.ndarray
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim.
+
+    jit input shardings require exact divisibility; real configs have
+    vocab sizes (50280, 256206) and head counts (24, 40) that do not
+    divide 16. Dropping the offending axis replicates ONLY that dim — the
+    other dims keep their sharding. The dry-run roofline notes where this
+    costs memory (qwen2.5's 40 heads pad is the flagship example).
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, parts):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = tuple(entry) if isinstance(entry, tuple) else (entry,)
+        while axes and dim % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+            axes = axes[:-1]
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def sanitize_spec_tree(specs: Any, abstract: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s, a: sanitize_spec(s, a.shape, mesh), specs, abstract,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_named_shardings(mesh: Mesh, axes_tree: Any,
+                          params_abstract: Any = None) -> Any:
+    specs = param_partition_specs(axes_tree)
+    if params_abstract is not None:
+        specs = sanitize_spec_tree(specs, params_abstract, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state
+# ---------------------------------------------------------------------------
+
+
+def _all_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def opt_state_partition_specs(opt_name: str, params_abstract: Any,
+                              param_specs: Any, state_abstract: Any,
+                              mesh: Mesh) -> Any:
+    """PartitionSpec tree matching an optimizer state's structure."""
+    allax = _all_axes(mesh)
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    def flat_spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[-1] % n_dev == 0:
+            return P(*([None] * (leaf.ndim - 1) + [allax]))
+        return P()
+
+    def mirror(sub_state, sub_params_spec):
+        """m/v-style: same structure as params."""
+        return jax.tree_util.tree_map(lambda _, s: s, sub_state,
+                                      sub_params_spec,
+                                      is_leaf=lambda x: isinstance(x, P))
+
+    if opt_name in ("adamw", "momentum"):
+        out = {"step": P()}
+        for k in state_abstract:
+            if k == "step":
+                continue
+            out[k] = mirror(state_abstract[k], param_specs)
+        return out
+    if opt_name == "sgd":
+        return {"step": P()}
+    if opt_name == "adafactor":
+        p_leaves = jax.tree_util.tree_leaves(
+            param_specs, is_leaf=lambda x: isinstance(x, P))
+        pa_leaves = jax.tree_util.tree_leaves(params_abstract)
+
+        def stats_spec(p_sds, spec):
+            parts = list(spec) + [None] * (p_sds.ndim - len(spec))
+            if p_sds.ndim >= 2:
+                return {"r": P(*parts[:-1]), "c": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts)}
+
+        s_tree = state_abstract["s"]
+        flat_s = jax.tree_util.tree_structure(
+            jax.tree_util.tree_map(lambda x: 0, pa_leaves))
+        stats = [stats_spec(p, s) for p, s in zip(pa_leaves, p_leaves)]
+        s_specs = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(
+                params_abstract), stats)
+        return {"step": P(), "s": s_specs}
+    if opt_name == "adamw8bit":
+        def q_spec(q_sub):
+            return {k: flat_spec(v) for k, v in q_sub.items()}
+
+        q_specs = jax.tree_util.tree_map(
+            q_spec, state_abstract["q"],
+            is_leaf=lambda x: isinstance(x, dict) and "mq" in x)
+        return {"step": P(), "q": q_specs}
+    if opt_name == "gp_tree":
+        def hist_spec(sub_params_spec):
+            return jax.tree_util.tree_map(
+                lambda s: P(*((None,) + tuple(s))), sub_params_spec,
+                is_leaf=lambda x: isinstance(x, P))
+
+        return {
+            "step": P(), "count": P(),
+            "xs": hist_spec(param_specs), "gs": hist_spec(param_specs),
+            "m": jax.tree_util.tree_map(lambda s: s, param_specs,
+                                        is_leaf=lambda x: isinstance(x, P)),
+        }
+    if opt_name.startswith("gp"):
+        return {
+            "step": P(), "count": P(),
+            "xs": P(None, allax), "gs": P(None, allax), "m": P(allax),
+        }
+    raise ValueError(f"no sharding rule for optimizer {opt_name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache
+# ---------------------------------------------------------------------------
+
+
+def batch_partition_specs(cfg: ModelConfig, batch_specs: dict,
+                          mesh: Mesh) -> dict:
+    b_ax = batch_axes_of(mesh)
+    out = {}
+    for name, sds in batch_specs.items():
+        out[name] = P(*((b_ax,) + (None,) * (len(sds.shape) - 1)))
+    return out
+
+
+def cache_partition_specs(cache_abstract: Any, mesh: Mesh,
+                          batch_size: int) -> Any:
+    """PartitionSpec tree for a (possibly stacked) cache pytree."""
+    b_ax = batch_axes_of(mesh)
+    b_shards = int(np.prod([mesh.shape[a] for a in b_ax]))
+    shard_batch = batch_size % b_shards == 0 and batch_size >= b_shards
+
+    def kv_spec(c: KVCache) -> KVCache:
+        n_prefix = c.k.ndim - 4
+        pre = (None,) * n_prefix
+        b = b_ax if shard_batch else None
+        seq = "model" if shard_batch else ("model",) + tuple(
+            a for a in b_ax)      # B=1: spread cache seq over everything
+        return KVCache(
+            k=P(*(pre + (b, seq, None, None))),
+            v=P(*(pre + (b, seq, None, None))),
+            pos=P(*(pre + (b, seq))),
+        )
+
+    def mamba_spec(m: MambaState) -> MambaState:
+        n_prefix = m.conv.ndim - 3
+        pre = (None,) * n_prefix
+        b = b_ax if shard_batch else None
+        return MambaState(
+            conv=P(*(pre + (b, None, "model"))),
+            ssm=P(*(pre + (b, "model", None, None))),
+        )
+
+    def cross_spec(leaf) -> P:
+        # enc-dec cross K/V: (L, B, S_src, Hk, hd)
+        b = b_ax if shard_batch else None
+        return P(None, b, "model", None, None)
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            return kv_spec(node)
+        if isinstance(node, MambaState):
+            return mamba_spec(node)
+        if node is None:
+            return None
+        if hasattr(node, "_fields"):        # other NamedTuples (LMCache...)
+            vals = {}
+            for fld in node._fields:
+                v = getattr(node, fld)
+                if fld in ("cross_k", "cross_v") and v is not None:
+                    vals[fld] = cross_spec(v)
+                else:
+                    vals[fld] = walk(v)
+            return type(node)(**vals)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        # bare array leaf
+        return P()
+
+    return walk(cache_abstract)

@@ -1,0 +1,127 @@
+"""Train step builder: loss -> grads -> optimizer, with microbatch grad
+accumulation, sharding-annotated for the production mesh.
+
+The returned bundle carries everything the launcher and the dry-run need:
+the jitted step, abstract input trees (params / opt state / batch) and
+their NamedShardings — so `.lower(*abstract).compile()` is one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (ModelConfig, batch_specs, build_model,
+                          set_activation_rules)
+from repro.optim import Optimizer
+
+from .loss import lm_loss
+from .sharding import (batch_partition_specs, opt_state_partition_specs,
+                       param_named_shardings, sanitize_spec_tree)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def train_step_fn(model, opt: Optimizer, microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        return lm_loss(model, params, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def slice_mb(i):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape((microbatches,
+                                         x.shape[0] // microbatches)
+                                        + x.shape[1:])[i], batch)
+
+            def body(carry, i):
+                acc, lsum = carry
+                (l, m), g = grad_fn(params, slice_mb(i))
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, lsum + l), m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+            metrics["loss"] = loss
+        new_params, new_opt_state = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt_state, metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Jitted step + everything needed to lower it abstractly."""
+
+    step: Callable
+    abstract_params: Any
+    abstract_opt_state: Any
+    abstract_batch: Any
+    in_shardings: tuple
+    model: Any
+    opt: Optimizer
+
+
+def build_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh, *,
+                     shape: str = "train_4k", microbatches: int = 1,
+                     donate: bool = True) -> StepBundle:
+    model = build_model(cfg)
+    set_activation_rules(mesh, cfg.seq_shard_activations)
+
+    pa, axes = model.abstract()
+    p_shard = param_named_shardings(mesh, axes, pa)
+    oa = jax.eval_shape(opt.init, pa)
+    o_specs = opt_state_partition_specs(opt.name, pa,
+                                        jax.tree_util.tree_map(
+                                            lambda s: s.spec, p_shard,
+                                            is_leaf=lambda x: isinstance(
+                                                x, NamedSharding)),
+                                        oa, mesh)
+    o_specs = sanitize_spec_tree(o_specs, oa, mesh)
+    o_shard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), o_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    ba = batch_specs(cfg, shape)
+    b_specs = sanitize_spec_tree(batch_partition_specs(cfg, ba, mesh), ba,
+                                 mesh)
+    b_shard = {k: NamedSharding(mesh, v) for k, v in b_specs.items()}
+
+    fn = train_step_fn(model, opt, microbatches=microbatches)
+    metrics_shard = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return StepBundle(step=jitted, abstract_params=pa, abstract_opt_state=oa,
+                      abstract_batch=ba,
+                      in_shardings=(p_shard, o_shard, b_shard),
+                      model=model, opt=opt)

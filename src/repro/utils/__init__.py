@@ -1,0 +1,10 @@
+"""Shared utilities: flat-parameter adapters, HLO analysis, roofline math."""
+from .flat import FlatSpec, flatten_pytree, unflatten_pytree, tree_size
+from .hlo import collective_bytes, collective_breakdown
+from .roofline import RooflineTerms, TPUv5e, roofline_terms, model_flops
+
+__all__ = [
+    "FlatSpec", "flatten_pytree", "unflatten_pytree", "tree_size",
+    "collective_bytes", "collective_breakdown",
+    "RooflineTerms", "TPUv5e", "roofline_terms", "model_flops",
+]

@@ -1,0 +1,94 @@
+"""Pytree <-> flat-vector adapters for parameter-space GP inference.
+
+The GP gradient machinery (core/) sees models as points in R^D. Training
+code sees pytrees of weight matrices. The adapters here provide a fixed,
+jit-stable mapping between the two, with optional zero-padding of D to a
+multiple of the mesh size so the flat vector shards evenly over every
+device ("every device holds D/num_devices of every state tensor",
+DESIGN.md sec. 6). Padding is mathematically inert for the GP: padded
+coordinates carry zero gradient and a zero row/column of Lambda, so they
+never contribute to any X^T Lambda V contraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static description of a pytree's flat layout (hashable, jit-safe)."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+    total: int          # un-padded logical dimension D
+    padded: int         # D rounded up to a multiple of `pad_to`
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.total
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def make_flat_spec(tree: Any, pad_to: int = 1) -> FlatSpec:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(np.prod(s)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    total = int(sum(sizes))
+    return FlatSpec(
+        treedef=treedef, shapes=shapes, dtypes=dtypes, sizes=sizes,
+        offsets=offsets, total=total, padded=_round_up(max(total, 1), pad_to),
+    )
+
+
+def flatten_pytree(tree: Any, spec: FlatSpec, dtype=jnp.float32) -> Array:
+    """Concatenate all leaves into one (spec.padded,) vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts = [l.reshape(-1).astype(dtype) for l in leaves]
+    flat = jnp.concatenate(parts) if parts else jnp.zeros((0,), dtype)
+    if spec.pad:
+        flat = jnp.pad(flat, (0, spec.pad))
+    return flat
+
+
+def unflatten_pytree(flat: Array, spec: FlatSpec) -> Any:
+    """Inverse of flatten_pytree; drops padding, restores shapes/dtypes."""
+    leaves = []
+    for off, size, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes,
+                                    spec.dtypes):
+        leaves.append(
+            jax.lax.dynamic_slice_in_dim(flat, off, size).reshape(shape).astype(dt)
+        )
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def flat_axis_sharding(mesh, axes: Sequence[str] | None = None):
+    """NamedSharding that shards a flat (padded,) vector over ALL mesh axes.
+
+    The GP optimizer state (X history, G history, moments) is a set of
+    D-vectors; sharding them over the flattened mesh gives D/num_devices
+    per chip and makes every skinny contraction a fully local matmul + one
+    O(N^2) psum.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    names = tuple(mesh.axis_names) if axes is None else tuple(axes)
+    return NamedSharding(mesh, PartitionSpec(names))

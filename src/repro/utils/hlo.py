@@ -1,0 +1,76 @@
+"""HLO-text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT the bytes
+moved by collectives; the dry-run therefore parses the compiled HLO text
+and sums operand sizes of every collective op (system-prompt roofline
+recipe). Parsing is purely lexical — shapes in HLO are printed as e.g.
+``bf16[2048,512]{1,0}`` right after the op name.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "bf16[256,4096]{1,0}" or "f32[]" — dtype then dims.
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:[a-z0-9]*)?|pred)\[([0-9,]*)\]")
+
+# "%name = <shape or tuple> op-name(" ; tolerate leading spaces and "ROOT".
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+("
+    + "|".join(_COLLECTIVE_OPS)
+    + r")(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_breakdown(hlo_text: str) -> dict[str, int]:
+    """Map collective op kind -> summed OUTPUT-shape bytes across the module.
+
+    The output shape is what lands on each participating device and is the
+    standard proxy for per-device link traffic (an all-gather of a shard to
+    a full array writes the full array locally; an all-reduce's result is
+    the tensor itself). ``-done`` variants are skipped so async pairs are
+    not double counted.
+    """
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group(2)}-done(" in line:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Total collective bytes (sum over all kinds) in an HLO module."""
+    return sum(collective_breakdown(hlo_text).values())

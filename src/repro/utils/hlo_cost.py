@@ -1,0 +1,247 @@
+"""Trip-count-aware HLO cost model for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY once —
+for scan-stacked layer models that under-reports FLOPs/bytes by the layer
+count (verified empirically: a 10-iteration scanned matmul reports 10x
+fewer flops than its unrolled twin). Since every model here scans layers
+(and microbatches), we walk the compiled HLO ourselves:
+
+  * while ops carry ``backend_config={"known_trip_count":{"n":"N"}}`` —
+    multiply the body totals by N;
+  * FLOPs: dot ops (2 * prod(output dims) * prod(contracted dims)),
+    recursing into fusion/call bodies;
+  * HBM bytes: per top-level instruction, output bytes + operand bytes,
+    skipping zero-cost views (tuple/gte/bitcast/parameter/constant) and
+    NOT recursing into fusion bodies (fusion internals stay on-chip —
+    that is the point of fusion);
+  * collective bytes: output bytes of all-gather/all-reduce/
+    reduce-scatter/all-to-all/collective-permute at their call site
+    (so collectives inside scanned layers count per iteration).
+
+This is a structural lower-bound-style model: elementwise FLOPs are not
+counted (dot-dominated workloads; the mamba/moe gating undercount is noted
+in EXPERIMENTS.md) and cache reuse is not modeled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->")
+# name = <shape-or-tuple> op( ...   — the shape group is non-greedy "anything
+# up to the last word before the first '('"; tuple shapes may contain
+# /*index=N*/ comments and layout braces, so no attempt to grammar them.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:body|calls|condition|branch_computations)="
+                           r"(\{[^}]*\}|%[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_VIEW_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter",
+             "constant", "iota", "after-all", "add-dependency"}
+
+
+def _shapes_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_dims(shape_text: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0        # pessimistic: output + operand bytes
+    bytes_out: float = 0.0        # optimistic: output bytes only (perfect
+    #                               producer->consumer fusion; TPU backends
+    #                               fuse far more than the CPU backend the
+    #                               dry-run compiles with)
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes_hbm += o.bytes_hbm
+        self.bytes_out += o.bytes_out
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Costs":
+        return Costs(self.flops * f, self.bytes_hbm * f, self.bytes_out * f,
+                     self.coll_bytes * f,
+                     {k: v * f for k, v in self.coll_by_kind.items()})
+
+
+def _parse_computations(hlo: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: list[_Instr] | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line.startswith(" ") and ("(" in line and ")" in line and
+                                         "->" in line and "{" in line):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = []
+                comps[m.group(1)] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(_Instr(name=m.group(1), shape=m.group(2),
+                              op=m.group(3), line=line))
+    return comps
+
+
+def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
+    out_dims = _shape_dims(instr.shape)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    cm = _CONTRACT_RE.search(instr.line)
+    contracted = 1
+    if cm:
+        idxs = [int(i) for i in cm.group(1).split(",") if i != ""]
+        # operand list: first %name after '(' that is a known instruction
+        args = instr.line.split("(", 1)[1]
+        ops = [o for o in _OPERAND_RE.findall(args)]
+        if ops:
+            lhs_shape = shapes.get(ops[0], "")
+            lhs_dims = _shape_dims(lhs_shape)
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+    return 2.0 * out_n * contracted
+
+
+def analyze_hlo(hlo: str) -> Costs:
+    comps = _parse_computations(hlo)
+    shape_of: dict[str, dict[str, str]] = {
+        cname: {i.name: i.shape for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    memo: dict[str, Costs] = {}
+
+    def eval_comp(cname: str) -> Costs:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Costs()          # cycle guard
+        total = Costs()
+        instrs = comps.get(cname, [])
+        local_shapes = shape_of.get(cname, {})
+        for ins in instrs:
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = float(tm.group(1)) if tm else 1.0
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                if body and body in comps:
+                    total += eval_comp(body).scaled(trip)
+                if cond and cond in comps:
+                    total += eval_comp(cond).scaled(trip + 1.0)
+                continue
+            is_async_done = ins.op.endswith("-done")
+            kind = next((c for c in _COLLECTIVES if ins.op.startswith(c)), None)
+            if kind and not is_async_done:
+                b = float(_shapes_bytes(ins.shape))
+                total += Costs(0.0, 0.0, 0.0, b, {kind: b})
+                continue
+            if ins.op in ("fusion", "call", "conditional", "custom-call",
+                          "reduce", "sort", "scatter", "map"):
+                # bytes at the call site; flops from inside (dots in bodies)
+                args = ins.line.split("(", 1)[1]
+                opnds = _OPERAND_RE.findall(args)
+                b = float(_shapes_bytes(ins.shape))
+                for o in opnds:
+                    if o in local_shapes:
+                        b += float(_shapes_bytes(local_shapes[o]))
+                inner = Costs()
+                for callee in re.findall(
+                        r"(?:calls|to_apply|branch_computations)=\{?%?"
+                        r"([\w.\-]+(?:, ?%[\w.\-]+)*)\}?", ins.line):
+                    for cn in _OPERAND_RE.findall("%" + callee.replace(
+                            ", %", " %")):
+                        if cn in comps:
+                            c_in = eval_comp(cn)
+                            inner += Costs(c_in.flops, 0.0, 0.0,
+                                           c_in.coll_bytes,
+                                           dict(c_in.coll_by_kind))
+                total += Costs(inner.flops, b,
+                               float(_shapes_bytes(ins.shape)),
+                               inner.coll_bytes, dict(inner.coll_by_kind))
+                continue
+            if ins.op in _VIEW_OPS:
+                continue
+            if ins.op == "dot":
+                total += Costs(_dot_flops(ins, local_shapes), 0.0, 0.0, 0.0,
+                               {})
+                # dot also reads/writes memory
+            # generic data-moving op: output + operands
+            args = ins.line.split("(", 1)[1]
+            opnds = _OPERAND_RE.findall(args)
+            out_b = float(_shapes_bytes(ins.shape))
+            b = out_b
+            for o in opnds:
+                if o in local_shapes:
+                    b += float(_shapes_bytes(local_shapes[o]))
+            total += Costs(0.0, b, out_b, 0.0, {})
+        memo[cname] = total
+        return total
+
+    # entry computation: the one marked ENTRY, else the last one
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return eval_comp(entry) if entry else Costs()

@@ -1,0 +1,12 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device (assignment contract); multi-device tests spawn
+subprocesses or are guarded by device-count skips."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

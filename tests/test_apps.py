@@ -1,0 +1,95 @@
+"""Application-level tests: probabilistic linear solvers (Fig. 2) and
+HMC / GPG-HMC (Fig. 5) — reduced sizes so the suite stays fast."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.linalg import (cg_solve, hessian_probabilistic_solver,
+                          make_test_matrix, solution_probabilistic_solver)
+from repro.sampling import banana_energy, banana_energy_rotated, gpg_hmc, hmc, random_rotation
+
+
+@pytest.fixture(scope="module")
+def linalg_problem():
+    D = 40
+    A = make_test_matrix(D, seed=0)
+    rng = np.random.RandomState(1)
+    x0 = jnp.asarray(rng.randn(D) * 5)
+    xstar = jnp.asarray(rng.randn(D) - 2)
+    return A, A @ xstar, x0, xstar
+
+
+def test_test_matrix_spectrum(linalg_problem):
+    A, b, x0, xstar = linalg_problem
+    ev = jnp.linalg.eigvalsh(A)
+    assert abs(float(ev.min()) - 0.5) < 1e-6
+    assert abs(float(ev.max()) - 100.0) < 1e-6
+    assert int(jnp.sum(ev > 1.0)) < 20          # ~15 large eigenvalues
+
+
+def test_cg_converges_fast(linalg_problem):
+    A, b, x0, xstar = linalg_problem
+    tr = cg_solve(A, b, x0, tol=1e-5, max_iters=60)
+    assert tr.relres[-1] <= 1e-5
+    assert tr.iters <= 25
+
+
+def test_solution_solver_tracks_cg(linalg_problem):
+    """Paper Fig. 2: the GP-X solution solver performs similarly to CG."""
+    A, b, x0, xstar = linalg_problem
+    cg = cg_solve(A, b, x0, tol=1e-5, max_iters=60)
+    gpx = solution_probabilistic_solver(A, b, x0, tol=1e-5, max_iters=60)
+    assert gpx.relres[-1] <= 1e-5
+    assert gpx.iters <= cg.iters * 2 + 3
+    # kappa = 200: relres 1e-5 bounds x-error by ~kappa*1e-5*|x0 - x*|
+    assert jnp.max(jnp.abs(gpx.x - xstar)) < 0.05
+
+
+def test_hessian_solver_converges_slower(linalg_problem):
+    """Paper: fixed c=0 'compromises the performance' — it still descends
+    but is distinctly slower than CG/GP-X."""
+    A, b, x0, xstar = linalg_problem
+    gph = hessian_probabilistic_solver(A, b, x0, tol=1e-5, max_iters=40)
+    assert gph.relres[-1] < 0.9          # monotone-ish progress
+    cg = cg_solve(A, b, x0, tol=1e-5, max_iters=40)
+    assert gph.relres[-1] > cg.relres[-1]
+
+
+def test_hmc_samples_gaussian_marginals():
+    D = 16
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (D,))
+    res = hmc(banana_energy, x0, key, n_samples=800, eps=0.05, steps=20)
+    assert 0.5 < float(res.accept_rate) <= 1.0
+    # dims >= 3 are N(0, 1/2): check sample std
+    tail = res.samples[200:, 3:]
+    std = jnp.std(tail)
+    assert abs(float(std) - math.sqrt(0.5)) < 0.15
+
+
+def test_gpg_hmc_budget_and_validity():
+    """GPG-HMC trains on ~sqrt(D) true gradients and still produces valid
+    samples with usable acceptance (paper Sec. 5.3 qualitative claim)."""
+    D = 36
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (D,))
+    budget = int(math.sqrt(D))
+    res = gpg_hmc(banana_energy, x0, jax.random.PRNGKey(1), n_samples=300,
+                  eps=0.002, steps=64, lengthscale2=0.4 * D, budget=budget,
+                  max_train_iters=400)
+    assert res.surrogate.X.shape[0] <= budget
+    assert res.n_true_grad_calls <= 3 * budget
+    assert res.accept_rate > 0.3
+    tail = res.samples[100:, 3:]
+    assert abs(float(jnp.std(tail)) - math.sqrt(0.5)) < 0.2
+
+
+def test_rotated_target_energy_invariant():
+    D = 10
+    R = random_rotation(D, seed=4)
+    e = banana_energy_rotated(R)
+    x = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    assert jnp.allclose(e(x), banana_energy(R @ x))

@@ -1,0 +1,100 @@
+"""Posterior inference (paper Sec. 4 / App. D/E): gradient, Hessian,
+optimum — validated against autodiff of the posterior mean field.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (build_factors, cross_grad_matvec, dense_cross_gram,
+                        dense_solve, get_kernel, infer_optimum,
+                        posterior_grad, posterior_hessian, woodbury_solve)
+
+N, D = 5, 7
+LAM = 0.7
+KERNELS = ["rbf", "rq", "poly2", "poly3", "expdot"]
+
+
+def setup(name, rng):
+    spec = get_kernel(name)
+    c = None
+    if not spec.is_stationary:
+        c = jax.random.normal(jax.random.fold_in(rng, 99), (D,)) * 0.1
+    X = jax.random.normal(jax.random.fold_in(rng, 1), (N, D))
+    if name == "poly2":
+        # poly2's Gram is singular for N*D > D(D+1)/2: keep G in its range
+        # so the dense solve stays well-scaled (cf. test_core_solvers)
+        A0 = jax.random.normal(jax.random.fold_in(rng, 11), (D, D))
+        A0 = A0 @ A0.T
+        G = (X - c) @ A0.T
+    else:
+        G = jax.random.normal(jax.random.fold_in(rng, 2), (N, D))
+    Z = dense_solve(spec, X, G, lam=LAM, c=c)
+    return spec, X, G, Z, c
+
+
+@pytest.mark.parametrize("name", KERNELS)
+def test_posterior_grad_matches_dense_cross(name, rng):
+    spec, X, G, Z, c = setup(name, rng)
+    f = build_factors(spec, X, lam=LAM, c=c)
+    Xq = jax.random.normal(jax.random.fold_in(rng, 4), (3, D))
+    pg = posterior_grad(spec, Xq, f, Z)
+    cross = dense_cross_gram(spec, Xq, X, lam=LAM, c=c)
+    pg_d = (cross @ Z.reshape(-1)).reshape(3, D)
+    assert jnp.allclose(pg, pg_d, rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("name", KERNELS)
+def test_posterior_grad_interpolates(name, rng):
+    """At training inputs the posterior mean reproduces observations."""
+    spec, X, G, Z, c = setup(name, rng)
+    f = build_factors(spec, X, lam=LAM, c=c)
+    pg = posterior_grad(spec, X, f, Z)
+    assert jnp.max(jnp.abs(pg - G)) / jnp.max(jnp.abs(G)) < 1e-6
+
+
+@pytest.mark.parametrize("name", KERNELS)
+def test_posterior_hessian_matches_autodiff(name, rng):
+    spec, X, G, Z, c = setup(name, rng)
+    f = build_factors(spec, X, lam=LAM, c=c)
+    xq = jax.random.normal(jax.random.fold_in(rng, 4), (D,))
+
+    def mean_grad(x):
+        return cross_grad_matvec(spec, x[None], f, Z)[0]
+
+    H_ad = jax.jacfwd(mean_grad)(xq)
+    H_op = posterior_hessian(spec, xq, f, Z)
+    assert jnp.max(jnp.abs(H_op.dense() - H_ad)) / \
+        (jnp.max(jnp.abs(H_ad)) + 1e-30) < 1e-8
+
+
+def test_hessian_operator_solve_consistent(rng):
+    spec, X, G, Z, c = setup("rbf", rng)
+    f = build_factors(spec, X, lam=LAM)
+    xq = jax.random.normal(jax.random.fold_in(rng, 4), (D,))
+    H = posterior_hessian(spec, xq, f, Z)
+    rhs = jax.random.normal(jax.random.fold_in(rng, 5), (D,))
+    sol = H.solve(rhs)
+    assert jnp.allclose(H.matvec(sol), rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_infer_optimum_recovers_quadratic_minimum(rng):
+    """GP-X on exact quadratic data with poly2: x(g=0) == x* exactly.
+
+    Paper App. E.2 setup: kernel center c = g_t and prior mean x_t. The
+    flipped field x(g) - x_t = A^{-1}(g - g_t) is then exactly the linear
+    map a zero-mean poly2 gradient-GP represents, so with
+    N >= (D+1)/2 observations the posterior at g = 0 IS x*.
+    """
+    import numpy as np
+
+    spec = get_kernel("poly2")
+    A = np.random.RandomState(0).randn(D, D)
+    A = jnp.asarray(A @ A.T + 0.5 * np.eye(D))
+    xstar = jax.random.normal(jax.random.fold_in(rng, 7), (D,))
+    X = jax.random.normal(jax.random.fold_in(rng, 8), (N + 3, D))
+    G = (X - xstar) @ A.T
+    x_t, g_t = X[-1], G[-1]
+    f_g = build_factors(spec, G, lam=1.0, c=g_t)
+    Z = woodbury_solve(spec, f_g, X - x_t, jitter=1e-12)
+    x_opt = infer_optimum(spec, f_g, Z, x_t)
+    assert jnp.max(jnp.abs(x_opt - xstar)) < 1e-5

@@ -1,0 +1,81 @@
+"""Tests for the trip-count-aware HLO cost model (utils/hlo_cost.py) —
+the dry-run roofline's measurement instrument must itself be validated."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.utils.hlo_cost import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scanned_matmul_flops_exact():
+    hlo = _compile(
+        lambda x: jax.lax.scan(lambda c, _: (c @ c, None), x, None,
+                               length=10)[0],
+        jax.ShapeDtypeStruct((512, 512), jnp.float32))
+    r = analyze_hlo(hlo)
+    assert abs(r.flops - 10 * 2 * 512 ** 3) / (10 * 2 * 512 ** 3) < 1e-6
+
+
+def test_unrolled_equals_scanned():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def unrolled(x):
+        for _ in range(6):
+            x = x @ x
+        return x
+
+    def scanned(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=6)[0]
+
+    fu = analyze_hlo(_compile(unrolled, x)).flops
+    fs = analyze_hlo(_compile(scanned, x)).flops
+    assert abs(fu - fs) / fu < 1e-6
+
+
+def test_nested_scan_multiplies():
+    def inner(c, _):
+        return c @ c, None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=4)
+        return c, None
+
+    hlo = _compile(
+        lambda x: jax.lax.scan(outer, x, None, length=3)[0],
+        jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    r = analyze_hlo(hlo)
+    want = 3 * 4 * 2 * 128 ** 3
+    assert abs(r.flops - want) / want < 1e-6
+
+
+def test_rectangular_dot_flops():
+    hlo = _compile(lambda a, b: a @ b,
+                   jax.ShapeDtypeStruct((64, 1000), jnp.float32),
+                   jax.ShapeDtypeStruct((1000, 32), jnp.float32))
+    r = analyze_hlo(hlo)
+    want = 2 * 64 * 32 * 1000
+    assert abs(r.flops - want) / want < 1e-6
+
+
+def test_bytes_scale_with_trip_count():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def make(n):
+        return _compile(
+            lambda x: jax.lax.scan(lambda c, _: (jnp.sin(c), None), x, None,
+                                   length=n)[0], x)
+
+    b2 = analyze_hlo(make(2)).bytes_hbm
+    b8 = analyze_hlo(make(8)).bytes_hbm
+    assert 2.0 < b8 / b2 < 5.0              # ~4x (plus constant entry cost)
+
+
+def test_optimistic_bytes_leq_pessimistic():
+    hlo = _compile(lambda x: jnp.tanh(x @ x) + 1.0,
+                   jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    r = analyze_hlo(hlo)
+    assert 0 < r.bytes_out <= r.bytes_hbm

@@ -1,0 +1,101 @@
+"""Optimizer behaviour tests: classic pytree optimizers, the GP-precond
+training optimizer, and the paper's Alg. 1 drivers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import get_optimizer, gp_optimize
+from repro.optim.classic import bfgs_optimize, strong_wolfe
+
+
+def quad_problem(d=12, seed=0):
+    rng = np.random.RandomState(seed)
+    A = rng.randn(d, d)
+    A = jnp.asarray(A @ A.T + 0.5 * np.eye(d))
+    xstar = jnp.asarray(rng.randn(d))
+
+    def fg(x):
+        g = A @ (x - xstar)
+        return 0.5 * float((x - xstar) @ g), g
+
+    return fg, xstar, A
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw", "adamw8bit",
+                                  "adafactor"])
+def test_pytree_optimizers_reduce_quadratic(name):
+    fg, xstar, A = quad_problem()
+    params = {"x": jnp.zeros(12, jnp.float32), "y": jnp.ones((3, 4)) * 0.0}
+    # first-order methods need lr < 2/lambda_max (~0.04 here)
+    first_order = name in ("sgd", "momentum")
+    opt = get_optimizer(name, lr=8e-3 if first_order else 0.1)
+    state = opt.init(params)
+
+    def loss(p):
+        x = p["x"] + p["y"].reshape(-1)
+        g = A @ (x - xstar)
+        return 0.5 * (x - xstar) @ g
+
+    l0 = float(loss(params))
+    for _ in range(150 if first_order else 60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    l1 = float(loss(params))
+    assert l1 < (0.5 if first_order else 0.2) * l0, (name, l0, l1)
+
+
+def test_gp_precond_optimizer_runs_and_descends():
+    fg, xstar, A = quad_problem(d=20, seed=1)
+    params = {"x": jnp.zeros(20, jnp.float64)}
+    opt = get_optimizer("gp", lr=1.0, history=4, fallback_lr=5e-2,
+                        max_step_rms=1.0)
+    state = opt.init(params)
+
+    def loss(p):
+        g = A @ (p["x"] - xstar)
+        return 0.5 * (p["x"] - xstar) @ g
+
+    l0 = float(loss(params))
+    for _ in range(30):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+        assert bool(jnp.all(jnp.isfinite(params["x"])))
+    assert float(loss(params)) < l0
+    assert int(state["count"]) == 4          # ring buffer saturates
+
+
+def test_strong_wolfe_satisfies_conditions():
+    fg, xstar, A = quad_problem(d=8, seed=2)
+    f = lambda x: fg(x)[0]
+    x = jnp.zeros(8, jnp.float64)
+    f0, g0 = fg(x)
+    d = -g0
+    alpha, _ = strong_wolfe(f, fg, x, d, f0, g0)
+    assert alpha > 0
+    f1, g1 = fg(x + alpha * d)
+    dg0 = float(g0 @ d)
+    assert f1 <= f0 + 1e-4 * alpha * dg0            # Armijo
+    assert abs(float(g1 @ d)) <= 0.9 * abs(dg0)     # curvature
+
+
+def test_gp_optimize_rosenbrock_matches_paper_setting():
+    """Fig. 3 sanity at D=20 (fast): GP-H and GP-X both reach tol."""
+    D = 20
+
+    def f_np(x):
+        return jnp.sum(x[:-1] ** 2 + 2.0 * (x[1:] - x[:-1] ** 2) ** 2)
+
+    grad = jax.grad(f_np)
+
+    def fg(x):
+        return float(f_np(x)), grad(x)
+
+    x0 = jnp.asarray(np.random.RandomState(3).randn(D)) * 0.5
+    for mode, lam in [("gph", 9.0), ("gpx", 0.05)]:
+        tr = gp_optimize(fg, x0, mode=mode, kernel="rbf", lam=lam, history=2,
+                         max_iters=150, tol_grad=1e-5, noise=1e-10)
+        assert tr.gnorms[-1] <= 1e-5 * tr.gnorms[0] * 10, (mode, tr.gnorms[-1])
+
+    trb = bfgs_optimize(fg, x0, max_iters=150, tol_grad=1e-5)
+    assert trb.gnorms[-1] <= 1e-4 * trb.gnorms[0]

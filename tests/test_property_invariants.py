@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the system's mathematical invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_factors, dense_gram, get_kernel, gram_matvec,
+                        l_op, lt_op, woodbury_solve)
+from repro.utils.flat import flatten_pytree, make_flat_spec, unflatten_pytree
+from repro.utils.hlo import collective_breakdown
+
+KERNEL_NAMES = ["rbf", "rq", "poly2", "expdot"]
+
+
+def _arr(seed, shape, scale=1.0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape) * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 6), d=st.integers(2, 9), seed=st.integers(0, 10**6),
+       kname=st.sampled_from(KERNEL_NAMES))
+def test_gram_symmetry(n, d, seed, kname):
+    """grad-K-grad' is symmetric for any data (it is a covariance)."""
+    spec = get_kernel(kname)
+    X = _arr(seed, (n, d))
+    full = dense_gram(spec, X, lam=0.5)
+    assert np.allclose(full, full.T, rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 6), d=st.integers(2, 9), seed=st.integers(0, 10**6),
+       kname=st.sampled_from(KERNEL_NAMES))
+def test_matvec_linearity(n, d, seed, kname):
+    spec = get_kernel(kname)
+    X = _arr(seed, (n, d))
+    V = _arr(seed + 1, (n, d))
+    W = _arr(seed + 2, (n, d))
+    f = build_factors(spec, X, lam=0.5)
+    mv = lambda v: gram_matvec(f, v, stationary=spec.is_stationary)
+    lhs = mv(2.0 * V - 3.0 * W)
+    rhs = 2.0 * mv(V) - 3.0 * mv(W)
+    assert np.allclose(lhs, rhs, rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 5), d=st.integers(6, 12), seed=st.integers(0, 10**6),
+       kname=st.sampled_from(["rbf", "rq", "expdot"]))
+def test_woodbury_solve_then_matvec_roundtrip(n, d, seed, kname):
+    """Low-data regime (N < D): matvec(solve(G)) == G."""
+    spec = get_kernel(kname)
+    X = _arr(seed, (n, d))
+    G = _arr(seed + 1, (n, d))
+    f = build_factors(spec, X, lam=0.5, noise=1e-8)
+    Z = woodbury_solve(spec, f, G)
+    G2 = gram_matvec(f, Z, stationary=spec.is_stationary)
+    assert np.allclose(G2, G, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 6), seed=st.integers(0, 10**6))
+def test_l_operator_adjointness(n, seed):
+    """<L(Q), M> == <Q, L^T(M)> — the sparse stationary-kernel operator."""
+    Q = _arr(seed, (n, n))
+    M = _arr(seed + 1, (n, n))
+    lhs = float(jnp.sum(l_op(Q) * M))
+    rhs = float(jnp.sum(Q * lt_op(M)))
+    assert abs(lhs - rhs) < 1e-8 * max(1.0, abs(lhs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6),
+       shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                       min_size=1, max_size=4),
+       pad_to=st.sampled_from([1, 4, 16]))
+def test_flatten_roundtrip(seed, shapes, pad_to):
+    tree = {f"w{i}": _arr(seed + i, s) for i, s in enumerate(shapes)}
+    spec = make_flat_spec(tree, pad_to=pad_to)
+    flat = flatten_pytree(tree, spec)
+    assert flat.shape[0] % pad_to == 0
+    back = unflatten_pytree(flat, spec)
+    for k in tree:
+        assert np.allclose(back[k], tree[k])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 50), m=st.integers(1, 20), seed=st.integers(0, 99))
+def test_collective_parser_counts_exact_bytes(n, m, seed):
+    hlo = f"""
+ENTRY %main (p: f32[{n},{m}]) -> f32[{n},{m}] {{
+  %p = f32[{n},{m}] parameter(0)
+  %ar = f32[{n},{m}] all-reduce(%p), replica_groups={{}}
+  ROOT %ag = bf16[{n},{m * 2}] all-gather(%ar), dimensions={{1}}
+}}
+"""
+    got = collective_breakdown(hlo)
+    assert got["all-reduce"] == n * m * 4
+    assert got["all-gather"] == n * m * 2 * 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 5), d=st.integers(2, 8))
+def test_quantized_adam_moments_bounded_error(seed, n, d):
+    """int8 blockwise quantization: |deq(q(x)) - x| <= absmax/127 per block."""
+    from repro.optim.optimizers import _dq8, _pad_to_block, _q8
+
+    x = _pad_to_block(jnp.asarray(
+        np.random.RandomState(seed).randn(n * d) * 10.0).astype(jnp.float32))
+    codes, scales = _q8(x)
+    back = _dq8(codes, scales)
+    blocks = x.reshape(-1, 256)
+    bound = jnp.max(jnp.abs(blocks), axis=1) / 127.0 * 0.5 + 1e-9
+    err = jnp.max(jnp.abs((back - x).reshape(-1, 256)), axis=1)
+    assert bool(jnp.all(err <= bound * 1.01))
