@@ -36,6 +36,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/bench.json")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any executed claim gate fails "
+                         "(used by CI to enforce the perf/repro gates)")
     args = ap.parse_args()
 
     results = {}
@@ -65,8 +68,17 @@ def main() -> None:
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
+    # Per-PR perf trajectory: the roofline-scored benches land at the repo
+    # root so successive PRs can diff them (CI uploads them as artifacts).
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for key in ("kernels", "iterative"):
+        if key in results:
+            with open(os.path.join(root, f"BENCH_{key}.json"), "w") as f:
+                json.dump(results[key], f, indent=1, default=str)
     n_fail = sum(1 for r in results.values() if not r.get("claim_holds"))
     print(f"\n{len(results) - n_fail}/{len(results)} claims hold")
+    if args.strict and n_fail:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

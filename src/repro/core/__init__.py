@@ -1,4 +1,6 @@
 """Core: structured GP inference with derivative observations (the paper)."""
+from . import backend
+from .backend import resolve_backend, set_backend, use_backend
 from .gram import GramFactors, build_factors, dense_gram, dense_cross_gram, pairwise_r, scaled_gram
 from .inference import (
     HessianOperator,
@@ -8,15 +10,24 @@ from .inference import (
     posterior_value,
 )
 from .kernels import KernelSpec, get_kernel, kernel_names
-from .mvm import cross_grad_matvec, cross_value_matvec, gram_matvec, l_op, lt_op
-from .solvers import CGResult, cg, gram_cg_solve
+from .mvm import (
+    cross_grad_matvec,
+    cross_value_matvec,
+    gram_matvec,
+    gram_matvec_multi,
+    l_op,
+    lt_op,
+)
+from .solvers import CGResult, cg, gram_cg_solve, gram_cg_solve_multi
 from .woodbury import dense_solve, poly2_quadratic_solve, woodbury_solve
 
 __all__ = [
-    "GramFactors", "build_factors", "dense_gram", "dense_cross_gram",
-    "pairwise_r", "scaled_gram", "HessianOperator", "infer_optimum",
-    "posterior_grad", "posterior_hessian", "posterior_value", "KernelSpec",
-    "get_kernel", "kernel_names", "cross_grad_matvec", "cross_value_matvec",
-    "gram_matvec", "l_op", "lt_op", "CGResult", "cg", "gram_cg_solve",
-    "dense_solve", "poly2_quadratic_solve", "woodbury_solve",
+    "GramFactors", "backend", "build_factors", "dense_gram",
+    "dense_cross_gram", "pairwise_r", "scaled_gram", "HessianOperator",
+    "infer_optimum", "posterior_grad", "posterior_hessian", "posterior_value",
+    "KernelSpec", "get_kernel", "kernel_names", "cross_grad_matvec",
+    "cross_value_matvec", "gram_matvec", "gram_matvec_multi", "l_op", "lt_op",
+    "CGResult", "cg", "gram_cg_solve", "gram_cg_solve_multi",
+    "resolve_backend", "set_backend", "use_backend", "dense_solve",
+    "poly2_quadratic_solve", "woodbury_solve",
 ]

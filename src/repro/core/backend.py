@@ -1,0 +1,155 @@
+"""Backend dispatch for the O(ND) hot contractions (DESIGN.md §4).
+
+Every pass over an (N, D) array at D ~ 1e6..1e9 is an HBM roofline event,
+so the core inference engine never spells out those contractions in raw
+``jnp`` — it routes them through this module, which picks between
+
+  * ``"pallas"``  — the fused TPU kernels in ``repro.kernels`` (interpret
+    mode on CPU, so the same code path is CI-testable), and
+  * ``"jnp"``     — the plain-jnp oracle forms, bit-identical to the
+    pre-dispatch implementation (full precision under x64; used as the
+    correctness reference everywhere).
+
+Resolution order: ``set_backend()``/``use_backend()`` > the
+``REPRO_BACKEND`` env var > auto (pallas on TPU, jnp elsewhere). The jnp
+path accumulates in the input dtype; the pallas path accumulates in f32
+(the TPU-native contract) — callers that need x64 semantics must be on the
+jnp backend, which is the auto default everywhere x64 exists.
+
+The functions here are the complete vocabulary of O(ND) work in the solve
+path: if a core module multiplies something (N, D)-shaped outside this
+module, that is a bug (grep-enforced in tests/test_backend_dispatch.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as _k
+from repro.kernels import ref as _kref
+
+Array = jnp.ndarray
+
+_VALID = ("jnp", "pallas")
+_FORCED: str | None = None
+
+
+def resolve_backend() -> str:
+    """The backend the next hot contraction will use: 'jnp' | 'pallas'."""
+    if _FORCED is not None:
+        return _FORCED
+    env = os.environ.get("REPRO_BACKEND", "").strip().lower()
+    if env in _VALID:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def set_backend(name: str | None) -> None:
+    """Force the backend ('jnp' | 'pallas'); None restores auto-resolution."""
+    global _FORCED
+    if name is not None and name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID} or None, got {name!r}")
+    _FORCED = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[None]:
+    """Scoped ``set_backend`` — the test suite's parity harness."""
+    prev = _FORCED
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _pallas() -> bool:
+    return resolve_backend() == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# The O(ND) contraction vocabulary
+# ---------------------------------------------------------------------------
+
+def scaled_gram(A: Array, B: Array, lam) -> Array:
+    """(N_a, N_b) matrix  A Lambda B^T — THE hot contraction of the method."""
+    if _pallas():
+        return _k.skinny_gram(A, B, lam)
+    return (A * lam) @ B.T
+
+
+def gram_norms(A: Array, B: Array, lam):
+    """(P, |A|^2_lam rowwise, |B|^2_lam rowwise) in one logical pass."""
+    if _pallas():
+        return _k.fused_gram_norms(A, B, lam)
+    P = (A * lam) @ B.T
+    na = jnp.sum((A * lam) * A, axis=-1)
+    nb = jnp.sum((B * lam) * B, axis=-1)
+    return P, na, nb
+
+
+def pairwise_r(spec, A: Array, B: Array, lam, c=None) -> Array:
+    """r(x_a, x_b) for all pairs; A: (Na, D), B: (Nb, D) -> (Na, Nb)."""
+    if spec.is_stationary:
+        g, da, db = gram_norms(A, B, lam)
+        return jnp.maximum(da[:, None] + db[None, :] - 2.0 * g, 0.0)
+    At = A if c is None else A - c
+    Bt = B if c is None else B - c
+    return scaled_gram(At, Bt, lam)
+
+
+def row_dots(A: Array, B: Array, lam) -> Array:
+    """sum_d A[:, d] * lam[d] * B[:, d] — one (N,) strip, pure VPU traffic.
+
+    Bandwidth-identical on both backends (a single elementwise pass with an
+    axis reduction), so there is no pallas kernel for it.
+    """
+    return jnp.sum((A * lam) * B, axis=-1)
+
+
+def gram_update(K1: Array, small: Array, V: Array, X: Array, lam, *,
+                v_scale=None, noise: float = 0.0) -> Array:
+    """W = (K1 @ (V * v_scale) + small @ X) * lam + noise * V.
+
+    The D-streaming half of Alg. 2 and the workhorse of every exact solve:
+    Woodbury's final assembly runs it with v_scale = 1/lam, lam = 1.
+    """
+    if _pallas():
+        return _k.gram_update(K1, small, V, X, lam, v_scale=v_scale,
+                              noise=noise)
+    Vs = V if v_scale is None else V * v_scale
+    W = (K1 @ Vs + small @ X) * lam
+    if noise:
+        W = W + noise * V
+    return W
+
+
+def kron_precond(K1i: Array, V: Array, lam) -> Array:
+    """B^{-1} vec(V) for the free Kronecker preconditioner B = K1e x Lam.
+
+    V may be (N, D) or stacked (R, N, D); K1i is the (N, N) inverse factor.
+    """
+    if _pallas() and V.ndim == 2:
+        return _k.small_matmul(K1i, V, 1.0 / jnp.asarray(lam))
+    return (K1i @ V) / lam
+
+
+def fused_gram_mvm(K1e: Array, K2e: Array, Xt: Array, V: Array, lam, *,
+                   stationary: bool, noise: float = 0.0) -> Array:
+    """The full Alg.-2 Gram MVM as one fused op (paper Eq. 9).
+
+    Pallas: a single two-phase pallas_call (``kernels.fused_gram_mvm``) —
+    two HBM reads of Xt/V, one write of W, zero materialized intermediates.
+    jnp: the einsum oracle in f32 accumulation. V (N, D) or stacked
+    (R, N, D); the stacked form amortizes the Xt stream across RHS.
+    """
+    if _pallas():
+        return _k.fused_gram_mvm(K1e, K2e, Xt, V, lam, stationary=stationary,
+                                 noise=noise)
+    # Native-dtype oracle (keeps x64 precision; broadcast over stacked RHS).
+    return _kref.gram_mvm_oracle(K1e, K2e, Xt, V, lam, stationary=stationary,
+                                 noise=noise)

@@ -24,9 +24,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from . import backend
 from .gram import GramFactors
 from .kernels import KernelSpec
-from .mvm import l_op, lt_op
+from .mvm import gram_matvec, l_op, lt_op
 
 Array = jnp.ndarray
 
@@ -36,8 +42,12 @@ Array = jnp.ndarray
 # ---------------------------------------------------------------------------
 
 def local_scaled_gram(A: Array, B: Array, lam, axis_names: Sequence[str]) -> Array:
-    """psum_d (A*lam) @ B^T for D-sharded A, B: the N^2-byte collective."""
-    part = (A * lam) @ B.T
+    """psum_d (A*lam) @ B^T for D-sharded A, B: the N^2-byte collective.
+
+    The local partial routes through the backend dispatch, so on TPU each
+    device runs the Pallas skinny-gram kernel over its (N, D_loc) shard.
+    """
+    part = backend.scaled_gram(A, B, lam)
     return jax.lax.psum(part, axis_names)
 
 
@@ -47,9 +57,7 @@ def local_pairwise_r(
 ) -> Array:
     """Pairwise r for D-sharded inputs; one fused psum of (gram, norms)."""
     if spec.is_stationary:
-        part = (A * lam) @ B.T
-        da = jnp.sum((A * lam) * A, axis=-1)
-        db = jnp.sum((B * lam) * B, axis=-1)
+        part, da, db = backend.gram_norms(A, B, lam)
         g, da, db = jax.lax.psum((part, da, db), axis_names)
         return jnp.maximum(da[:, None] + db[None, :] - 2.0 * g, 0.0)
     At = A if c is None else A - c
@@ -75,18 +83,11 @@ def local_gram_matvec(
 
     Identical math to core.mvm.gram_matvec: the only cross-device term is
     M = (Xt*lam) @ V^T; the (N,N) algebra is replicated and the final
-    (N,N) @ (N,D_loc) matmuls are local.
+    (N,N) @ (N,D_loc) update runs locally as one backend.gram_update
+    launch (via gram_matvec's precomputed-gram path).
     """
     M = local_scaled_gram(f.Xt, V, f.lam, axis_names)
-    if stationary:
-        Mt = f.K2e * (M - jnp.diagonal(M)[None, :])
-        small = jnp.diag(jnp.sum(Mt, axis=1)) - Mt
-    else:
-        small = f.K2e * M
-    W = (f.K1e @ V + small @ f.Xt) * f.lam
-    if f.noise:
-        W = W + f.noise * V
-    return W
+    return gram_matvec(f, V, stationary=stationary, gram_xv=M)
 
 
 def local_woodbury_solve(
@@ -107,9 +108,8 @@ def local_woodbury_solve(
         K1 = K1 + (f.noise / lam_s) * jnp.eye(n, dtype=dtype)
     K1i = jnp.linalg.inv(K1 + jitter * jnp.eye(n, dtype=dtype))
     S = local_scaled_gram(f.Xt, f.Xt, f.lam, axis_names)
-    W0 = K1i @ G                                      # local (N, D_loc)
-    T_part = W0 @ f.Xt.T                              # needs psum: skinny
-    T = jax.lax.psum(T_part, axis_names)
+    W0 = backend.kron_precond(K1i, G, 1.0)            # local (N, D_loc)
+    T = local_scaled_gram(W0, f.Xt, 1.0, axis_names)  # skinny + psum
 
     if spec.is_stationary:
         T = lt_op(T)
@@ -127,8 +127,9 @@ def local_woodbury_solve(
     q = jnp.linalg.solve(A + jitter * jnp.eye(n * n, dtype=dtype), T.reshape(-1))
     Q = q.reshape(n, n)
 
-    correction = (l_op(Q) if spec.is_stationary else Q) @ f.Xt
-    return K1i @ (G / f.lam - correction)
+    QL = l_op(Q) if spec.is_stationary else Q
+    return backend.gram_update(K1i, -(K1i @ QL), G, f.Xt, 1.0,
+                               v_scale=1.0 / jnp.asarray(f.lam))
 
 
 def local_cross_grad_matvec(
@@ -140,17 +141,17 @@ def local_cross_grad_matvec(
     if spec.is_stationary:
         r = local_pairwise_r(spec, Xq, f.Xt, lam, axis_names)
         K1e, K2e = spec.k1e(r), spec.k2e(r)
-        m_part = (Xq * lam) @ V.T - jnp.sum((f.Xt * lam) * V, axis=-1)[None, :]
+        m_part = backend.scaled_gram(Xq, V, lam) - \
+            backend.row_dots(f.Xt, V, lam)[None, :]
         m = jax.lax.psum(m_part, axis_names)
         Mt = K2e * m
-        W = K1e @ V + (Xq * jnp.sum(Mt, axis=1)[:, None] - Mt @ f.Xt)
-        return W * lam
+        W = backend.gram_update(K1e, -Mt, V, f.Xt, lam)
+        return W + (Xq * jnp.sum(Mt, axis=1)[:, None]) * lam
     Xqt = Xq if f.c is None else Xq - f.c
     r = local_scaled_gram(Xqt, f.Xt, lam, axis_names)
     K1e, K2e = spec.k1e(r), spec.k2e(r)
     m = local_scaled_gram(Xqt, V, lam, axis_names)
-    W = K1e @ V + (K2e * m) @ f.Xt
-    return W * lam
+    return backend.gram_update(K1e, K2e * m, V, f.Xt, lam)
 
 
 # ---------------------------------------------------------------------------
@@ -169,7 +170,7 @@ def sharded_gram_matvec(mesh: Mesh, spec: KernelSpec):
     lam_spec = P()  # scalar lam replicated; diagonal handled by caller
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(None, None), P(None, None), dspec, lam_spec, dspec),
         out_specs=dspec,
     )
@@ -190,7 +191,7 @@ def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
     dspec = _d_sharding(mesh)
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(dspec, dspec, P()),
         out_specs=dspec,
     )
@@ -199,7 +200,7 @@ def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
         return local_woodbury_solve(spec, f, G, names)
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(dspec, dspec, P(), dspec),
         out_specs=dspec,
     )

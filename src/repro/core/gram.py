@@ -20,6 +20,7 @@ from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
+from . import backend
 from .kernels import KernelSpec
 
 Array = jnp.ndarray
@@ -34,23 +35,20 @@ def scaled_gram(A: Array, B: Array, lam: Array | float) -> Array:
     """(N_a, N_b) matrix  A Lambda B^T  for (N, D)-layout inputs.
 
     This is THE hot contraction of the whole method: every O(D) object only
-    ever appears inside this product. ``repro.kernels.skinny_gram`` is the
-    Pallas TPU kernel for it; this jnp form is the oracle and CPU path.
+    ever appears inside this product. Dispatches through
+    ``core.backend`` — the ``repro.kernels.skinny_gram`` Pallas TPU kernel
+    on the pallas backend, the jnp oracle form elsewhere.
     """
-    return _lam_mul(A, lam) @ B.T
+    return backend.scaled_gram(A, B, lam)
 
 
 def pairwise_r(spec: KernelSpec, A: Array, B: Array, lam, c=None) -> Array:
-    """r(x_a, x_b) for all pairs; A: (Na, D), B: (Nb, D) -> (Na, Nb)."""
-    if spec.is_stationary:
-        g = scaled_gram(A, B, lam)
-        da = jnp.sum(_lam_mul(A, lam) * A, axis=-1)
-        db = jnp.sum(_lam_mul(B, lam) * B, axis=-1)
-        r = da[:, None] + db[None, :] - 2.0 * g
-        return jnp.maximum(r, 0.0)
-    At = A if c is None else A - c
-    Bt = B if c is None else B - c
-    return scaled_gram(At, Bt, lam)
+    """r(x_a, x_b) for all pairs; A: (Na, D), B: (Nb, D) -> (Na, Nb).
+
+    Stationary kernels go through ``backend.gram_norms`` so the gram and
+    both row-norm strips come out of a single pass over A/B.
+    """
+    return backend.pairwise_r(spec, A, B, lam, c=c)
 
 
 class GramFactors(NamedTuple):

@@ -12,11 +12,17 @@ Derivations (this layout; see DESIGN.md):
 The stationary form is paper Alg. 2 with the sparse L operator folded in:
   L (Q)  = diag(rowsum(Q)) - Q
   L^T(M) = diag(M)[:, None] - M          (both O(N^2)).
+
+Every O(ND) contraction routes through ``core.backend``: on the pallas
+backend a full MVM is ONE ``fused_gram_mvm`` launch (no (N, D) or (N, N)
+intermediate ever round-trips HBM); on the jnp backend the three-step
+oracle below runs at native precision.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from . import backend
 from .gram import GramFactors, scaled_gram, pairwise_r
 from .kernels import KernelSpec
 
@@ -33,23 +39,37 @@ def lt_op(M: Array) -> Array:
     return jnp.diagonal(M)[:, None] - M
 
 
+# The (N, N) Hadamard/L-operator algebra of Alg. 2 — O(N^2), never hot.
+# Single jnp definition lives next to the kernel oracles.
+from repro.kernels.ref import small_op as _small_op  # noqa: E402
+
+
 def gram_matvec(f: GramFactors, V: Array, *, stationary: bool, gram_xv: Array | None = None) -> Array:
     """(grad K grad') vec(V) without materializing the Gram matrix.
 
     f.Xt is X-c for dot kernels and X for stationary ones.  ``gram_xv`` lets a
-    caller (e.g. the distributed psum path or a Pallas kernel) supply the
-    precomputed (N, N) contraction (Xt*lam) @ V^T.
+    caller (e.g. the distributed psum path) supply the precomputed (N, N)
+    contraction (Xt*lam) @ V^T — in that case only the D-streaming update
+    half runs (one ``backend.gram_update`` launch). Without it, the pallas
+    backend runs the whole product as a single fused megakernel.
     """
+    if gram_xv is None and backend.resolve_backend() == "pallas":
+        return backend.fused_gram_mvm(f.K1e, f.K2e, f.Xt, V, f.lam,
+                                      stationary=stationary, noise=f.noise)
     M = scaled_gram(f.Xt, V, f.lam) if gram_xv is None else gram_xv
-    if stationary:
-        Mt = f.K2e * (M - jnp.diagonal(M)[None, :])
-        small = jnp.diag(jnp.sum(Mt, axis=1)) - Mt
-    else:
-        small = f.K2e * M
-    W = (f.K1e @ V + small @ f.Xt) * f.lam
-    if f.noise:
-        W = W + f.noise * V
-    return W
+    small = _small_op(f.K2e, M, stationary=stationary)
+    return backend.gram_update(f.K1e, small, V, f.Xt, f.lam, noise=f.noise)
+
+
+def gram_matvec_multi(f: GramFactors, V: Array, *, stationary: bool) -> Array:
+    """Stacked-RHS Gram MVM: V (R, N, D) -> (R, N, D).
+
+    On the pallas backend this is ONE multi-RHS megakernel launch that
+    streams Xt once per phase for all R right-hand sides (CG over Hessian
+    operator columns / HMC predictive gradients rides on this).
+    """
+    return backend.fused_gram_mvm(f.K1e, f.K2e, f.Xt, V, f.lam,
+                                  stationary=stationary, noise=f.noise)
 
 
 def cross_grad_matvec(
@@ -70,18 +90,17 @@ def cross_grad_matvec(
         r = pairwise_r(spec, Xq, f.Xt, lam)
         K1e, K2e = spec.k1e(r), spec.k2e(r)
         # m[q, b] = (x_q - x_b)^T Lam V[b]
-        m = scaled_gram(Xq, V, lam) - jnp.sum((f.Xt * lam) * V, axis=-1)[None, :]
+        m = scaled_gram(Xq, V, lam) - backend.row_dots(f.Xt, V, lam)[None, :]
         Mt = K2e * m
-        W = K1e @ V + (Xq * jnp.sum(Mt, axis=1)[:, None] - Mt @ f.Xt)
-        return W * lam
+        W = backend.gram_update(K1e, -Mt, V, f.Xt, lam)
+        return W + (Xq * jnp.sum(Mt, axis=1)[:, None]) * lam
     Xqt = Xq if f.c is None else Xq - f.c
     r = scaled_gram(Xqt, f.Xt, lam)
     K1e, K2e = spec.k1e(r), spec.k2e(r)
     # block(q,b)^{ij} = K1e Lam^{ij} + K2e [Lam x~_b]^i [Lam x~_q]^j
     # row q: sum_b K1e[q,b] Lam V[b] + sum_b K2e[q,b] (Lam x~_b) (x~_q . Lam V[b])
     m = scaled_gram(Xqt, V, lam)  # m[q,b] = x~_q^T Lam V[b]
-    W = K1e @ V + (K2e * m) @ f.Xt
-    return W * lam
+    return backend.gram_update(K1e, K2e * m, V, f.Xt, lam)
 
 
 def cross_value_matvec(
@@ -103,7 +122,7 @@ def cross_value_matvec(
         r = pairwise_r(spec, Xq, f.Xt, lam)
         k1 = spec.k1(r)
         # sum_b k1[q,b] * (-2) * (x_q - x_b)^T Lam V[b]
-        m = scaled_gram(Xq, V, lam) - jnp.sum((f.Xt * lam) * V, axis=-1)[None, :]
+        m = scaled_gram(Xq, V, lam) - backend.row_dots(f.Xt, V, lam)[None, :]
         return jnp.sum(-2.0 * k1 * m, axis=1)
     Xqt = Xq if f.c is None else Xq - f.c
     r = scaled_gram(Xqt, f.Xt, lam)

@@ -32,6 +32,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from . import backend
 from .gram import GramFactors, scaled_gram
 from .kernels import KernelSpec
 from .mvm import l_op, lt_op
@@ -70,16 +71,17 @@ def woodbury_solve(
         K1 = K1 + (f.noise / lam_s) * jnp.eye(n, dtype=dtype)
     K1i = jnp.linalg.inv(K1 + jitter * jnp.eye(n, dtype=dtype))
     S = scaled_gram(f.Xt, f.Xt, f.lam)
-    W0 = K1i @ G
+    W0 = backend.kron_precond(K1i, G, 1.0)              # K1i @ G, O(N^2 D)
+    T0 = backend.scaled_gram(W0, f.Xt, 1.0)             # W0 @ Xt^T, O(N^2 D)
 
     if spec.is_stationary:
-        T = lt_op(W0 @ f.Xt.T)
+        T = lt_op(T0)
 
         def inner(Q):
             return -Q.T / f.K2e + lt_op(K1i @ l_op(Q) @ S)
 
     else:
-        T = W0 @ f.Xt.T
+        T = T0
 
         def inner(Q):
             return Q.T / f.K2e + K1i @ Q @ S
@@ -88,9 +90,11 @@ def woodbury_solve(
     q = jnp.linalg.solve(A + jitter * jnp.eye(n * n, dtype=dtype), T.reshape(-1))
     Q = q.reshape(n, n)
 
-    correction = (l_op(Q) if spec.is_stationary else Q) @ f.Xt
-    Z = K1i @ (G / f.lam - correction)
-    return Z
+    # Z = K1i @ (G/lam - QL @ Xt) as ONE fused D-stream: the K1i factor is
+    # pushed through both terms so no (N, D) intermediate materializes.
+    QL = l_op(Q) if spec.is_stationary else Q
+    return backend.gram_update(K1i, -(K1i @ QL), G, f.Xt, 1.0,
+                               v_scale=1.0 / jnp.asarray(f.lam))
 
 
 def poly2_quadratic_solve(
@@ -118,10 +122,12 @@ def poly2_quadratic_solve(
     Sj = S + jitter * eye
     # Sa = Xt Gt^T  (= X~ A X~^T on a true quadratic, symmetric);
     # Q = 1/2 Sa S^{-1} solves F(Q) = T analytically (paper App. C.1).
-    Sa = f.Xt @ Gt.T
+    Sa = backend.scaled_gram(f.Xt, Gt, 1.0)
     Q = 0.5 * jnp.linalg.solve(Sj.T, Sa.T).T          # Sa @ S^{-1}
     K1i = jnp.linalg.inv(f.K1e + jitter * eye)
-    return K1i @ (Gt / f.lam - Q @ f.Xt)
+    # K1i @ (Gt/lam - Q @ Xt), fused into one D-stream as in woodbury_solve.
+    return backend.gram_update(K1i, -(K1i @ Q), Gt, f.Xt, 1.0,
+                               v_scale=1.0 / jnp.asarray(f.lam))
 
 
 def dense_solve(spec: KernelSpec, X: Array, G: Array, lam=1.0, c=None,

@@ -1,19 +1,28 @@
-"""Pallas TPU kernels for the paper's compute hot spots (see DESIGN.md §3).
+"""Pallas TPU kernels for the paper's compute hot spots (see DESIGN.md §4).
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
 padded, jit'd public entry points. Validated in interpret mode on CPU and
-shaped for TPU v5e VMEM/MXU on the real target.
+shaped for TPU v5e VMEM/MXU on the real target. The core inference engine
+reaches these through ``repro.core.backend`` — never call them from core
+modules directly, so the jnp oracle path stays a drop-in fallback.
 """
 from .ops import (
+    DEFAULT_VMEM_BUDGET,
+    fused_gram_mvm,
+    fused_gram_mvm_multi,
+    fused_gram_mvm_ref,
     fused_gram_norms,
     fused_gram_norms_ref,
     gram_update,
     gram_update_ref,
     skinny_gram,
     skinny_gram_ref,
+    small_matmul,
 )
 
 __all__ = [
+    "DEFAULT_VMEM_BUDGET",
+    "fused_gram_mvm", "fused_gram_mvm_multi", "fused_gram_mvm_ref",
     "fused_gram_norms", "fused_gram_norms_ref", "gram_update",
-    "gram_update_ref", "skinny_gram", "skinny_gram_ref",
+    "gram_update_ref", "skinny_gram", "skinny_gram_ref", "small_matmul",
 ]

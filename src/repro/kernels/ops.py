@@ -3,8 +3,17 @@
 Handles the padding contract (N to sublane multiples, D to block multiples,
 zero-padded lam so padding cancels exactly), backend dispatch (interpret
 mode on CPU — executes the kernel bodies in Python for validation), and
-fallback to the jnp reference for tiny shapes where kernel launch overhead
-dominates.
+block-size selection under an explicit VMEM budget.
+
+Block-size policy (``_pick_block_d``, DESIGN.md §4.4): the D-block is a lane
+multiple chosen so that (a) the streamed VMEM footprint — double-buffered
+input blocks plus the output block, minus the resident (N, N) operands and
+scratch — fits ``vmem_budget_bytes``, and (b) padding waste
+(round_up(D, block) - D) / D stays under ~12.5% whenever a lane-multiple
+block can achieve it. For D just above a power-of-two boundary (e.g.
+D = 1025) a fixed 1024-block would nearly double the streamed bytes; the
+scan from the VMEM cap downward picks the largest block that keeps the pad
+bounded instead.
 """
 from __future__ import annotations
 
@@ -14,13 +23,19 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .fused_gram_mvm import fused_gram_mvm_multi_padded, fused_gram_mvm_padded
 from .fused_gram_norms import fused_gram_norms_padded
-from .gram_update import gram_update_padded
+from .gram_update import gram_update_padded, small_matmul_padded
 from .skinny_gram import skinny_gram_padded
 
 Array = jnp.ndarray
 
 _SUBLANE = 8
+_LANE = 128
+# Half of a TPU v5e core's ~16 MB VMEM: leaves headroom for Mosaic's own
+# buffers and the semaphore/control state of the streaming pipeline.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+_MAX_PAD_WASTE = 0.125
 
 
 def _interpret_default() -> bool:
@@ -28,76 +43,213 @@ def _interpret_default() -> bool:
 
 
 def _pad_rows(A: Array, to: int) -> Array:
-    n = A.shape[0]
-    return A if n == to else jnp.pad(A, ((0, to - n), (0, 0)))
+    n = A.shape[-2]
+    if n == to:
+        return A
+    pad = [(0, 0)] * (A.ndim - 2) + [(0, to - n), (0, 0)]
+    return jnp.pad(A, pad)
+
+
+def _pad_cols(A: Array, to: int) -> Array:
+    d = A.shape[-1]
+    if d == to:
+        return A
+    pad = [(0, 0)] * (A.ndim - 1) + [(0, to - d)]
+    return jnp.pad(A, pad)
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def _pick_block_d(d: int, block_d: int) -> int:
-    # shrink the block for small D so padding stays bounded
-    while block_d > 128 and d <= block_d // 2:
-        block_d //= 2
-    return block_d
+def _pick_block_d(
+    d: int,
+    block_d: int = 1024,
+    *,
+    stream_rows: int = 0,
+    resident_bytes: int = 0,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+    max_waste: float = _MAX_PAD_WASTE,
+) -> int:
+    """Choose the D-block size for a lane-streaming kernel.
+
+    ``stream_rows`` counts the f32 rows that move per lane of the block
+    (inputs and outputs together); each is double-buffered. ``resident_bytes``
+    is the VMEM taken by whole-array operands (K1e/K2e/scratch) that do not
+    scale with the block.
+    """
+    cap = block_d
+    if stream_rows:
+        min_stream = _LANE * 8 * stream_rows  # one 128-lane double-buffered block
+        if resident_bytes + min_stream > vmem_budget_bytes:
+            raise ValueError(
+                f"VMEM budget exhausted before streaming: resident operands "
+                f"take {resident_bytes} B + minimum stream {min_stream} B > "
+                f"budget {vmem_budget_bytes} B (N too large for this kernel "
+                f"family — the (N, N) operands must fit on-chip)")
+        cap = min(cap, (vmem_budget_bytes - resident_bytes) // (8 * stream_rows))
+    cap = max(_LANE, cap // _LANE * _LANE)
+    if d <= cap:
+        # One grid step; round_up(d, LANE) is the minimum possible padding.
+        return max(_LANE, _round_up(d, _LANE))
+    b = cap
+    while b >= _LANE:
+        if (_round_up(d, b) - d) / d <= max_waste:
+            return b
+        b -= _LANE
+    return _LANE
+
+
+def _pad_d_inputs(arrays, lam, d: int, dp: int):
+    """Zero-pad the D (lane) axis of each array and of lam to dp."""
+    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
+    return [_pad_cols(a, dp) for a in arrays], jnp.pad(lam_f, (0, dp - d))
 
 
 def skinny_gram(A: Array, B: Array, lam, *, block_d: int = 1024,
-                interpret: bool | None = None) -> Array:
+                interpret: bool | None = None,
+                vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> Array:
     """P = (A * lam) @ B^T, f32 accumulation; A: (Na, D), B: (Nb, D)."""
     interpret = _interpret_default() if interpret is None else interpret
     na, d = A.shape
     nb = B.shape[0]
-    block_d = _pick_block_d(d, block_d)
-    dp = _round_up(d, block_d)
     nap, nbp = _round_up(na, _SUBLANE), _round_up(nb, _SUBLANE)
-    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
-    lam_p = jnp.pad(lam_f, (0, dp - d))
-    Ap = _pad_rows(jnp.pad(A, ((0, 0), (0, dp - d))), nap)
-    Bp = _pad_rows(jnp.pad(B, ((0, 0), (0, dp - d))), nbp)
+    block_d = _pick_block_d(d, block_d, stream_rows=nap + nbp + 1,
+                            resident_bytes=4 * nap * nbp,
+                            vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    (Ap, Bp), lam_p = _pad_d_inputs([A, B], lam, d, dp)
+    Ap, Bp = _pad_rows(Ap, nap), _pad_rows(Bp, nbp)
     P = skinny_gram_padded(Ap, Bp, lam_p, block_d=block_d, interpret=interpret)
     return P[:na, :nb]
 
 
 def gram_update(K1: Array, M: Array, V: Array, X: Array, lam, *,
-                block_d: int = 1024, interpret: bool | None = None) -> Array:
-    """W = (K1 @ V + M @ X) * lam; V, X: (N, D) streamed."""
+                v_scale=None, noise: float = 0.0, block_d: int = 1024,
+                interpret: bool | None = None,
+                vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> Array:
+    """W = (K1 @ (V*v_scale) + M @ X) * lam + noise*V; V, X: (N, D) streamed.
+
+    K1/M may be rectangular (Nq, N) (cross-covariance query path).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     n, d = V.shape
-    block_d = _pick_block_d(d, block_d)
-    dp = _round_up(d, block_d)
+    nq = K1.shape[0]
     np_ = _round_up(n, _SUBLANE)
-    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
-    lam_p = jnp.pad(lam_f, (0, dp - d))
-    Vp = _pad_rows(jnp.pad(V, ((0, 0), (0, dp - d))), np_)
-    Xp = _pad_rows(jnp.pad(X, ((0, 0), (0, dp - d))), np_)
-    K1p = jnp.pad(K1, ((0, np_ - n), (0, np_ - n)))
-    Mp = jnp.pad(M, ((0, np_ - n), (0, np_ - n)))
-    W = gram_update_padded(K1p, Mp, Vp, Xp, lam_p, block_d=block_d,
-                           interpret=interpret)
-    return W[:n, :d]
+    nqp = _round_up(nq, _SUBLANE)
+    block_d = _pick_block_d(d, block_d, stream_rows=2 * np_ + nqp + 2,
+                            resident_bytes=8 * nqp * np_,
+                            vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    vs = jnp.ones((d,), jnp.float32) if v_scale is None else \
+        jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32), (d,))
+    (Vp, Xp, vs_p), lam_p = _pad_d_inputs([V, X, vs], lam, d, dp)
+    Vp, Xp = _pad_rows(Vp, np_), _pad_rows(Xp, np_)
+    K1p = jnp.pad(K1, ((0, nqp - nq), (0, np_ - n)))
+    Mp = jnp.pad(M, ((0, nqp - nq), (0, np_ - n)))
+    W = gram_update_padded(K1p, Mp, Vp, Xp, lam_p, vs_p, block_d=block_d,
+                           interpret=interpret, noise=float(noise))
+    return W[:nq, :d]
+
+
+def small_matmul(K: Array, V: Array, scale=1.0, *, block_d: int = 1024,
+                 interpret: bool | None = None,
+                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> Array:
+    """W = (K @ V) * scale; K: (Nq, N), V: (N, D) streamed, scale per-lane.
+
+    The Kronecker-preconditioner application (scale = 1/lam): one read of
+    V, one write of W — no dead operands (cf. gram_update)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = V.shape
+    nq = K.shape[0]
+    np_ = _round_up(n, _SUBLANE)
+    nqp = _round_up(nq, _SUBLANE)
+    block_d = _pick_block_d(d, block_d, stream_rows=np_ + nqp + 1,
+                            resident_bytes=4 * nqp * np_,
+                            vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    s = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (d,))
+    (Vp, sp), _ = _pad_d_inputs([V, s], 0.0, d, dp)
+    Vp = _pad_rows(Vp, np_)
+    Kp = jnp.pad(K, ((0, nqp - nq), (0, np_ - n)))
+    W = small_matmul_padded(Kp, Vp, sp, block_d=block_d, interpret=interpret)
+    return W[:nq, :d]
 
 
 def fused_gram_norms(A: Array, B: Array, lam, *, block_d: int = 1024,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET):
     """(P, norms_A, norms_B) in one pass; used for stationary pairwise r."""
     interpret = _interpret_default() if interpret is None else interpret
     na, d = A.shape
     nb = B.shape[0]
-    block_d = _pick_block_d(d, block_d)
-    dp = _round_up(d, block_d)
     nap, nbp = _round_up(na, _SUBLANE), _round_up(nb, _SUBLANE)
-    lam_f = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (d,))
-    lam_p = jnp.pad(lam_f, (0, dp - d))
-    Ap = _pad_rows(jnp.pad(A, ((0, 0), (0, dp - d))), nap)
-    Bp = _pad_rows(jnp.pad(B, ((0, 0), (0, dp - d))), nbp)
+    block_d = _pick_block_d(d, block_d, stream_rows=nap + nbp + 1,
+                            resident_bytes=4 * (nap * nbp + nap + nbp),
+                            vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    (Ap, Bp), lam_p = _pad_d_inputs([A, B], lam, d, dp)
+    Ap, Bp = _pad_rows(Ap, nap), _pad_rows(Bp, nbp)
     P, na_o, nb_o = fused_gram_norms_padded(Ap, Bp, lam_p, block_d=block_d,
                                             interpret=interpret)
     return P[:na, :nb], na_o[:na, 0], nb_o[:nb, 0]
+
+
+def fused_gram_mvm(K1e: Array, K2e: Array, Xt: Array, V: Array, lam, *,
+                   stationary: bool, noise: float = 0.0, block_d: int = 1024,
+                   interpret: bool | None = None,
+                   vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> Array:
+    """Full Alg.-2 Gram MVM, single pallas_call (see fused_gram_mvm.py).
+
+    V of shape (N, D) -> W (N, D); stacked (R, N, D) RHS dispatch to the
+    multi-RHS kernel which amortizes the Xt stream across R.
+    """
+    if V.ndim == 3:
+        return fused_gram_mvm_multi(K1e, K2e, Xt, V, lam,
+                                    stationary=stationary, noise=noise,
+                                    block_d=block_d, interpret=interpret,
+                                    vmem_budget_bytes=vmem_budget_bytes)
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = V.shape
+    np_ = _round_up(n, _SUBLANE)
+    block_d = _pick_block_d(d, block_d, stream_rows=3 * np_ + 1,
+                            resident_bytes=12 * np_ * np_,
+                            vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    (Xp, Vp), lam_p = _pad_d_inputs([Xt, V], lam, d, dp)
+    Xp, Vp = _pad_rows(Xp, np_), _pad_rows(Vp, np_)
+    K1p = jnp.pad(K1e, ((0, np_ - n), (0, np_ - n)))
+    K2p = jnp.pad(K2e, ((0, np_ - n), (0, np_ - n)))
+    W = fused_gram_mvm_padded(K1p, K2p, Xp, Vp, lam_p, stationary=stationary,
+                              noise=float(noise), block_d=block_d,
+                              interpret=interpret)
+    return W[:n, :d]
+
+
+def fused_gram_mvm_multi(K1e: Array, K2e: Array, Xt: Array, V: Array, lam, *,
+                         stationary: bool, noise: float = 0.0,
+                         block_d: int = 1024, interpret: bool | None = None,
+                         vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> Array:
+    """Stacked-RHS Alg.-2 MVM: V (R, N, D) -> W (R, N, D), one launch."""
+    interpret = _interpret_default() if interpret is None else interpret
+    r, n, d = V.shape
+    np_ = _round_up(n, _SUBLANE)
+    block_d = _pick_block_d(d, block_d, stream_rows=(2 * r + 1) * np_ + 1,
+                            resident_bytes=4 * (2 + r) * np_ * np_,
+                            vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    (Xp, Vp), lam_p = _pad_d_inputs([Xt, V], lam, d, dp)
+    Xp, Vp = _pad_rows(Xp, np_), _pad_rows(Vp, np_)
+    K1p = jnp.pad(K1e, ((0, np_ - n), (0, np_ - n)))
+    K2p = jnp.pad(K2e, ((0, np_ - n), (0, np_ - n)))
+    W = fused_gram_mvm_multi_padded(K1p, K2p, Xp, Vp, lam_p,
+                                    stationary=stationary, noise=float(noise),
+                                    block_d=block_d, interpret=interpret)
+    return W[:, :n, :d]
 
 
 # jnp references re-exported for benchmarking parity
 skinny_gram_ref = ref.skinny_gram_ref
 gram_update_ref = ref.gram_update_ref
 fused_gram_norms_ref = ref.fused_gram_norms_ref
+fused_gram_mvm_ref = ref.fused_gram_mvm_ref

@@ -12,11 +12,17 @@ def skinny_gram_ref(A: Array, B: Array, lam) -> Array:
     return a @ B.astype(jnp.float32).T
 
 
-def gram_update_ref(K1: Array, M: Array, V: Array, X: Array, lam) -> Array:
-    """W = (K1 @ V + M @ X) * lam, result in V.dtype."""
-    acc = K1.astype(jnp.float32) @ V.astype(jnp.float32)
+def gram_update_ref(K1: Array, M: Array, V: Array, X: Array, lam,
+                    v_scale=None, noise: float = 0.0) -> Array:
+    """W = (K1 @ (V*v_scale) + M @ X) * lam + noise*V, result in V.dtype."""
+    v = V.astype(jnp.float32)
+    vs = v if v_scale is None else v * jnp.asarray(v_scale, jnp.float32)
+    acc = K1.astype(jnp.float32) @ vs
     acc = acc + M.astype(jnp.float32) @ X.astype(jnp.float32)
-    return (acc * jnp.asarray(lam, jnp.float32)).astype(V.dtype)
+    out = acc * jnp.asarray(lam, jnp.float32)
+    if noise:
+        out = out + jnp.float32(noise) * v
+    return out.astype(V.dtype)
 
 
 def fused_gram_norms_ref(A: Array, B: Array, lam):
@@ -27,3 +33,41 @@ def fused_gram_norms_ref(A: Array, B: Array, lam):
     na = jnp.sum(a * lamv * a, axis=1, keepdims=True)
     nb = jnp.sum(b * lamv * b, axis=1, keepdims=True)
     return P, na, nb
+
+
+def small_op(K2e: Array, M: Array, *, stationary: bool) -> Array:
+    """The (N, N) Hadamard/L-operator algebra of Alg. 2 (M may be stacked).
+
+    THE single jnp definition of this fold — core/mvm.py and the backend
+    dispatch reuse it; only the Mosaic kernel (fused_gram_mvm._small_from_m,
+    gather-free) re-states it.
+    """
+    if not stationary:
+        return K2e * M
+    diag_m = jnp.diagonal(M, axis1=-2, axis2=-1)
+    mt = K2e * (M - diag_m[..., None, :])
+    eye = jnp.eye(M.shape[-1], dtype=M.dtype)
+    return eye * jnp.sum(mt, axis=-1)[..., :, None] - mt
+
+
+def gram_mvm_oracle(K1e: Array, K2e: Array, Xt: Array, V: Array, lam,
+                    *, stationary: bool, noise: float = 0.0) -> Array:
+    """Full Alg.-2 Gram MVM in the inputs' native dtype (V 2D or stacked 3D)."""
+    m = jnp.einsum("ad,...bd->...ab", Xt * lam, V)
+    small = small_op(K2e, m, stationary=stationary)
+    w = jnp.einsum("ab,...bd->...ad", K1e, V)
+    w = (w + jnp.einsum("...ab,bd->...ad", small, Xt)) * lam
+    if noise:
+        w = w + noise * V
+    return w
+
+
+def fused_gram_mvm_ref(K1e: Array, K2e: Array, Xt: Array, V: Array, lam,
+                       *, stationary: bool, noise: float = 0.0) -> Array:
+    """Full Alg.-2 Gram MVM oracle (f32 accumulation, V 2D or stacked 3D)."""
+    out = gram_mvm_oracle(
+        K1e.astype(jnp.float32), K2e.astype(jnp.float32),
+        Xt.astype(jnp.float32), V.astype(jnp.float32),
+        jnp.asarray(lam, jnp.float32), stationary=stationary,
+        noise=float(noise))
+    return out.astype(V.dtype)

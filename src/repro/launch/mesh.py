@@ -6,18 +6,32 @@ asks for the mesh.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax has implicit Auto axes
+    AxisType = None
+
+_MAKE_MESH_TAKES_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: pass axis_types only if supported."""
+    if AxisType is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (8 fake host devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -74,3 +74,27 @@ def collective_breakdown(hlo_text: str) -> dict[str, int]:
 def collective_bytes(hlo_text: str) -> int:
     """Total collective bytes (sum over all kinds) in an HLO module."""
     return sum(collective_breakdown(hlo_text).values())
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Recursively count occurrences of a jax primitive in a jaxpr.
+
+    Walks into nested jaxprs (pjit/cond/scan/while bodies). Used to assert
+    structural invariants — e.g. that the fused Gram MVM compiles to
+    exactly ONE pallas_call (a Pallas kernel can only round-trip HBM
+    through declared outputs, so the launch count pins the transfer model
+    of DESIGN.md 4.3).
+    """
+    import jax
+
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            count += 1
+        for v in eqn.params.values():
+            for leaf in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: hasattr(x, "jaxpr") or hasattr(x, "eqns")):
+                inner = getattr(leaf, "jaxpr", leaf)
+                if hasattr(inner, "eqns"):
+                    count += count_primitive(inner, name)
+    return count

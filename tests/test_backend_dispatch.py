@@ -1,0 +1,176 @@
+"""Backend-dispatch layer: resolution rules, pallas/jnp parity through the
+full solver stack, single-launch guarantee for the fused MVM, and the
+no-raw-hot-path source contract for the exact/iterative solvers."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (build_factors, get_kernel, gram_cg_solve,
+                        gram_cg_solve_multi, gram_matvec, gram_matvec_multi,
+                        resolve_backend, set_backend, use_backend,
+                        woodbury_solve)
+from repro.core import backend
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _setup(name, rng, n=5, d=64, dtype=jnp.float64):
+    spec = get_kernel(name)
+    c = None if spec.is_stationary else \
+        jax.random.normal(jax.random.fold_in(rng, 9), (d,), dtype) * 0.05
+    X = jax.random.normal(jax.random.fold_in(rng, 1), (n, d), dtype)
+    G = jax.random.normal(jax.random.fold_in(rng, 2), (n, d), dtype)
+    return spec, X, G, c
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def test_resolution_order(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    assert resolve_backend() in ("jnp", "pallas")
+    if jax.default_backend() != "tpu":
+        assert resolve_backend() == "jnp"
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    assert resolve_backend() == "pallas"
+    with use_backend("jnp"):
+        assert resolve_backend() == "jnp"  # explicit beats env
+    assert resolve_backend() == "pallas"
+    monkeypatch.delenv("REPRO_BACKEND")
+    with pytest.raises(ValueError):
+        set_backend("tpu-magic")
+
+
+# ---------------------------------------------------------------------------
+# Parity: the same solves through the pallas kernel path (interpret on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["rbf", "expdot"])
+@pytest.mark.parametrize("lam_kind", ["scalar", "diag"])
+def test_gram_matvec_parity(name, lam_kind, rng):
+    d = 64
+    spec, X, G, c = _setup(name, rng, d=d)
+    lam = 0.5 if lam_kind == "scalar" else \
+        jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (d,))) + 0.2
+    noise = 0.0 if lam_kind == "diag" else 1e-2
+    with use_backend("jnp"):
+        f = build_factors(spec, X, lam=lam, c=c, noise=noise)
+        want = gram_matvec(f, G, stationary=spec.is_stationary)
+    with use_backend("pallas"):
+        got = gram_matvec(f, G, stationary=spec.is_stationary)
+    assert jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)) < 1e-5
+
+
+@pytest.mark.parametrize("name", ["rbf", "expdot"])
+def test_gram_cg_solve_parity(name, rng):
+    spec, X, G, c = _setup(name, rng)
+    with use_backend("jnp"):
+        f = build_factors(spec, X, lam=0.5, c=c, noise=1e-6)
+        want = gram_cg_solve(spec, f, G, tol=1e-6).x
+    with use_backend("pallas"):
+        got = gram_cg_solve(spec, f, G, tol=1e-6, maxiter=200).x
+    # pallas path accumulates in f32; compare through the operator
+    with use_backend("jnp"):
+        rw = gram_matvec(f, got, stationary=spec.is_stationary) - G
+    assert float(jnp.linalg.norm(rw) / jnp.linalg.norm(G)) < 1e-3
+    assert jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)) < 1e-2
+
+
+@pytest.mark.parametrize("name", ["rbf", "expdot"])
+def test_woodbury_solve_parity(name, rng):
+    spec, X, G, c = _setup(name, rng)
+    with use_backend("jnp"):
+        f = build_factors(spec, X, lam=0.5, c=c)
+        want = woodbury_solve(spec, f, G)
+    with use_backend("pallas"):
+        got = woodbury_solve(spec, f, G)
+    assert jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)) < 1e-3
+
+
+def test_cg_multi_matches_single(rng):
+    """Joint CG over stacked RHS == per-RHS solves (block-diag operator).
+
+    x64-precision tolerances, so the jnp backend is pinned explicitly —
+    the suite must also pass under an exported REPRO_BACKEND=pallas.
+    """
+    spec, X, G, c = _setup("rbf", rng)
+    with use_backend("jnp"):
+        f = build_factors(spec, X, lam=0.3, noise=1e-8)
+        G2 = jax.random.normal(jax.random.fold_in(rng, 7), G.shape, G.dtype)
+        Gs = jnp.stack([G, G2])
+        zs = gram_cg_solve_multi(spec, f, Gs, tol=1e-10).x
+        for i, g in enumerate([G, G2]):
+            z = gram_cg_solve(spec, f, g, tol=1e-10).x
+            assert jnp.max(jnp.abs(zs[i] - z)) / jnp.max(jnp.abs(z)) < 1e-6
+        W = gram_matvec_multi(f, zs, stationary=spec.is_stationary)
+        assert float(jnp.linalg.norm(W - Gs) / jnp.linalg.norm(Gs)) < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Single-launch guarantee
+# ---------------------------------------------------------------------------
+
+from repro.utils.hlo import count_primitive as _count_primitive
+
+
+def test_single_pallas_call_per_mvm(rng):
+    """One fused MVM == exactly one pallas_call in the compiled program."""
+    spec, X, G, c = _setup("rbf", rng, d=256, dtype=jnp.float32)
+    f = build_factors(spec, X, lam=0.5, noise=1e-3)
+    with use_backend("pallas"):
+        jaxpr = jax.make_jaxpr(
+            lambda v: gram_matvec(f, v, stationary=True))(G)
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+    with use_backend("pallas"):
+        jaxpr = jax.make_jaxpr(
+            lambda v: gram_matvec_multi(f, v, stationary=True))(
+                jnp.stack([G, G]))
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+
+# ---------------------------------------------------------------------------
+# Source contract: no raw jnp O(ND) contraction left in the solver modules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("module,forbidden", [
+    ("core/solvers.py", ["K1i @ V", "(K1i @", "@ f.Xt", "f.Xt @", "/ f.lam"]),
+    ("core/woodbury.py", ["W0 @", "@ f.Xt.T", "K1i @ G", "K1i @ (G",
+                          "f.Xt @ Gt"]),
+])
+def test_no_raw_hot_path(module, forbidden):
+    import re
+
+    src = (SRC / module).read_text()
+    # dense_solve is the documented O((ND)^3) test-only reference — exempt.
+    src = src.split("def dense_solve", 1)[0]
+    # the contract is about code, not the derivations in docstrings/comments
+    src = re.sub(r'""".*?"""', "", src, flags=re.S)
+    src = "\n".join(line.split("#", 1)[0] for line in src.splitlines())
+    for pattern in forbidden:
+        assert pattern not in src, (module, pattern)
+    assert "backend." in src
+
+
+def test_backend_vocabulary_parity(rng):
+    """Every backend op agrees with its jnp form under the pallas backend."""
+    d = 70
+    A = jax.random.normal(jax.random.fold_in(rng, 1), (5, d))
+    B = jax.random.normal(jax.random.fold_in(rng, 2), (7, d))
+    lam = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (d,))) + 0.1
+    spec = get_kernel("rbf")
+    with use_backend("pallas"):
+        p_gram = backend.scaled_gram(A, B, lam)
+        p_r = backend.pairwise_r(spec, A, B, lam)
+        p_norms = backend.gram_norms(A, B, lam)
+    with use_backend("jnp"):
+        j_gram = backend.scaled_gram(A, B, lam)
+        j_r = backend.pairwise_r(spec, A, B, lam)
+        j_norms = backend.gram_norms(A, B, lam)
+    assert jnp.allclose(p_gram, j_gram, rtol=1e-5, atol=1e-5)
+    assert jnp.allclose(p_r, j_r, rtol=1e-5, atol=1e-5)
+    for p, j in zip(p_norms, j_norms):
+        assert jnp.allclose(p, j, rtol=1e-5, atol=1e-5)

@@ -3,6 +3,7 @@ straggler masking, gradient compression. Multi-device cases run in a
 subprocess with xla_force_host_platform_device_count=8 so the main test
 process keeps the 1-device contract.
 """
+import os
 import subprocess
 import sys
 
@@ -21,6 +22,10 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from functools import partial
 from jax.sharding import PartitionSpec as P
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
 from repro.core import build_factors, get_kernel, gram_matvec, woodbury_solve
 from repro.core.distributed import sharded_gram_matvec, sharded_woodbury_solve
 from repro.runtime import masked_gradient_mean
@@ -53,7 +58,7 @@ for name in ["rbf", "poly2", "expdot"]:
         failures.append((name, e1, e2))  # the inner N^2 solve's conditioning
 
 # straggler masked mean over the data axis
-@partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+@partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
          out_specs=(P("data"), P()))
 def masked(g, alive):
     out, n = masked_gradient_mean({"g": g}, alive[0], "data")
@@ -75,7 +80,8 @@ print("SUBPROCESS_OK")
 def test_sharded_ops_match_reference_8dev():
     r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SRC],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "SUBPROCESS_OK" in r.stdout, r.stdout + r.stderr
 
 

@@ -8,9 +8,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import (fused_gram_norms, fused_gram_norms_ref,
-                           gram_update, gram_update_ref, skinny_gram,
-                           skinny_gram_ref)
+from repro.kernels import (fused_gram_mvm, fused_gram_mvm_multi,
+                           fused_gram_mvm_ref, fused_gram_norms,
+                           fused_gram_norms_ref, gram_update, gram_update_ref,
+                           skinny_gram, skinny_gram_ref)
+from repro.kernels.ops import _LANE, _pick_block_d, _round_up
 
 SHAPES = [(3, 5, 64), (8, 8, 128), (5, 12, 1000), (16, 4, 4096), (1, 1, 257)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -65,12 +67,19 @@ def test_fused_gram_norms(na, nb, d, dtype, rng):
 
 def test_skinny_gram_padding_exact(rng):
     """Zero-padded lam must kill padded columns EXACTLY (not approximately):
-    compare a D=1000 input against the same data embedded in D=1024."""
+    a D=1000 input equals the same data embedded in D=1024 with garbage in
+    the pad lanes but lam = 0 there — bit-identical through the kernel."""
     A = jax.random.normal(jax.random.fold_in(rng, 1), (4, 1000))
     B = jax.random.normal(jax.random.fold_in(rng, 2), (6, 1000))
     got = skinny_gram(A, B, 1.0, interpret=True)
-    want = skinny_gram_ref(A, B, 1.0)
-    assert jnp.allclose(got, want, rtol=1e-6, atol=1e-6)
+    junk = 1e6 * jax.random.normal(jax.random.fold_in(rng, 3), (4 + 6, 24))
+    A2 = jnp.concatenate([A, junk[:4]], axis=1)
+    B2 = jnp.concatenate([B, junk[4:]], axis=1)
+    lam2 = jnp.concatenate([jnp.ones(1000), jnp.zeros(24)])
+    embedded = skinny_gram(A2, B2, lam2, interpret=True)
+    assert jnp.array_equal(got, embedded)
+    # and the f32-accumulated kernel tracks the oracle at f32 tolerance
+    assert jnp.allclose(got, skinny_gram_ref(A, B, 1.0), rtol=1e-5, atol=1e-4)
 
 
 def test_kernels_used_by_core_path(rng):
@@ -82,3 +91,125 @@ def test_kernels_used_by_core_path(rng):
     got = skinny_gram(A, A, lam, interpret=True)
     want = scaled_gram(A, A, lam)
     assert jnp.allclose(got, want.astype(jnp.float32), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass Alg.-2 megakernel
+# ---------------------------------------------------------------------------
+
+MVM_SHAPES = [(3, 257), (8, 128), (5, 1000), (12, 1025)]
+
+
+@pytest.mark.parametrize("n,d", MVM_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("stationary", [False, True])
+@pytest.mark.parametrize("lam_kind", ["scalar", "diag"])
+def test_fused_gram_mvm(n, d, dtype, stationary, lam_kind, rng):
+    K1e = _rand(jax.random.fold_in(rng, 1), (n, n), jnp.float32)
+    K2e = _rand(jax.random.fold_in(rng, 2), (n, n), jnp.float32)
+    Xt = _rand(jax.random.fold_in(rng, 3), (n, d), dtype)
+    V = _rand(jax.random.fold_in(rng, 4), (n, d), dtype)
+    lam = 0.4 if lam_kind == "scalar" else \
+        jnp.abs(jax.random.normal(jax.random.fold_in(rng, 5), (d,))) + 0.1
+    noise = 0.25
+    got = fused_gram_mvm(K1e, K2e, Xt, V, lam, stationary=stationary,
+                         noise=noise, interpret=True)
+    want = fused_gram_mvm_ref(K1e, K2e, Xt, V, lam, stationary=stationary,
+                              noise=noise)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    err = jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)))
+    scale = jnp.max(jnp.abs(want.astype(jnp.float32))) + 1e-6
+    assert err / scale < tol, float(err / scale)
+
+
+@pytest.mark.parametrize("stationary", [False, True])
+@pytest.mark.parametrize("r", [1, 3])
+def test_fused_gram_mvm_multi(stationary, r, rng):
+    n, d = 5, 333
+    K1e = _rand(jax.random.fold_in(rng, 1), (n, n), jnp.float32)
+    K2e = _rand(jax.random.fold_in(rng, 2), (n, n), jnp.float32)
+    Xt = _rand(jax.random.fold_in(rng, 3), (n, d), jnp.float32)
+    Vs = _rand(jax.random.fold_in(rng, 4), (r, n, d), jnp.float32)
+    got = fused_gram_mvm_multi(K1e, K2e, Xt, Vs, 0.6, stationary=stationary,
+                               noise=0.1, interpret=True)
+    # stacked kernel == per-RHS single kernel == per-RHS oracle
+    for i in range(r):
+        single = fused_gram_mvm(K1e, K2e, Xt, Vs[i], 0.6,
+                                stationary=stationary, noise=0.1,
+                                interpret=True)
+        want = fused_gram_mvm_ref(K1e, K2e, Xt, Vs[i], 0.6,
+                                  stationary=stationary, noise=0.1)
+        assert jnp.allclose(got[i], single, rtol=1e-5, atol=1e-4)
+        assert jnp.allclose(got[i], want, rtol=1e-4, atol=1e-3)
+
+
+def test_gram_update_v_scale_noise(rng):
+    """The v_scale/noise extension used by Woodbury's fused assembly."""
+    n, d = 6, 300
+    K1 = _rand(jax.random.fold_in(rng, 1), (n, n), jnp.float32)
+    M = _rand(jax.random.fold_in(rng, 2), (n, n), jnp.float32)
+    V = _rand(jax.random.fold_in(rng, 3), (n, d), jnp.float32)
+    X = _rand(jax.random.fold_in(rng, 4), (n, d), jnp.float32)
+    vs = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 5), (d,))) + 0.2
+    got = gram_update(K1, M, V, X, 0.9, v_scale=vs, noise=0.3, interpret=True)
+    want = gram_update_ref(K1, M, V, X, 0.9, v_scale=vs, noise=0.3)
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_small_matmul(rng):
+    """Kronecker-preconditioner stream: W = (K @ V) * scale."""
+    from repro.kernels import small_matmul
+
+    n, d = 6, 1000
+    K = _rand(jax.random.fold_in(rng, 1), (n, n), jnp.float32)
+    V = _rand(jax.random.fold_in(rng, 2), (n, d), jnp.float32)
+    scale = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (d,))) + 0.1
+    got = small_matmul(K, V, scale, interpret=True)
+    want = (K @ V) * scale
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_gram_update_rectangular(rng):
+    """Cross-covariance query path: K1/M are (Nq, N), W is (Nq, D)."""
+    nq, n, d = 3, 6, 260
+    K1 = _rand(jax.random.fold_in(rng, 1), (nq, n), jnp.float32)
+    M = _rand(jax.random.fold_in(rng, 2), (nq, n), jnp.float32)
+    V = _rand(jax.random.fold_in(rng, 3), (n, d), jnp.float32)
+    X = _rand(jax.random.fold_in(rng, 4), (n, d), jnp.float32)
+    got = gram_update(K1, M, V, X, 0.5, interpret=True)
+    want = gram_update_ref(K1, M, V, X, 0.5)
+    assert got.shape == (nq, d)
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block_d selection: pad-waste bound + VMEM budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [130, 257, 1000, 1024, 1025, 4097, 65537,
+                               1_000_001])
+def test_pick_block_d_waste_bounded(d):
+    """For D just above a block boundary the pad waste must stay bounded:
+    either the lane-minimal padding is used, or waste < 12.5%."""
+    block = _pick_block_d(d)
+    assert block % _LANE == 0
+    padded = _round_up(d, block)
+    minimal = _round_up(d, _LANE)
+    assert padded == minimal or (padded - d) / d <= 0.125, \
+        (d, block, padded, (padded - d) / d)
+
+
+def test_pick_block_d_vmem_budget():
+    """Streamed double-buffered footprint must respect the VMEM budget."""
+    budget = 1 << 20  # 1 MiB
+    rows = 64
+    block = _pick_block_d(1 << 20, 4096, stream_rows=rows,
+                          vmem_budget_bytes=budget)
+    assert 8 * rows * block <= budget
+    # and with a roomy budget the block is not needlessly shrunk
+    assert _pick_block_d(1 << 20, 1024, stream_rows=8) == 1024
+    # resident operands alone blowing the budget is a clear error, not an
+    # opaque Mosaic VMEM failure later
+    with pytest.raises(ValueError, match="VMEM budget"):
+        _pick_block_d(1 << 20, 1024, stream_rows=8,
+                      resident_bytes=2 * budget, vmem_budget_bytes=budget)

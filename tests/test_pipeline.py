@@ -1,5 +1,6 @@
 """GPipe pipeline-parallel mapping: fwd/bwd equivalence vs the sequential
 oracle, on an 8-device (4 stages x 2) mesh in a subprocess."""
+import os
 import subprocess
 import sys
 
@@ -41,5 +42,6 @@ print("PIPELINE_OK")
 def test_gpipe_matches_sequential_8dev():
     r = subprocess.run([sys.executable, "-c", _SRC], capture_output=True,
                        text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

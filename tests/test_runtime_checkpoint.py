@@ -141,5 +141,6 @@ print("OK")
         code = src % (n, n, n, n)
         r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                            text=True, timeout=300,
-                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
         assert "OK" in r.stdout, r.stdout + r.stderr
