@@ -18,7 +18,17 @@ from .mvm import (
     l_op,
     lt_op,
 )
+from .query import PosteriorBatch, make_query_fn, posterior_batch
 from .solvers import CGResult, cg, gram_cg_solve, gram_cg_solve_multi
+from .state import (
+    GPGData,
+    GPGState,
+    gpg_evict,
+    gpg_extend,
+    gpg_init,
+    gpg_refactor,
+    gpg_resolve,
+)
 from .woodbury import dense_solve, poly2_quadratic_solve, woodbury_solve
 
 __all__ = [
@@ -30,4 +40,7 @@ __all__ = [
     "CGResult", "cg", "gram_cg_solve", "gram_cg_solve_multi",
     "resolve_backend", "set_backend", "use_backend", "dense_solve",
     "poly2_quadratic_solve", "woodbury_solve",
+    "GPGData", "GPGState", "gpg_evict", "gpg_extend", "gpg_init",
+    "gpg_refactor", "gpg_resolve",
+    "PosteriorBatch", "make_query_fn", "posterior_batch",
 ]

@@ -9,8 +9,8 @@ Given Z solving (grad K grad') vec(Z) = vec(G - prior_grad):
 
 The Hessian closed forms below were re-derived from scratch for this repo's
 (N, D) layout and are validated against jax.hessian of the posterior mean
-function in tests/test_inference.py (which pins down every sign the paper is
-loose about).
+function in tests/test_core_inference.py (which pins down every sign the
+paper is loose about).
 
   dot:        Hbar = Lam [ Xt^T M Xt + Z^T Mh Xt + Xt^T Mh Z ] Lam
               M  = diag(k3e(r_qb) * w_b),  w_b = x~_q^T Lam Z_b

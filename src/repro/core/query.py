@@ -1,0 +1,107 @@
+"""Batched posterior query serving (factor reuse; zero re-solves).
+
+Once a ``GPGState`` (or a plain ``GramFactors`` + solved ``Z``) exists, any
+number of posterior queries are pure cross-covariance contractions against
+the SAME cached solve — O(Q N D) total for Q query points, no inner system
+ever touched again (paper Sec. 4: "the cost of inference is dominated by
+the solve"; the serving layer amortizes that solve across every query).
+
+Per microbatch of queries, everything routes through the fused backend
+cross-covariance paths (``cross_value_matvec`` / ``cross_grad_matvec`` —
+``backend.gram_update`` streams, one pallas launch each on TPU):
+
+  value:   posterior mean of f       (Q,)    — up to the prior constant
+  grad:    posterior mean of grad f  (Q, D)  — paper Eq. 26
+  hess_v:  posterior mean Hessian-vector product H(x_q) @ v  (Q, D)
+           — paper Eq. 12, applied through the diag + rank-2N factored
+           form, vmapped over the microbatch.
+
+The microbatching loop bounds peak memory at O(B N D) for microbatch B and
+keeps each chunk a single compiled computation — the shape served traffic
+wants (``train/serve.py`` wraps this in a padded fixed-shape jitted step).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .gram import GramFactors
+from .inference import posterior_hessian
+from .kernels import KernelSpec
+from .mvm import cross_grad_matvec, cross_value_matvec
+
+Array = jnp.ndarray
+
+
+class PosteriorBatch(NamedTuple):
+    """Batched posterior means at Q query points."""
+
+    value: Array                    # (Q,)   mean of f (up to prior const)
+    grad: Array                     # (Q, D) mean of grad f
+    hess_v: Optional[Array] = None  # (Q, D) mean Hessian @ probe, if asked
+
+    @property
+    def q(self) -> int:
+        return self.grad.shape[0]
+
+
+def _query_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
+                 probe: Optional[Array]) -> PosteriorBatch:
+    """One microbatch: fused cross-covariance contractions, no solves."""
+    value = cross_value_matvec(spec, Xq, f, Z)
+    grad = cross_grad_matvec(spec, Xq, f, Z)
+    hess_v = None
+    if probe is not None:
+        hess_v = jax.vmap(
+            lambda xq: posterior_hessian(spec, xq, f, Z).matvec(probe))(Xq)
+    return PosteriorBatch(value=value, grad=grad, hess_v=hess_v)
+
+
+def posterior_batch(
+    spec: KernelSpec,
+    Xq: Array,
+    f: GramFactors,
+    Z: Array,
+    *,
+    probe: Optional[Array] = None,
+    microbatch: Optional[int] = None,
+) -> PosteriorBatch:
+    """Evaluate posterior mean value/grad (and Hessian @ ``probe``) at Xq.
+
+    Xq: (Q, D).  ``microbatch`` bounds the per-chunk query count (peak
+    memory O(microbatch * N * D)); None evaluates in one chunk.  Q queries
+    cost O(Q N D) and perform ZERO solves — the factors and Z are reused
+    verbatim (asserted against the ``GPGData.n_solve`` counter in
+    tests/test_core_state.py).
+    """
+    Xq = jnp.atleast_2d(Xq)
+    q = Xq.shape[0]
+    if not microbatch or microbatch >= q:
+        return _query_chunk(spec, Xq, f, Z, probe)
+    chunks = [_query_chunk(spec, Xq[i:i + microbatch], f, Z, probe)
+              for i in range(0, q, microbatch)]
+    return PosteriorBatch(
+        value=jnp.concatenate([c.value for c in chunks]),
+        grad=jnp.concatenate([c.grad for c in chunks]),
+        hess_v=None if probe is None else
+        jnp.concatenate([c.hess_v for c in chunks]),
+    )
+
+
+def make_query_fn(spec: KernelSpec, *, with_probe: bool = False):
+    """A jittable (f, Z, Xq[, probe]) -> PosteriorBatch chunk evaluator.
+
+    The factors/Z are *arguments*, not captures, so one compiled function
+    serves every state revision of the same shape — extend() between
+    batches never triggers recompilation (``train/serve.py`` relies on
+    this for the streaming serve loop).
+    """
+    if with_probe:
+        def fn(f: GramFactors, Z: Array, Xq: Array, probe: Array):
+            return _query_chunk(spec, Xq, f, Z, probe)
+    else:
+        def fn(f: GramFactors, Z: Array, Xq: Array):
+            return _query_chunk(spec, Xq, f, Z, None)
+    return fn

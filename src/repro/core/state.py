@@ -1,0 +1,579 @@
+"""Persistent, incrementally-updatable posterior state (the serving core).
+
+The paper's complexity story — O(N^2 D + N^3) in the low-data regime
+N < D (Sec. 4) — only pays off in the workloads it motivates (optimizer
+loops, GPG-HMC, online BO) if observations can be **appended one at a time
+without refactoring from scratch** and many posterior queries can be
+served against one cached solve.  This module is that state machine:
+
+  ``GPGData``   — a fixed-capacity, jit-compatible pytree holding the
+                  zero-padded ``GramFactors`` strips, the bordered Cholesky
+                  ``L`` of the N x N fast-case matrix K1n = K1e + (s^2/lam) I,
+                  and the solved representers ``Z``.
+  ``gpg_extend``— appends one (x, grad) observation: O(ND) border of the
+                  factor strips, an O(N^2) **bordered Cholesky update** of
+                  L (DESIGN.md sec. 10), and a warm-started preconditioned
+                  CG re-solve.  The O(N^6) dense inner refactorization of
+                  ``woodbury_solve`` never runs: no intermediate with an
+                  N^2-sized axis is ever created (asserted structurally in
+                  tests/test_core_state.py).
+  ``gpg_evict`` — drops the oldest observation for bounded-N sliding-window
+                  serving: a rank-1 Cholesky update restores L in O(N^2)
+                  (no downdate is ever needed — deleting the first row of a
+                  Cholesky is a rank-1 *up*date of the trailing block).
+  fallback      — when the bordered pivot degenerates (observations nearly
+                  collinear in kernel space), the update falls back to a
+                  full O(N^3) refactorization of L (``n_refactor`` counts
+                  these; still never O(N^6)).
+
+All pure functions are traceable: ``optim/gp_precond.py`` runs them inside
+a jitted, sharded training step.  The host-facing :class:`GPGState` wraps
+them with auto-evict / auto-grow policy and python-side bookkeeping; the
+batched query layer on top lives in ``core/query.py``.
+
+Masking convention: arrays are padded to ``capacity`` rows; rows >= count
+are zero (L carries an identity tail) so every contraction below is exact
+on the padded arrays — see DESIGN.md sec. 10.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_solve, solve_triangular
+
+from . import backend
+from .gram import GramFactors
+from .kernels import KernelSpec, get_kernel
+from .mvm import gram_matvec
+from .solvers import cg
+
+Array = jnp.ndarray
+
+_TINY = 1e-30
+
+
+class GPGData(NamedTuple):
+    """Jit-compatible posterior state (fixed capacity, zero-padded).
+
+    X/G:    (cap, D) raw inputs / observed gradients (rows >= count are 0).
+    Xt:     (cap, D) centered inputs (X - c for dot kernels, X stationary).
+    K1e/K2e:(cap, cap) effective kernel-derivative strips, zero-padded.
+    L:      (cap, cap) lower Cholesky of K1n = K1e + (noise/lam + jitter) I
+            on the valid block, identity on the tail rows/cols.
+    Z:      (cap, D) representers solving (grad K grad') vec(Z) = vec(rhs);
+            rhs is G unless overridden (flipped GP-X inference).
+    lam:    scalar or (D,) Lambda diagonal.
+    count:  valid row count; n_refactor/n_solve: lifetime op counters;
+    cg_iters/resnorm: stats of the most recent solve.
+    """
+
+    X: Array
+    G: Array
+    Xt: Array
+    K1e: Array
+    K2e: Array
+    L: Array
+    Z: Array
+    lam: Array
+    count: Array
+    n_refactor: Array
+    n_solve: Array
+    cg_iters: Array
+    resnorm: Array
+    c: Optional[Array] = None
+
+    @property
+    def capacity(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[1]
+
+
+def _row_mask(data: GPGData) -> Array:
+    return jnp.arange(data.capacity) < data.count
+
+
+def _diag_shift(lam: Array, noise: float, jitter: float):
+    """(noise/lam + jitter) — the scalar added to K1e's valid diagonal."""
+    lam = jnp.asarray(lam)
+    if noise and lam.ndim != 0:
+        raise ValueError("noise > 0 requires scalar Lambda (as in woodbury)")
+    return (noise / lam if noise else 0.0) + jitter
+
+
+def gpg_init(
+    spec: KernelSpec,
+    d: int,
+    capacity: int,
+    *,
+    lam=1.0,
+    c: Optional[Array] = None,
+    dtype=None,
+) -> GPGData:
+    """Empty state with room for ``capacity`` gradient observations."""
+    if dtype is None:
+        dtype = jnp.asarray(0.0).dtype
+    cap = int(capacity)
+    zmat = jnp.zeros((cap, d), dtype)
+    znn = jnp.zeros((cap, cap), dtype)
+    return GPGData(
+        X=zmat, G=zmat, Xt=zmat, K1e=znn, K2e=znn,
+        L=jnp.eye(cap, dtype=dtype), Z=zmat,
+        lam=jnp.asarray(lam, dtype),
+        count=jnp.zeros((), jnp.int32),
+        n_refactor=jnp.zeros((), jnp.int32),
+        n_solve=jnp.zeros((), jnp.int32),
+        cg_iters=jnp.zeros((), jnp.int32),
+        resnorm=jnp.zeros((), dtype),
+        c=None if (spec.is_stationary or c is None) else jnp.asarray(c, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Internals: border rows, Cholesky surgery, the masked solve
+# ---------------------------------------------------------------------------
+
+def _border(spec: KernelSpec, data: GPGData, x: Array):
+    """New factor border: (xt_new, k1_col, k2_col, r_self) — O(ND)."""
+    mask = _row_mask(data)
+    if spec.is_stationary:
+        xt_new = x
+        r_col = backend.pairwise_r(spec, data.Xt, x[None], data.lam)[:, 0]
+        r_self = jnp.zeros((), x.dtype)
+    else:
+        xt_new = x if data.c is None else x - data.c
+        r_col = backend.scaled_gram(data.Xt, xt_new[None], data.lam)[:, 0]
+        r_self = backend.row_dots(xt_new[None], xt_new[None], data.lam)[0]
+    k1_col = jnp.where(mask, spec.k1e(r_col), 0.0)
+    k2_col = jnp.where(mask, spec.k2e(r_col), 0.0)
+    return xt_new, k1_col, k2_col, r_self
+
+
+def _full_chol(data: GPGData, noise: float, jitter: float) -> Array:
+    """O(N^3) Cholesky of the masked K1n (identity tail); the fallback."""
+    mask = _row_mask(data)
+    shift = _diag_shift(data.lam, noise, jitter)
+    K1n = data.K1e + jnp.diag(jnp.where(mask, shift, 1.0))
+    L = jnp.linalg.cholesky(K1n)
+    # last-resort regularization if K1n lost positive-definiteness to
+    # roundoff (near-duplicate observations): retry with a scaled jitter
+    bad = ~jnp.all(jnp.isfinite(L))
+    tr = jnp.trace(K1n) / jnp.maximum(data.count, 1)
+    K1r = K1n + jnp.diag(jnp.where(mask, 1e-6 * tr, 0.0))
+    return jnp.where(bad, jnp.linalg.cholesky(K1r), L)
+
+
+def _chol_append(L: Array, k_col: Array, kappa, n: Array, deg_thresh: float):
+    """Bordered Cholesky: O(N^2) append of row n. Returns (L', degraded).
+
+    k_col must be zero at rows >= n (and L identity there), so the
+    triangular solve is exact on the padded arrays.
+    """
+    l = solve_triangular(L, k_col, lower=True)
+    pivot2 = kappa - jnp.vdot(l, l)
+    degraded = pivot2 <= deg_thresh * jnp.maximum(kappa, _TINY)
+    row = jnp.where(jnp.arange(L.shape[0]) < n, l, 0.0)
+    row = row.at[n].set(jnp.sqrt(jnp.maximum(pivot2, _TINY)))
+    return L.at[n].set(row), degraded
+
+
+def _chol_rank1_update(L: Array, v: Array) -> Array:
+    """chol(L L^T + v v^T) in O(N^2); identity-tail/zero-v rows are no-ops."""
+    cap = L.shape[0]
+    idx = jnp.arange(cap)
+
+    def body(k, carry):
+        L, v = carry
+        Lkk, vk = L[k, k], v[k]
+        r = jnp.sqrt(Lkk * Lkk + vk * vk)
+        cos = r / jnp.maximum(Lkk, _TINY)
+        sin = vk / jnp.maximum(Lkk, _TINY)
+        below = idx > k
+        col = L[:, k]
+        new_col = jnp.where(below, (col + sin * v) / cos, col).at[k].set(r)
+        v = jnp.where(below, cos * v - sin * new_col, v)
+        return L.at[:, k].set(new_col), v
+
+    L, _ = jax.lax.fori_loop(0, cap, body, (L, v))
+    return L
+
+
+def _solve(spec: KernelSpec, data: GPGData, rhs: Array, z0: Array, *,
+           noise: float, tol: float, maxiter: int) -> GPGData:
+    """Warm-started preconditioned CG on the masked padded Gram system.
+
+    The preconditioner is the free Kronecker factor B = K1n x Lam applied
+    through the cached Cholesky — two O(N^2) triangular sweeps per
+    iteration plus ONE fused Gram MVM (O(N^2 D)); nothing here ever has an
+    N^2-sized axis.
+    """
+    mask = _row_mask(data)[:, None]
+    f = GramFactors(K1e=data.K1e, K2e=data.K2e,
+                    Xt=jnp.where(mask, data.Xt, 0.0), lam=data.lam,
+                    noise=float(noise), c=data.c)
+    mv = lambda V: gram_matvec(f, V, stationary=spec.is_stationary)
+    M_inv = lambda V: cho_solve((data.L, True), V) / data.lam
+    res = cg(mv, jnp.where(mask, rhs, 0.0), x0=jnp.where(mask, z0, 0.0),
+             tol=tol, maxiter=maxiter, M_inv=M_inv)
+    Z = jnp.where(mask & jnp.isfinite(res.x), res.x, 0.0)
+    return data._replace(Z=Z, n_solve=data.n_solve + 1, cg_iters=res.iters,
+                         resnorm=jnp.asarray(res.resnorm, data.resnorm.dtype))
+
+
+def _default_maxiter(data: GPGData, maxiter: Optional[int]) -> int:
+    return int(maxiter) if maxiter is not None else 10 * data.capacity + 50
+
+
+# ---------------------------------------------------------------------------
+# The public pure-functional API (jit/shard_map-safe; spec & floats static)
+# ---------------------------------------------------------------------------
+
+def gpg_extend(
+    spec: KernelSpec,
+    data: GPGData,
+    x: Array,
+    g: Array,
+    *,
+    noise: float = 0.0,
+    jitter: float = 1e-10,
+    deg_thresh: float = 1e-8,
+    tol: float = 1e-10,
+    maxiter: Optional[int] = None,
+    solve: bool = True,
+    rhs: Optional[Array] = None,
+) -> GPGData:
+    """Append one (x, grad) observation with a bordered factor update.
+
+    Requires count < capacity (the host wrapper evicts/grows first; the
+    jitted consumers guarantee it by construction).  ``rhs`` overrides the
+    right-hand side of the re-solve (flipped GP-X inference); default G.
+    """
+    x = jnp.asarray(x, data.X.dtype)
+    g = jnp.asarray(g, data.X.dtype)
+    n = data.count
+    xt_new, k1_col, k2_col, r_self = _border(spec, data, x)
+    k1_diag = spec.k1e(r_self)
+    shift = _diag_shift(data.lam, noise, jitter)
+
+    K1e = data.K1e.at[n, :].set(k1_col).at[:, n].set(k1_col)
+    K1e = K1e.at[n, n].set(k1_diag)
+    K2e = data.K2e.at[n, :].set(k2_col).at[:, n].set(k2_col)
+    K2e = K2e.at[n, n].set(spec.k2e(r_self))
+    data = data._replace(
+        X=data.X.at[n].set(x), G=data.G.at[n].set(g),
+        Xt=data.Xt.at[n].set(xt_new), K1e=K1e, K2e=K2e,
+        count=n + 1,
+    )
+
+    L_new, degraded = _chol_append(data.L, k1_col, k1_diag + shift, n,
+                                   deg_thresh)
+    data = jax.lax.cond(
+        degraded,
+        lambda d: d._replace(L=_full_chol(d, noise, jitter),
+                             n_refactor=d.n_refactor + 1),
+        lambda d: d._replace(L=L_new),
+        data,
+    )
+    if solve:
+        data = _solve(spec, data, data.G if rhs is None else rhs, data.Z,
+                      noise=noise, tol=tol,
+                      maxiter=_default_maxiter(data, maxiter))
+    return data
+
+
+def gpg_evict(
+    spec: KernelSpec,
+    data: GPGData,
+    *,
+    noise: float = 0.0,
+    tol: float = 1e-10,
+    maxiter: Optional[int] = None,
+    solve: bool = True,
+) -> GPGData:
+    """Drop the OLDEST observation (sliding window) in O(N^2 + N D).
+
+    Removing row 0 of K1n = L L^T leaves the trailing block
+    L21 L21^T + L22 L22^T, whose Cholesky is a rank-1 *update* of L22 —
+    no downdate (and hence no loss of positive definiteness) ever occurs.
+    """
+    n = data.count
+    cap = data.capacity
+    keep = jnp.arange(cap) < jnp.maximum(n - 1, 0)
+    km = keep[:, None]
+    kmm = keep[:, None] & keep[None, :]
+
+    def up(A):  # shift rows up by one, zeroing the vacated tail
+        return jnp.where(km, jnp.roll(A, -1, axis=0), 0.0)
+
+    def upleft(A):
+        return jnp.where(kmm, jnp.roll(jnp.roll(A, -1, 0), -1, 1), 0.0)
+
+    Ls = upleft(data.L) + jnp.diag(jnp.where(keep, 0.0, 1.0))
+    v = jnp.where(keep, jnp.roll(data.L[:, 0], -1), 0.0)
+    data = data._replace(
+        X=up(data.X), G=up(data.G), Xt=up(data.Xt), Z=up(data.Z),
+        K1e=upleft(data.K1e), K2e=upleft(data.K2e),
+        L=_chol_rank1_update(Ls, v),
+        count=jnp.maximum(n - 1, 0),
+    )
+    if solve:
+        data = _solve(spec, data, data.G, data.Z, noise=noise, tol=tol,
+                      maxiter=_default_maxiter(data, maxiter))
+    return data
+
+
+def gpg_refactor(
+    spec: KernelSpec,
+    data: GPGData,
+    lam: Optional[Array] = None,
+    *,
+    noise: float = 0.0,
+    jitter: float = 1e-10,
+    tol: float = 1e-10,
+    maxiter: Optional[int] = None,
+    solve: bool = True,
+    rhs: Optional[Array] = None,
+) -> GPGData:
+    """Full O(N^2 D + N^3) rebuild of factors + Cholesky (+ solve).
+
+    The explicit refactorization entry point: hyperparameter (Lambda)
+    refresh, bulk conditioning (``GPGState.from_data``), and the
+    degradation fallback all land here.  Still never O(N^6).
+    """
+    if lam is not None:
+        data = data._replace(lam=jnp.asarray(lam, data.X.dtype))
+    mask = _row_mask(data)
+    mm = mask[:, None] & mask[None, :]
+    if spec.is_stationary:
+        Xt = jnp.where(mask[:, None], data.X, 0.0)
+    else:
+        Xt = data.X if data.c is None else data.X - data.c
+        Xt = jnp.where(mask[:, None], Xt, 0.0)
+    r = backend.pairwise_r(spec, Xt, Xt, data.lam)
+    data = data._replace(
+        Xt=Xt,
+        K1e=jnp.where(mm, spec.k1e(r), 0.0),
+        K2e=jnp.where(mm, spec.k2e(r), 0.0),
+        n_refactor=data.n_refactor + 1,
+    )
+    data = data._replace(L=_full_chol(data, noise, jitter))
+    if solve:
+        data = _solve(spec, data, data.G if rhs is None else rhs, data.Z,
+                      noise=noise, tol=tol,
+                      maxiter=_default_maxiter(data, maxiter))
+    return data
+
+
+def gpg_resolve(
+    spec: KernelSpec,
+    data: GPGData,
+    rhs: Array,
+    *,
+    noise: float = 0.0,
+    tol: float = 1e-10,
+    maxiter: Optional[int] = None,
+) -> GPGData:
+    """Re-solve against a NEW right-hand side, reusing factors + Cholesky.
+
+    Zero refactorization — this is the GP-X path, where the observations
+    (displacements X - x_t) change wholesale every step while the Gram
+    factors (built on the gradient inputs) only grow by borders.
+    """
+    return _solve(spec, data, rhs, data.Z, noise=noise, tol=tol,
+                  maxiter=_default_maxiter(data, maxiter))
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrapper: policy (auto-evict / auto-grow) + bookkeeping
+# ---------------------------------------------------------------------------
+
+class GPGState:
+    """A conditioned gradient-GP posterior you can stream observations into.
+
+    >>> st = GPGState("rbf", d=32, window=8, lam=1.0 / 32, noise=1e-8)
+    >>> st.extend(x, g)          # O(N^2 D) bordered update, warm CG re-solve
+    >>> pb = st.posterior(Xq)    # batched queries, zero re-solves
+
+    ``window=m`` serves from a bounded sliding window (extend auto-evicts
+    the oldest observation); ``window=None`` grows capacity geometrically
+    (a pure zero-pad — padding is exact, so growth needs no refactor).
+    """
+
+    def __init__(
+        self,
+        kernel: str | KernelSpec = "rbf",
+        d: int | None = None,
+        *,
+        capacity: int = 8,
+        window: int | None = None,
+        lam=1.0,
+        noise: float = 0.0,
+        c=None,
+        jitter: float = 1e-10,
+        deg_thresh: float = 1e-8,
+        tol: float = 1e-10,
+        maxiter: int | None = None,
+        dtype=None,
+    ):
+        if d is None:
+            raise TypeError("GPGState needs the input dimension d")
+        self.spec = get_kernel(kernel) if isinstance(kernel, str) else kernel
+        self.noise = float(noise)
+        self.jitter = float(jitter)
+        self.deg_thresh = float(deg_thresh)
+        self.tol = float(tol)
+        self.maxiter = maxiter
+        self.window = int(window) if window else None
+        cap = self.window if self.window else int(capacity)
+        self.data = gpg_init(self.spec, int(d), cap, lam=lam, c=c,
+                             dtype=dtype)
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_data(cls, kernel, X: Array, G: Array, **kw) -> "GPGState":
+        """Bulk-condition on (X, G) with ONE solve (then stream via extend)."""
+        X = jnp.atleast_2d(X)
+        n, d = X.shape
+        kw.setdefault("capacity", max(n, 1))
+        st = cls(kernel, d, **kw)
+        if st.window and n > st.window:
+            raise ValueError(f"{n} observations exceed window={st.window}")
+        cap = st.data.capacity
+        pad = cap - n
+        Xp = jnp.pad(jnp.asarray(X, st.data.X.dtype), ((0, pad), (0, 0)))
+        Gp = jnp.pad(jnp.asarray(G, st.data.X.dtype), ((0, pad), (0, 0)))
+        st.data = st.data._replace(X=Xp, G=Gp,
+                                   count=jnp.asarray(n, jnp.int32))
+        st.data = gpg_refactor(st.spec, st.data, noise=st.noise,
+                               jitter=st.jitter, tol=st.tol,
+                               maxiter=st.maxiter)
+        return st
+
+    # -- streaming updates -------------------------------------------------
+
+    def extend(self, x: Array, g: Array, *, solve: bool = True) -> "GPGState":
+        """Append one observation; auto-evict (window) / auto-grow (no window)."""
+        if self.window and self.n >= self.window:
+            self.data = gpg_evict(self.spec, self.data, noise=self.noise,
+                                  solve=False)
+        elif self.n >= self.data.capacity:
+            self._grow()
+        self.data = gpg_extend(
+            self.spec, self.data, x, g, noise=self.noise, jitter=self.jitter,
+            deg_thresh=self.deg_thresh, tol=self.tol, maxiter=self.maxiter,
+            solve=solve)
+        return self
+
+    def evict(self, k: int = 1) -> "GPGState":
+        """Drop the k oldest observations (one re-solve at the end)."""
+        for i in range(k):
+            self.data = gpg_evict(self.spec, self.data, noise=self.noise,
+                                  tol=self.tol, maxiter=self.maxiter,
+                                  solve=(i == k - 1))
+        return self
+
+    def refactor(self, lam=None) -> "GPGState":
+        """Explicit full refactorization (e.g. after a Lambda refresh)."""
+        self.data = gpg_refactor(self.spec, self.data, lam, noise=self.noise,
+                                 jitter=self.jitter, tol=self.tol,
+                                 maxiter=self.maxiter)
+        return self
+
+    def resolve(self, rhs: Array) -> Array:
+        """Solve for a new RHS with cached factors; returns trimmed Z."""
+        full = jnp.zeros_like(self.data.G).at[: rhs.shape[0]].set(
+            jnp.asarray(rhs, self.data.G.dtype))
+        self.data = gpg_resolve(self.spec, self.data, full, noise=self.noise,
+                                tol=self.tol, maxiter=self.maxiter)
+        return self.Z
+
+    def _grow(self):
+        """Double capacity by zero-padding — exact, no refactorization."""
+        d0 = self.data
+        cap = d0.capacity
+        pr = ((0, cap), (0, 0))
+        pnn = ((0, cap), (0, cap))
+        L = jnp.pad(d0.L, pnn)
+        L = L.at[jnp.arange(cap, 2 * cap), jnp.arange(cap, 2 * cap)].set(1.0)
+        self.data = d0._replace(
+            X=jnp.pad(d0.X, pr), G=jnp.pad(d0.G, pr), Xt=jnp.pad(d0.Xt, pr),
+            Z=jnp.pad(d0.Z, pr), K1e=jnp.pad(d0.K1e, pnn),
+            K2e=jnp.pad(d0.K2e, pnn), L=L)
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return int(self.data.count)
+
+    @property
+    def d(self) -> int:
+        return self.data.d
+
+    @property
+    def X(self) -> Array:
+        return self.data.X[: self.n]
+
+    @property
+    def G(self) -> Array:
+        return self.data.G[: self.n]
+
+    @property
+    def Z(self) -> Array:
+        return self.data.Z[: self.n]
+
+    @property
+    def factors(self) -> GramFactors:
+        """GramFactors trimmed to the valid rows (for core/ entry points)."""
+        k = self.n
+        return GramFactors(K1e=self.data.K1e[:k, :k],
+                           K2e=self.data.K2e[:k, :k],
+                           Xt=self.data.Xt[:k], lam=self.data.lam,
+                           noise=self.noise, c=self.data.c)
+
+    @property
+    def padded_factors(self) -> GramFactors:
+        """Fixed-capacity GramFactors views (shape-stable across extend()).
+
+        The zero rows are exact for the cross-covariance query paths and
+        Hessian matvecs — every padded kernel coefficient multiplies a
+        zero Z/Xt column — so a compiled query step keyed on these shapes
+        survives count changes without recompiling (``train/serve.py``).
+        NOT safe for ``HessianOperator.solve`` (its inner W inverse sees
+        the padding); use ``factors`` for that.
+        """
+        d = self.data
+        return GramFactors(K1e=d.K1e, K2e=d.K2e, Xt=d.Xt, lam=d.lam,
+                           noise=self.noise, c=d.c)
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "n": self.n,
+            "n_refactor": int(self.data.n_refactor),
+            "n_solve": int(self.data.n_solve),
+            "cg_iters": int(self.data.cg_iters),
+            "resnorm": float(self.data.resnorm),
+        }
+
+    def posterior(self, Xq: Array, *, probe: Array | None = None,
+                  microbatch: int | None = None):
+        """Batched posterior queries against the cached solve (zero re-solves).
+
+        See :func:`repro.core.query.posterior_batch`.
+        """
+        from .query import posterior_batch
+
+        return posterior_batch(self.spec, jnp.atleast_2d(Xq), self.factors,
+                               self.Z, probe=probe, microbatch=microbatch)
+
+    def __repr__(self):
+        s = self.stats
+        return (f"GPGState(kernel={self.spec.name!r}, n={s['n']}, "
+                f"d={self.d}, window={self.window}, "
+                f"solves={s['n_solve']}, refactors={s['n_refactor']})")

@@ -2,13 +2,15 @@
 from .optimizers import (Optimizer, adafactor, adamw, adamw8bit, get_optimizer,
                          momentum, sgd)
 from .gp_precond import gp_precond
-from .gp_directions import gph_direction, gpx_direction
-from .classic import GPOptState, gp_optimize, strong_wolfe
+from .gp_directions import (gph_direction, gph_direction_state,
+                            gpx_direction, gpx_direction_state)
+from .classic import gp_optimize, strong_wolfe
 from .compression import ef_int8_compress, ef_int8_decompress
 
 __all__ = [
     "Optimizer", "adafactor", "adamw", "adamw8bit", "get_optimizer",
-    "momentum", "sgd", "gp_precond", "gph_direction", "gpx_direction",
-    "GPOptState", "gp_optimize", "strong_wolfe", "ef_int8_compress",
+    "momentum", "sgd", "gp_precond", "gph_direction", "gph_direction_state",
+    "gpx_direction", "gpx_direction_state",
+    "gp_optimize", "strong_wolfe", "ef_int8_compress",
     "ef_int8_decompress",
 ]

@@ -12,14 +12,15 @@ work (Gram solve) is jitted and distributable.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gp_directions import gph_direction, gpx_direction
+from repro.core import GPGState
+
+from .gp_directions import gph_direction_state, gpx_direction_state
 
 Array = jnp.ndarray
 
@@ -99,23 +100,6 @@ class OptTrace(NamedTuple):
     n_grad_evals: int
 
 
-@dataclasses.dataclass
-class GPOptState:
-    X: list            # history of points
-    G: list            # history of gradients
-    m: int             # bounded history size
-
-    def push(self, x, g):
-        self.X.append(x)
-        self.G.append(g)
-        if self.m and len(self.X) > self.m:
-            self.X.pop(0)
-            self.G.pop(0)
-
-    def arrays(self):
-        return jnp.stack(self.X), jnp.stack(self.G)
-
-
 def gp_optimize(
     fg: Callable[[Array], tuple[float, Array]],
     x0: Array,
@@ -131,13 +115,31 @@ def gp_optimize(
     line_search: bool = True,
     step_fn: Callable | None = None,   # optional exact step (quadratics)
 ) -> OptTrace:
-    """Paper Alg. 1: GP-[H/X] optimization with bounded history."""
+    """Paper Alg. 1: GP-[H/X] optimization with bounded history.
+
+    The observation history lives in ONE incrementally maintained
+    ``GPGState`` (the sliding window IS the bounded history m): each
+    iteration appends the new (x, grad) pair with a bordered factor
+    update + warm-started re-solve instead of refactoring from scratch.
+    GP-X drives the FLIPPED state (inputs = gradients, observations = X),
+    re-solving only the moving right-hand side X - x_t per step.
+    """
     f = lambda x: fg(x)[0]
     x = jnp.asarray(x0)
     f0, g = fg(x)
     evals = 1
-    st = GPOptState(X=[], G=[], m=history)
-    st.push(x, g)
+    st = GPGState(kernel, x.shape[0], window=history or None,
+                  capacity=history or 8, lam=lam, noise=noise, jitter=jitter)
+
+    def push(x_, g_):
+        if mode == "gph":
+            st.extend(x_, g_)
+        else:
+            # GP-X conditions on gradients as inputs (flipped inference);
+            # the RHS moves with x_t, so the solve happens in resolve()
+            st.extend(g_, x_, solve=False)
+
+    push(x, g)
     fvals, gnorms = [float(f0)], [float(jnp.linalg.norm(g))]
     g0norm = gnorms[0]
     d = -g
@@ -161,14 +163,11 @@ def gp_optimize(
         evals += 1
         fvals.append(float(f1))
         gnorms.append(float(jnp.linalg.norm(g)))
-        st.push(x, g)
-        X, G = st.arrays()
+        push(x, g)
         if mode == "gph":
-            d = gph_direction(X, G, x, g, kernel=kernel, lam=lam, noise=noise,
-                              jitter=jitter)
+            d = gph_direction_state(st, x, g, jitter=jitter)
         else:
-            d = gpx_direction(X, G, x, kernel=kernel, lam=lam, noise=noise,
-                              jitter=jitter)
+            d = gpx_direction_state(st, x)
         if float(jnp.vdot(d, g)) > 0:
             d = -d                           # ensure descent (Alg. 1)
         if not bool(jnp.all(jnp.isfinite(d))):

@@ -1,8 +1,18 @@
 """GP-H / GP-X step directions (paper Alg. 1) as pure jittable functions.
 
 Shared by the classic optimizer loop (optim/classic.py, reproduces Fig. 2/3)
-and the training-time preconditioner (optim/gp_precond.py). Both take the
-observation history X, G as (N, D) matrices — N is the bounded history m.
+and the training-time preconditioner (optim/gp_precond.py).
+
+Two API levels:
+
+* ``gph_direction`` / ``gpx_direction`` — stateless: take the history
+  (X, G) as (N, D) matrices and refactor from scratch (exact Woodbury).
+  Kept as the one-shot/reference path.
+* ``gph_direction_state`` / ``gpx_direction_state`` — **incremental**:
+  take a conditioned ``repro.core.GPGState`` whose factors and solve were
+  maintained by ``extend()``/``evict()`` — no per-step refactorization.
+  This is what the optimization loops drive (the state IS the bounded
+  history m, as a sliding window).
 
 GP-H (Sec. 4.1.1): condition a gradient-GP on (X, G), read off the
 posterior-mean Hessian at x_t (Eq. 12, diag + rank-2N), return
@@ -11,7 +21,9 @@ posterior-mean Hessian at x_t (Eq. 12, diag + rank-2N), return
 GP-X (Sec. 4.1.2 / Eq. 13): FLIP inputs and outputs — condition a GP whose
 inputs are the observed gradients and whose observations are displacements
 X - x_t, then query the posterior mean at g = 0. The returned step is
-x̄* - x_t.
+x̄* - x_t.  In state form the flipped state extends with (g, x) pairs and
+only the right-hand side X - x_t is re-solved each step (factor reuse via
+``GPGState.resolve``).
 """
 from __future__ import annotations
 
@@ -44,6 +56,31 @@ def gpx_direction(
     f_g = build_factors(spec, G, lam=lam, noise=noise)
     Z = woodbury_solve(spec, f_g, X - x_t, jitter=jitter)
     x_star = infer_optimum(spec, f_g, Z, x_t)
+    return x_star - x_t
+
+
+def gph_direction_state(state, x_t: Array, g_t: Array, *,
+                        jitter: float = 1e-8) -> Array:
+    """GP-H step from an incrementally maintained ``GPGState`` on (X, G).
+
+    Zero solves of the Gram system here — the state's cached Z is reused;
+    only the O(ND + N^3) factored Hessian solve runs per step.
+    """
+    H = posterior_hessian(state.spec, x_t, state.factors, state.Z)
+    return -H.solve(g_t, jitter=jitter)
+
+
+def gpx_direction_state(state_g, x_t: Array) -> Array:
+    """GP-X step from a FLIPPED ``GPGState`` (inputs = gradients).
+
+    ``state_g`` must have been extended with (g, x) pairs: its factors live
+    on gradient inputs (growing by borders), while the observations
+    X - x_t move wholesale with x_t — so each step re-solves only the new
+    right-hand side against the cached factors/preconditioner.
+    """
+    rhs = state_g.G - x_t
+    Z = state_g.resolve(rhs)
+    x_star = infer_optimum(state_g.spec, state_g.factors, Z, x_t)
     return x_star - x_t
 
 

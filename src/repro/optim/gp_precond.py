@@ -1,31 +1,42 @@
 """GP-preconditioned training optimizer (the paper's method as a first-class
 distributed optimizer).
 
-Maintains a bounded history of m flattened (params, grads) pairs — two
-(m, D) matrices sharded over the WHOLE mesh like every D-vector — and
-produces a quasi-Newton step from the nonparametric Hessian posterior
-(GP-H) or the flipped optimum inference (GP-X). Until the history buffer
-fills, it falls back to plain momentum.
+Maintains a bounded sliding window of m flattened (params, grads) pairs as
+ONE incrementally updated posterior state (``repro.core.state.GPGData`` —
+two (m, D) matrices sharded over the WHOLE mesh like every D-vector, plus
+replicated (m, m) factor strips) and produces a quasi-Newton step from the
+nonparametric Hessian posterior (GP-H) or the flipped optimum inference
+(GP-X). Until the window fills, it falls back to plain momentum.
+
+Update policy per training step (all inside the jitted, sharded step —
+the state functions are pure and traceable):
+
+  * window full  -> ``gpg_evict`` (rank-1 Cholesky update, O(m^2)), then
+    ``gpg_extend`` (bordered factor update + warm-started CG re-solve);
+  * every ``refresh_every`` steps (and on first fill) the lengthscale is
+    re-estimated from the live window and the state does one full
+    ``gpg_refactor`` — Lambda changes invalidate every Gram entry, so this
+    is the one place a full O(m^2 D + m^3) rebuild is correct;
+  * a degenerate bordered pivot triggers the same refactor fallback
+    inside ``gpg_extend`` automatically.
 
 Why this is cheap at scale (DESIGN.md sec. 2): all O(D) work in the GP
 solve is the skinny contraction X̃ᵀΛV; under jit+GSPMD with D sharded, the
 per-step collective cost on top of the gradient all-reduce is a handful of
 m×m psums — O(m²) bytes, independent of D and of chip count.
-
-State layout: ring buffers xs, gs of shape (m, D_pad) f32, a scalar count,
-and the fallback momentum buffer.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.utils.flat import FlatSpec, flatten_pytree, make_flat_spec, unflatten_pytree
+from repro.core import GramFactors, get_kernel, infer_optimum, posterior_hessian
+from repro.core.state import gpg_evict, gpg_extend, gpg_init, gpg_refactor
+from repro.utils.flat import flatten_pytree, make_flat_spec, unflatten_pytree
 
-from .gp_directions import auto_lengthscale, gph_direction, gpx_direction
+from .gp_directions import auto_lengthscale
 from .optimizers import Optimizer
 
 Array = jnp.ndarray
@@ -43,39 +54,83 @@ def gp_precond(
     fallback_beta: float = 0.9,
     max_step_rms: float = 1e-2,
     pad_to: int = 1,
+    refresh_every: int = 8,
+    cg_tol: float = 1e-6,
+    cg_maxiter: int | None = None,
+    jitter: float = 1e-6,
 ) -> Optimizer:
     """GP-H/GP-X as a drop-in pytree optimizer (trust-region-clipped)."""
+    spec = get_kernel(kernel)
+    flipped = mode != "gph"       # GP-X: inputs are gradients
+    solve_kw = dict(noise=noise, tol=cg_tol,
+                    maxiter=cg_maxiter if cg_maxiter else 4 * history + 16)
 
     def init(params):
-        spec = make_flat_spec(params, pad_to=pad_to)
-        d = spec.padded
+        fspec = make_flat_spec(params, pad_to=pad_to)
+        d = fspec.padded
         return {
             "step": jnp.zeros((), jnp.int32),
             "count": jnp.zeros((), jnp.int32),
-            "xs": jnp.zeros((history, d), jnp.float32),
-            "gs": jnp.zeros((history, d), jnp.float32),
+            "gpg": gpg_init(spec, d, history, lam=1.0, dtype=jnp.float32),
             "m": jnp.zeros((d,), jnp.float32),
         }
 
     def update(grads, state, params):
-        spec = make_flat_spec(params, pad_to=pad_to)
-        x_t = flatten_pytree(params, spec)
-        g_t = flatten_pytree(grads, spec)
+        fspec = make_flat_spec(params, pad_to=pad_to)
+        x_t = flatten_pytree(params, fspec)
+        g_t = flatten_pytree(grads, fspec)
+        a_t, b_t = (g_t, x_t) if flipped else (x_t, g_t)
 
-        # ring-buffer append (shift up, write last)
-        xs = jnp.concatenate([state["xs"][1:], x_t[None]], axis=0)
-        gs = jnp.concatenate([state["gs"][1:], g_t[None]], axis=0)
-        count = jnp.minimum(state["count"] + 1, history)
+        data = state["gpg"]
+        step = state["step"]
+        prev = data.count
+        count_after = jnp.minimum(prev + 1, history)
+        gp_on = count_after >= history
+        refresh_now = gp_on & ((prev < history)
+                               | (step % refresh_every == 0))
+
+        data = jax.lax.cond(
+            prev >= history,
+            lambda d: gpg_evict(spec, d, solve=False), lambda d: d, data)
+
+        def _rhs(d):
+            # GP-X observations are displacements X - x_t: they move with
+            # x_t every step, so the RHS is rebuilt and re-solved against
+            # the cached factors (never refactored for it).
+            if not flipped:
+                return None
+            mask = (jnp.arange(history) < d.count)[:, None]
+            return jnp.where(mask, d.G - x_t[None], 0.0)
+
+        def br_fill(d):       # window not full yet: append, skip the solve
+            return gpg_extend(spec, d, a_t, b_t, noise=noise, jitter=jitter,
+                              solve=False)
+
+        def br_refresh(d):    # lengthscale refresh: one full refactor
+            d = gpg_extend(spec, d, a_t, b_t, noise=noise, jitter=jitter,
+                           solve=False)
+            lam_new = auto_lengthscale(d.G if flipped else d.X,
+                                       lengthscale_factor)
+            return gpg_refactor(spec, d, lam_new, jitter=jitter,
+                                rhs=_rhs(d), **solve_kw)
+
+        def br_incr(d):       # steady state: bordered update + warm CG
+            return gpg_extend(spec, d, a_t, b_t, jitter=jitter,
+                              rhs=_rhs(d), **solve_kw)
+
+        idx = jnp.where(~gp_on, 0, jnp.where(refresh_now, 1, 2))
+        data = jax.lax.switch(idx, [br_fill, br_refresh, br_incr], data)
         m_buf = fallback_beta * state["m"] + g_t
 
         def gp_branch(_):
-            lam = auto_lengthscale(xs, lengthscale_factor)
+            # window is full here, so every padded row is valid
+            f = GramFactors(K1e=data.K1e, K2e=data.K2e, Xt=data.Xt,
+                            lam=data.lam, noise=float(noise), c=None)
             if mode == "gph":
-                d_ = gph_direction(xs, gs, x_t, g_t, kernel=kernel, lam=lam,
-                                   noise=noise)
+                H = posterior_hessian(spec, x_t, f, data.Z)
+                d_ = -H.solve(g_t, jitter=1e-8)
             else:
-                d_ = gpx_direction(xs, gs, x_t, kernel=kernel, lam=lam,
-                                   noise=noise)
+                d_ = infer_optimum(spec, f, data.Z, x_t) - x_t
                 # descent safeguard (paper Alg. 1: flip if uphill)
                 d_ = jnp.where(jnp.vdot(d_, g_t) > 0, -d_, d_)
             # trust region: clip update RMS; reject non-finite directions
@@ -87,15 +142,14 @@ def gp_precond(
         def fallback_branch(_):
             return -fallback_lr * m_buf
 
-        upd = jax.lax.cond(count >= history, gp_branch, fallback_branch,
-                           operand=None)
+        upd = jax.lax.cond(gp_on, gp_branch, fallback_branch, operand=None)
         new_flat = x_t + upd
         new_params = jax.tree_util.tree_map(
-            lambda n, o: n.astype(o.dtype), unflatten_pytree(new_flat, spec),
+            lambda n, o: n.astype(o.dtype), unflatten_pytree(new_flat, fspec),
             params)
         return new_params, {
-            "step": state["step"] + 1, "count": count,
-            "xs": xs, "gs": gs, "m": m_buf,
+            "step": step + 1, "count": count_after,
+            "gpg": data, "m": m_buf,
         }
 
     return Optimizer(init, update, f"gp_{mode}")

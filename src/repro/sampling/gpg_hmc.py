@@ -12,47 +12,73 @@ Training procedure (Sec. 5.3): budget N = floor(sqrt(D)).
             regardless of surrogate quality (the paper's key point: the
             surrogate only costs acceptance rate, never correctness).
 
-The surrogate is the paper's exact gradient-GP: condition an RBF
-gradient-Gram on the N collected (x, grad E) pairs via the Woodbury path
-(O(N^2 D + N^6), N = 10 at D = 100) and predict with the cross
-contraction — this is precisely the machinery of core/.
+The surrogate is the paper's exact gradient-GP held in ONE incrementally
+maintained ``repro.core.GPGState``: each recondition is a bordered factor
+update + warm-started re-solve (O(N^2 D), never the O(N^6) dense inner
+refactorization), and every leapfrog gradient prediction is a batched
+query against the cached solve — precisely the serving machinery of
+core/state.py + core/query.py.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (build_factors, cross_grad_matvec, get_kernel,
-                        woodbury_solve)
+from repro.core import GPGState, cross_grad_matvec
 
 from .hmc import leapfrog
 
 Array = jnp.ndarray
 
 
-class GradientSurrogate(NamedTuple):
-    """Conditioned gradient-GP: everything needed to predict grad E."""
+@dataclasses.dataclass
+class GradientSurrogate:
+    """Conditioned gradient-GP surrogate, backed by a streaming GPGState.
 
-    X: Array          # (N, D) training locations
-    G: Array          # (N, D) true gradients
-    Z: Array          # (N, D) Gram-solve representers
-    lam: float
+    ``predictor()`` snapshots the current factors/Z into a pure closure
+    (jit-friendly leapfrog grad_fn); queries perform zero solves.
+    """
+
+    state: GPGState
+
+    @property
+    def X(self) -> Array:
+        return self.state.X
+
+    @property
+    def G(self) -> Array:
+        return self.state.G
+
+    @property
+    def Z(self) -> Array:
+        return self.state.Z
+
+    @property
+    def lam(self) -> float:
+        return float(self.state.data.lam)
+
+    def predictor(self) -> Callable[[Array], Array]:
+        spec, f, Z = self.state.spec, self.state.factors, self.state.Z
+
+        def predict(x: Array) -> Array:
+            return cross_grad_matvec(spec, x[None], f, Z)[0]
+
+        return predict
 
     def predict(self, x: Array) -> Array:
-        spec = get_kernel("rbf")
-        f = build_factors(spec, self.X, lam=self.lam)
-        return cross_grad_matvec(spec, x[None], f, self.Z)[0]
+        return self.predictor()(x)
 
 
 def condition_surrogate(X: Array, G: Array, lam: float,
                         noise: float = 1e-8) -> GradientSurrogate:
-    spec = get_kernel("rbf")
-    f = build_factors(spec, X, lam=lam, noise=noise)
-    Z = woodbury_solve(spec, f, G)
-    return GradientSurrogate(X=X, G=G, Z=Z, lam=lam)
+    """Bulk-condition a surrogate (one solve); stream further points with
+    ``surrogate.state.extend``."""
+    st = GPGState.from_data("rbf", X, G, lam=lam, noise=noise)
+    return GradientSurrogate(state=st)
 
 
 @partial(jax.jit, static_argnames=("energy_fn", "grad_fn", "steps"))
@@ -99,48 +125,51 @@ def gpg_hmc(
     lam = 1.0 / lengthscale2
     x = jnp.asarray(x0)
     e_x = energy_fn(x)
-    X = [x]
-    G = [grad_true(x)]
+    st = GPGState("rbf", x.shape[0], capacity=max(budget, 2), lam=lam,
+                  noise=1e-8)
+    st.extend(x, grad_true(x), solve=False)
     n_true = 1
     it = 0
 
-    # Phase 1: plain HMC until budget/2 diverse points
-    while len(X) < max(budget // 2, 2) and it < max_train_iters:
+    # Phase 1: plain HMC until budget/2 diverse points; the surrogate is
+    # not queried yet, so observations append factor borders without solves
+    while st.n < max(budget // 2, 2) and it < max_train_iters:
         key, k = jax.random.split(key)
         x, e_x, _, _ = _hmc_step(energy_fn, grad_true, x, e_x, k, eps, steps,
                                  mass)
         it += 1
-        if _min_r(x, jnp.stack(X), lam) > 1.0:
-            X.append(x)
-            G.append(grad_true(x))
+        if _min_r(x, st.X, lam) > 1.0:
+            st.extend(x, grad_true(x), solve=False)
             n_true += 2  # leapfrog used true grads anyway; count the query
 
-    sur = condition_surrogate(jnp.stack(X), jnp.stack(G), lam)
+    st.resolve(st.G)                  # first (and only cold) solve
+    sur = GradientSurrogate(state=st)
+    grad_sur = sur.predictor()
 
     # Phase 2: surrogate leapfrog; true-grad queries only at new locations.
     # Crucially the PROPOSAL endpoint is checked too: a rejected proposal
     # that flew far from the training set is exactly where the surrogate is
     # wrong, so that is where the next true gradient is spent. Without this
     # the chain can deadlock (all proposals rejected -> no new locations).
-    while len(X) < budget and it < max_train_iters:
+    # Each recondition is ONE bordered extend + warm re-solve on the state.
+    while st.n < budget and it < max_train_iters:
         key, k = jax.random.split(key)
-        x, e_x, _, x_prop = _hmc_step(energy_fn, sur.predict, x, e_x, k, eps,
+        x, e_x, _, x_prop = _hmc_step(energy_fn, grad_sur, x, e_x, k, eps,
                                       steps, mass)
         it += 1
         added = False
         for cand in (x, x_prop):
-            if len(X) < budget and _min_r(cand, jnp.stack(X), lam) > 1.0:
-                X.append(cand)
-                G.append(grad_true(cand))
+            if st.n < budget and _min_r(cand, st.X, lam) > 1.0:
+                st.extend(cand, grad_true(cand))
                 n_true += 1
                 added = True
         if added:
-            sur = condition_surrogate(jnp.stack(X), jnp.stack(G), lam)
+            grad_sur = sur.predictor()
 
     # Phase 3: pure surrogate sampling (jitted chain)
     def step(carry, k):
         x_, e_ = carry
-        x_, e_, acc, _ = _hmc_step(energy_fn, sur.predict, x_, e_, k, eps,
+        x_, e_, acc, _ = _hmc_step(energy_fn, grad_sur, x_, e_, k, eps,
                                    steps, mass)
         return (x_, e_), (x_, acc)
 

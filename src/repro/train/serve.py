@@ -1,15 +1,22 @@
-"""Serving step builders: prefill and one-token decode, sharding-annotated.
+"""Serving step builders: LM prefill/decode AND batched GP posterior query.
 
 decode_* shapes lower `serve_step` — one new token against a KV cache of
 seq_len — NOT train_step (assignment contract). The cache is donated so
 steady-state decode is allocation-free.
+
+``build_gp_serve_step`` is the posterior-inference analogue: a fixed-shape
+jitted microbatch query step over a live ``GPGState`` (core/state.py).
+The compiled step takes the state's factor arrays as *arguments*, so
+interleaved ``extend()`` updates never recompile — the serve loop is
+observe -> extend -> keep serving from the same compiled function.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import (SHAPES, ModelConfig, batch_specs, build_model,
@@ -98,3 +105,70 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, *,
                        abstract_inputs=(cache_abs, tok_abs, pos_abs),
                        in_shardings=(p_shard, c_shard, tok_shard, tok_shard),
                        model=model)
+
+
+# ---------------------------------------------------------------------------
+# GP posterior query serving (core/state.py + core/query.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GPServeBundle:
+    """A compiled batched-query endpoint over a live posterior state.
+
+    ``query(Xq)`` pads the request up to a multiple of ``microbatch``,
+    runs the jitted fixed-shape chunk step per microbatch against the
+    CURRENT state revision (factors/Z are read per call), and trims the
+    padding off. Zero solves per request; extend() between requests reuses
+    the same executable.
+    """
+
+    state: Any                       # GPGState
+    microbatch: int
+    step: Callable                   # jitted (factors, Z, chunk[, probe])
+    probe: Optional[jnp.ndarray]
+
+    def query(self, Xq):
+        from repro.core.query import PosteriorBatch
+
+        Xq = jnp.atleast_2d(Xq)
+        q, d = Xq.shape
+        b = self.microbatch
+        pad = (-q) % b
+        Xp = jnp.pad(Xq, ((0, pad), (0, 0)))
+        # fixed-capacity padded views: shapes are stable across extend(),
+        # so the compiled step is reused (padding is exact for queries)
+        f, Z = self.state.padded_factors, self.state.data.Z
+        chunks = []
+        for i in range(0, q + pad, b):
+            if self.probe is not None:
+                chunks.append(self.step(f, Z, Xp[i:i + b], self.probe))
+            else:
+                chunks.append(self.step(f, Z, Xp[i:i + b]))
+        out = PosteriorBatch(
+            value=jnp.concatenate([c.value for c in chunks])[:q],
+            grad=jnp.concatenate([c.grad for c in chunks])[:q],
+            hess_v=None if self.probe is None else
+            jnp.concatenate([c.hess_v for c in chunks])[:q],
+        )
+        return out
+
+
+def build_gp_serve_step(state, *, microbatch: int = 64,
+                        probe=None) -> GPServeBundle:
+    """Compile a batched posterior query step for a ``GPGState``.
+
+    One compilation per (microbatch, capacity, D) shape — the step is fed
+    the state's fixed-capacity padded factor views, so extend()/evict()
+    never change the compiled shapes (only an unbounded-growth capacity
+    doubling does).  Q-query requests cost O(Q N D) with exactly zero
+    inner solves (the solve happened at ``extend()`` time — factor reuse
+    is the whole point of the state).
+    """
+    from repro.core.query import make_query_fn
+
+    fn = make_query_fn(state.spec, with_probe=probe is not None)
+    return GPServeBundle(
+        state=state, microbatch=int(microbatch), step=jax.jit(fn),
+        probe=None if probe is None else jnp.asarray(probe),
+    )

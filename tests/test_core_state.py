@@ -1,0 +1,289 @@
+"""Incremental posterior state (core/state.py) + batched query serving
+(core/query.py, train/serve.py).
+
+The two contract tests the serving layer stands on:
+
+  * extend() k times == from-scratch factorization on the union of the
+    observations (values, gradients, Hessian matvecs), and it is genuinely
+    incremental — no refactorization events, and structurally no
+    intermediate with an N^2-sized axis (the O((N^2)^3) dense inner solve
+    of the Woodbury path can never have happened).
+  * posterior_batch serves any number of queries off ONE inner solve
+    (factor reuse asserted against the state's n_solve counter).
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GPGState, build_factors, dense_solve, get_kernel,
+                        posterior_batch, posterior_grad, posterior_hessian,
+                        posterior_value)
+from repro.core.state import gpg_extend, gpg_init
+
+KERNELS = ["rbf", "rq", "expdot"]
+D = 7
+LAM = 0.7
+NOISE = 1e-8
+
+
+def _data(rng, n, d=D, fold=0):
+    X = jax.random.normal(jax.random.fold_in(rng, 2 * fold + 1), (n, d))
+    G = jax.random.normal(jax.random.fold_in(rng, 2 * fold + 2), (n, d))
+    return X, G
+
+
+def _scratch(name, X, G, noise=NOISE):
+    spec = get_kernel(name)
+    Z = dense_solve(spec, X, G, lam=LAM, noise=noise)
+    f = build_factors(spec, X, lam=LAM, noise=noise)
+    return spec, f, Z
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.maximum(jnp.linalg.norm(b),
+                                                      1e-30))
+
+
+# ---------------------------------------------------------------------------
+# extend() == from-scratch (the acceptance property)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", KERNELS)
+def test_extend_k_times_matches_scratch(name, rng):
+    """k extends == one from-scratch solve: values, grads, Hessian mv."""
+    k = 6
+    X, G = _data(rng, k)
+    st = GPGState(name, D, capacity=8, lam=LAM, noise=NOISE)
+    for i in range(k):
+        st.extend(X[i], G[i])
+    spec, f, Zref = _scratch(name, X, G)
+    assert _rel(st.Z, Zref) < 1e-6
+
+    Xq = X[:3] + 0.1 * jax.random.normal(jax.random.fold_in(rng, 7), (3, D))
+    probe = jax.random.normal(jax.random.fold_in(rng, 8), (D,))
+    pb = st.posterior(Xq, probe=probe)
+    assert _rel(pb.value, posterior_value(spec, Xq, f, Zref)) < 1e-5
+    assert _rel(pb.grad, posterior_grad(spec, Xq, f, Zref)) < 1e-5
+    href = jnp.stack([posterior_hessian(spec, xq, f, Zref).matvec(probe)
+                      for xq in Xq])
+    assert _rel(pb.hess_v, href) < 1e-5
+    # and it really was incremental: no fallback refactorization fired
+    assert st.stats["n_refactor"] == 0
+
+
+def test_extend_matches_scratch_dot_kernel_with_center(rng):
+    """Dot-family path (centered Xt) through the same extend machinery."""
+    k = 5
+    X, G = _data(rng, k)
+    c = 0.3 * jax.random.normal(jax.random.fold_in(rng, 9), (D,))
+    st = GPGState("expdot", D, capacity=8, lam=LAM, noise=NOISE, c=c)
+    for i in range(k):
+        st.extend(X[i], G[i])
+    spec = get_kernel("expdot")
+    Zref = dense_solve(spec, X, G, lam=LAM, c=c, noise=NOISE)
+    assert _rel(st.Z, Zref) < 1e-6
+
+
+def test_extend_property_sweep(rng):
+    """Property sweep over (n, d, kernel, seed): extends match scratch."""
+    cases = [(n, d, k, s) for n in (2, 5) for d in (3, 9)
+             for k in KERNELS for s in (0, 1)]
+    for n, d, name, seed in cases:
+        key = jax.random.fold_in(rng, hash((n, d, name, seed)) % (2**31))
+        X, G = _data(key, n, d)
+        st = GPGState(name, d, capacity=n, lam=LAM, noise=NOISE)
+        for i in range(n):
+            st.extend(X[i], G[i])
+        spec = get_kernel(name)
+        Zref = dense_solve(spec, X, G, lam=LAM, noise=NOISE)
+        assert _rel(st.Z, Zref) < 1e-5, (n, d, name, seed)
+
+
+# ---------------------------------------------------------------------------
+# structurally incremental: no N^2-sized axis anywhere in extend()
+# ---------------------------------------------------------------------------
+
+
+def _jaxpr_dims(jaxpr):
+    dims = []
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", ())
+            dims.extend(int(s) for s in shape if isinstance(s, int))
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (tuple, list)) else (val,)):
+                inner = getattr(sub, "jaxpr", sub)   # ClosedJaxpr -> Jaxpr
+                if hasattr(inner, "eqns"):
+                    dims.extend(_jaxpr_dims(inner))
+    return dims
+
+
+def test_extend_never_materializes_dense_inner_system(rng):
+    """The (N^2 x N^2) refactorization is structurally impossible in
+    extend(): no traced intermediate has any axis >= N^2.  The dense inner
+    operator of ``woodbury_solve`` would show up as axes of cap^2 = 36 and
+    cap^4 = 1296; the largest legitimate object is the flattened (N*D,) CG
+    inner product, and cap*d = 30 < 36 by construction here."""
+    cap, d = 6, 5
+    spec = get_kernel("rbf")
+    data = gpg_init(spec, d, cap, lam=LAM)
+    X, G = _data(rng, cap, d)
+    for i in range(3):     # pre-fill a few rows so the border is nontrivial
+        data = gpg_extend(spec, data, X[i], G[i], noise=NOISE)
+    closed = jax.make_jaxpr(
+        partial(gpg_extend, spec, noise=NOISE))(data, X[3], G[3])
+    dims = _jaxpr_dims(closed.jaxpr)
+    assert dims and max(dims) < cap * cap, max(dims)
+
+
+# ---------------------------------------------------------------------------
+# sliding window eviction
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_window_invariant(rng):
+    """Streaming k > m observations through window=m is equivalent to
+    conditioning from scratch on the LAST m observations only."""
+    m, total = 4, 11
+    X, G = _data(rng, total)
+    st = GPGState("rbf", D, window=m, lam=LAM, noise=NOISE)
+    for i in range(total):
+        st.extend(X[i], G[i])
+        assert st.n == min(i + 1, m)          # bounded-N invariant
+        assert st.data.capacity == m          # storage never grows
+    assert jnp.allclose(st.X, X[total - m:])
+    assert jnp.allclose(st.G, G[total - m:])
+    spec, f, Zref = _scratch("rbf", X[total - m:], G[total - m:])
+    assert _rel(st.Z, Zref) < 1e-6
+    Xq = X[-2:] + 0.05
+    assert _rel(st.posterior(Xq).grad, posterior_grad(spec, Xq, f, Zref)) < 1e-5
+
+
+def test_explicit_evict_matches_scratch_on_suffix(rng):
+    X, G = _data(rng, 7)
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE)
+    st.evict(3)
+    spec, f, Zref = _scratch("rbf", X[3:], G[3:])
+    assert st.n == 4
+    assert _rel(st.Z, Zref) < 1e-6
+
+
+def test_degraded_pivot_falls_back_to_refactor(rng):
+    """A near-duplicate observation degenerates the bordered pivot; the
+    state must fall back to a full (N^3, never N^6) refactorization and
+    stay finite."""
+    X, G = _data(rng, 4)
+    st = GPGState("rbf", D, capacity=6, lam=LAM, noise=NOISE,
+                  deg_thresh=1e-4)
+    for i in range(4):
+        st.extend(X[i], G[i])
+    assert st.stats["n_refactor"] == 0
+    st.extend(X[0] + 1e-9, G[0])              # kernel-space collinear
+    assert st.stats["n_refactor"] == 1        # fallback fired
+    assert bool(jnp.all(jnp.isfinite(st.Z)))
+
+
+# ---------------------------------------------------------------------------
+# batched query serving: factor reuse, zero re-solves
+# ---------------------------------------------------------------------------
+
+
+def test_posterior_batch_q64_single_inner_solve(rng):
+    """Bulk conditioning does EXACTLY ONE inner solve; serving Q=64
+    queries (micro-batched) performs zero additional ones."""
+    X, G = _data(rng, 8)
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE)
+    assert st.stats["n_solve"] == 1
+    Xq = jax.random.normal(jax.random.fold_in(rng, 3), (64, D))
+    probe = jnp.ones((D,))
+    pb = st.posterior(Xq, probe=probe, microbatch=16)
+    assert pb.value.shape == (64,) and pb.grad.shape == (64, D)
+    assert pb.hess_v.shape == (64, D)
+    assert st.stats["n_solve"] == 1           # factor reuse: no re-solve
+    assert st.stats["n_refactor"] == 1        # only the bulk conditioning
+
+    # microbatching is exact (same contractions, chunked)
+    pb1 = st.posterior(Xq, probe=probe)
+    assert jnp.allclose(pb.value, pb1.value)
+    assert jnp.allclose(pb.grad, pb1.grad)
+    assert jnp.allclose(pb.hess_v, pb1.hess_v)
+
+
+def test_posterior_batch_matches_pointwise_inference(rng):
+    X, G = _data(rng, 6)
+    st = GPGState.from_data("rq", X, G, lam=LAM, noise=NOISE)
+    spec, f, Zref = _scratch("rq", X, G)
+    Xq = jax.random.normal(jax.random.fold_in(rng, 4), (5, D))
+    pb = posterior_batch(st.spec, Xq, st.factors, st.Z, microbatch=2)
+    assert _rel(pb.grad, posterior_grad(spec, Xq, f, Zref)) < 1e-5
+    assert _rel(pb.value, posterior_value(spec, Xq, f, Zref)) < 1e-5
+
+
+def test_gp_serve_bundle_pads_and_reuses_compilation(rng):
+    from repro.train.serve import build_gp_serve_step
+
+    X, G = _data(rng, 5)
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE, capacity=8)
+    srv = build_gp_serve_step(st, microbatch=8)
+    Xq = jax.random.normal(jax.random.fold_in(rng, 5), (13, D))  # != 0 mod 8
+    pb = srv.query(Xq)
+    ref = st.posterior(Xq)
+    assert pb.grad.shape == (13, D)
+    assert jnp.allclose(pb.grad, ref.grad)
+    assert jnp.allclose(pb.value, ref.value)
+    # extend between requests changes count (5 -> 6) but NOT the padded
+    # shapes: the SAME executable must serve the new state revision
+    assert srv.step._cache_size() == 1
+    st.extend(Xq[0], G[0] * 0.5)
+    pb2 = srv.query(Xq[:3])
+    ref2 = st.posterior(Xq[:3])
+    assert jnp.allclose(pb2.grad, ref2.grad)
+    assert srv.step._cache_size() == 1       # no recompilation happened
+
+
+# ---------------------------------------------------------------------------
+# factor-reuse re-solves (GP-X) and state-vs-stateless directions
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_new_rhs_reuses_factors(rng):
+    X, G = _data(rng, 6)
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE)
+    refactors = st.stats["n_refactor"]
+    rhs = jax.random.normal(jax.random.fold_in(rng, 6), (6, D))
+    Z = st.resolve(rhs)
+    Zref = dense_solve(get_kernel("rbf"), X, rhs, lam=LAM, noise=NOISE)
+    assert _rel(Z, Zref) < 1e-6
+    assert st.stats["n_refactor"] == refactors   # zero refactorization
+
+
+def test_state_directions_match_stateless(rng):
+    from repro.optim import (gph_direction, gph_direction_state,
+                             gpx_direction, gpx_direction_state)
+
+    X, G = _data(rng, 5)
+    x_t, g_t = X[-1], G[-1]
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE)
+    d_state = gph_direction_state(st, x_t, g_t)
+    d_ref = gph_direction(X, G, x_t, g_t, kernel="rbf", lam=LAM, noise=NOISE)
+    assert _rel(d_state, d_ref) < 1e-5
+
+    stg = GPGState.from_data("rbf", G, X, lam=LAM, noise=NOISE)  # flipped
+    d_state = gpx_direction_state(stg, x_t)
+    d_ref = gpx_direction(X, G, x_t, kernel="rbf", lam=LAM, noise=NOISE)
+    assert _rel(d_state, d_ref) < 1e-5
+
+
+def test_unbounded_growth_is_exact(rng):
+    """window=None doubles capacity by zero-padding; padding is inert."""
+    X, G = _data(rng, 9)
+    st = GPGState("rbf", D, capacity=2, lam=LAM, noise=NOISE)
+    for i in range(9):
+        st.extend(X[i], G[i])
+    assert st.n == 9 and st.data.capacity >= 9
+    spec, f, Zref = _scratch("rbf", X, G)
+    assert _rel(st.Z, Zref) < 1e-6

@@ -1,0 +1,47 @@
+"""Execute every ```python code block in the given markdown files.
+
+The CI docs job runs this over README.md so documented snippets cannot
+rot: each fenced python block is executed in its own namespace, in order,
+and any exception fails the build with the block's source and location.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py README.md [more.md ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def blocks_of(path: str) -> list[tuple[int, str]]:
+    text = open(path, encoding="utf-8").read()
+    out = []
+    for m in FENCE.finditer(text):
+        line = text[: m.start()].count("\n") + 2   # first line of the code
+        out.append((line, m.group(1)))
+    return out
+
+
+def main(paths: list[str]) -> int:
+    failures = 0
+    for path in paths:
+        blocks = blocks_of(path)
+        if not blocks:
+            print(f"{path}: no python blocks")
+            continue
+        for line, src in blocks:
+            t0 = time.time()
+            try:
+                exec(compile(src, f"{path}:{line}", "exec"), {"__name__": "__docs__"})
+                print(f"{path}:{line}: ok ({time.time()-t0:.1f}s)")
+            except Exception as e:  # noqa: BLE001 — report and keep going
+                failures += 1
+                print(f"{path}:{line}: FAILED — {type(e).__name__}: {e}")
+                print("----\n" + src.strip() + "\n----")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["README.md"]))
