@@ -15,6 +15,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
 from repro.configs.paper_gp import HMC as CFG
+from repro.hyper import HyperParams
 from repro.sampling import (banana_energy, banana_energy_rotated, gpg_hmc,
                             hmc, random_rotation)
 
@@ -25,14 +26,17 @@ def run(n_samples: int = 400) -> dict:
     eps = CFG.eps_base / fourth
     steps = CFG.t_base * fourth
     budget = int(CFG.budget_factor * math.floor(math.sqrt(d)))
+    refit = CFG.hyper_mode == "mll"
     key = jax.random.PRNGKey(CFG.seed)
     x0 = jax.random.normal(key, (d,))
 
     res_hmc = hmc(banana_energy, x0, key, n_samples=n_samples, eps=eps,
                   steps=steps, mass=CFG.mass)
+    hp = HyperParams.create(lengthscale2=CFG.lengthscale2_factor * d,
+                            noise=1e-8)
     res_gpg = gpg_hmc(banana_energy, x0, jax.random.PRNGKey(CFG.seed + 1),
                       n_samples=n_samples, eps=eps, steps=steps,
-                      lengthscale2=CFG.lengthscale2_factor * d,
+                      hypers=hp, refit_surrogate=refit,
                       budget=budget, mass=CFG.mass, max_train_iters=600)
 
     # rotated instance (conservative lengthscale + half step, App. F.3)
@@ -40,8 +44,10 @@ def run(n_samples: int = 400) -> dict:
     e_rot = banana_energy_rotated(R)
     res_rot = gpg_hmc(e_rot, x0, jax.random.PRNGKey(CFG.seed + 2),
                       n_samples=n_samples // 2, eps=eps / 2, steps=steps,
-                      lengthscale2=0.25 * d, budget=budget, mass=CFG.mass,
-                      max_train_iters=600)
+                      hypers=HyperParams.create(lengthscale2=0.25 * d,
+                                                noise=1e-8),
+                      refit_surrogate=refit,
+                      budget=budget, mass=CFG.mass, max_train_iters=600)
 
     grad_calls_hmc = n_samples * (steps + 1)
     out = {

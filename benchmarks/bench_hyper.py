@@ -1,0 +1,169 @@
+"""Model-selection bench: structured exact MLL vs the dense oracle.
+
+Claims gated here (DESIGN.md sec. 11):
+
+  1. ACCURACY    — `hyper.mll` matches the dense `slogdet` + solve oracle
+                   to <= 1e-5 relative for BOTH kernel families, and its
+                   hyper-gradient matches central finite differences.
+  2. STRUCTURE   — the jaxpr of `mll` (and of `jax.grad(mll)`) contains NO
+                   intermediate with an axis >= N*D: the (ND, ND) Gram is
+                   structurally absent, not just avoided on average.
+  3. SCALING     — structured MLL wall-clock at D far beyond what the
+                   dense oracle can touch (its (ND, ND) matrix would be
+                   GBs), plus a measured small-size speedup ratio.
+  4. FIT         — `hyper.fit` on the Fig.-3 relaxed-Rosenbrock gradient
+                   surrogate improves the evidence over the
+                   `auto_lengthscale` median-distance heuristic init.
+
+Emits ``BENCH_hyper.json`` at the repo root (standalone or via
+``benchmarks.run``) so successive PRs can diff the trajectory.
+"""
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core import get_kernel
+from repro.hyper import (HyperParams, assert_no_dense_gram, fit, mll,
+                         mll_dense)
+from repro.optim.gp_directions import auto_lengthscale
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rel(a, b):
+    return float(abs(a - b) / max(1.0, abs(b)))
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    fn(*args)                      # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def _rosenbrock_surrogate_data(d: int = 100, n: int = 8, seed: int = 0):
+    """(X, G) along a descent path of the relaxed Rosenbrock (Fig. 3)."""
+    def f(x):
+        return jnp.sum(x[:-1] ** 2 + 2.0 * (x[1:] - x[:-1] ** 2) ** 2)
+
+    g = jax.grad(f)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    X, G = [], []
+    for _ in range(n):
+        gx = g(x)
+        X.append(x)
+        G.append(gx)
+        x = x - 0.02 * gx / (1.0 + jnp.linalg.norm(gx) / jnp.sqrt(d))
+    return jnp.stack(X), jnp.stack(G)
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    # -- 1. accuracy vs the dense oracle (both families) + gradients ------
+    acc = {}
+    grads_ok = True
+    for name, c in [("rbf", None), ("rq", None), ("expdot", 0.2),
+                    ("poly3", 0.1)]:
+        spec = get_kernel(name)
+        n, d = 5, 8
+        X = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+        G = jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+        cc = None if c is None else c * jnp.ones(d)
+        h = HyperParams.create(lengthscale2=2.0, signal=1.2, noise=1e-4)
+        a = mll(spec, X, G, h, c=cc)
+        b = mll_dense(spec, X, G, h, c=cc)
+        acc[name] = _rel(float(a), float(b))
+        g = jax.grad(lambda hp: mll(spec, X, G, hp, c=cc))(h)
+        eps = 1e-5
+        for i, fld in enumerate(h._fields):
+            hp = h._replace(**{fld: getattr(h, fld) + eps})
+            hm = h._replace(**{fld: getattr(h, fld) - eps})
+            fd = float(mll(spec, X, G, hp, c=cc)
+                       - mll(spec, X, G, hm, c=cc)) / (2 * eps)
+            rel = abs(float(g[i]) - fd) / max(1.0, abs(fd))
+            grads_ok &= rel < 1e-4
+    out["mll_vs_dense_rel_err"] = acc
+    out["acc_ok"] = bool(max(acc.values()) <= 1e-5)
+    out["grads_match_fd"] = bool(grads_ok)
+
+    # -- 2. structural gate: no (ND, ND) axis in the jaxpr -----------------
+    n, d = 6, 64
+    X = jax.random.normal(jax.random.fold_in(key, 3), (n, d))
+    G = jax.random.normal(jax.random.fold_in(key, 4), (n, d))
+    h = HyperParams.create(lengthscale2=float(d), noise=1e-6)
+    worst = worst_g = None
+    structural_ok = True
+    for name in ("rbf", "expdot"):
+        spec = get_kernel(name)
+        try:
+            worst = assert_no_dense_gram(spec, X, G, h)
+            worst_g = assert_no_dense_gram(spec, X, G, h, grad=True)
+        except AssertionError:
+            structural_ok = False
+    out["structural_ok"] = structural_ok
+    out["jaxpr_max_axis"] = {"mll": worst, "grad": worst_g, "nd": n * d,
+                             "n2": n * n}
+
+    # -- 3. wall-clock: structured at dense-impossible D, + small ratio ----
+    spec = get_kernel("rbf")
+    f_struct = jax.jit(lambda X, G, h: mll(spec, X, G, h))
+    times = {}
+    for dd in (256, 2048, 8192):
+        Xb = jax.random.normal(jax.random.fold_in(key, dd), (8, dd))
+        Gb = jax.random.normal(jax.random.fold_in(key, dd + 1), (8, dd))
+        hb = HyperParams.create(lengthscale2=float(dd), noise=1e-6)
+        times[f"structured_n8_d{dd}_ms"] = 1e3 * _time(f_struct, Xb, Gb, hb)
+    Xs = jax.random.normal(jax.random.fold_in(key, 7), (6, 64))
+    Gs = jax.random.normal(jax.random.fold_in(key, 8), (6, 64))
+    hs = HyperParams.create(lengthscale2=64.0, noise=1e-6)
+    t_s = _time(jax.jit(lambda: mll(spec, Xs, Gs, hs)))
+    t_d = _time(jax.jit(lambda: mll_dense(spec, Xs, Gs, hs)))
+    times["small_n6_d64_structured_ms"] = 1e3 * t_s
+    times["small_n6_d64_dense_ms"] = 1e3 * t_d
+    times["small_speedup_x"] = t_d / max(t_s, 1e-12)
+    out["timings"] = {k: round(v, 3) for k, v in times.items()}
+    # the dense (ND=65536)^2 Gram would be 32 GiB in f64; structured runs it
+    out["dense_gram_bytes_at_d8192"] = int((8 * 8192) ** 2 * 8)
+
+    # -- 4. fit on the Fig.-3 Rosenbrock surrogate beats the heuristic -----
+    X, G = _rosenbrock_surrogate_data()
+    lam0 = auto_lengthscale(X)
+    init = HyperParams.from_lam(lam0, signal=1.0, noise=1e-8)
+    res = fit("rbf", X, G, init=init, steps=150)
+    out["rosenbrock_fit"] = {
+        "mll_heuristic_init": float(res.mll0),
+        "mll_fitted": float(res.mll),
+        "improvement": res.improvement,
+        "n_steps": res.n_steps,
+        "converged": bool(res.converged),
+        "hypers": res.hypers.natural(),
+        "heuristic_lengthscale2": float(1.0 / lam0),
+    }
+    fit_ok = res.improvement > 0.0
+
+    out["claim"] = ("exact structured MLL == dense oracle (<=1e-5), exact "
+                    "hyper-gradients, no (ND, ND) intermediate in the "
+                    "jaxpr, and MLL fit beats the median-distance "
+                    "heuristic on the Fig.-3 surrogate")
+    out["claim_holds"] = bool(out["acc_ok"] and grads_ok and structural_ok
+                              and fit_ok)
+    return out
+
+
+def main() -> None:
+    r = run()
+    print(json.dumps(r, indent=1, default=str))
+    with open(os.path.join(_ROOT, "BENCH_hyper.json"), "w") as fh:
+        json.dump(r, fh, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,8 @@ BENCHES = [
      "Pallas kernels vs oracles + throughput"),
     ("gp_collectives", "benchmarks.bench_gp_optimizer_collectives",
      "DESIGN 2: GP optimizer collective footprint"),
+    ("hyper", "benchmarks.bench_hyper",
+     "DESIGN 11: structured exact MLL + hyperparameter fit"),
 ]
 
 
@@ -71,7 +73,7 @@ def main() -> None:
     # Per-PR perf trajectory: the roofline-scored benches land at the repo
     # root so successive PRs can diff them (CI uploads them as artifacts).
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    for key in ("kernels", "iterative"):
+    for key in ("kernels", "iterative", "hyper"):
         if key in results:
             with open(os.path.join(root, f"BENCH_{key}.json"), "w") as f:
                 json.dump(results[key], f, indent=1, default=str)

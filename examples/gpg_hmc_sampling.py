@@ -10,6 +10,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
+from repro.hyper import HyperParams
 from repro.sampling import banana_energy, gpg_hmc, hmc
 
 D = 100
@@ -26,12 +27,14 @@ res = hmc(banana_energy, x0, key, n_samples=n_samples, eps=eps, steps=steps)
 print(f"HMC      accept={float(res.accept_rate):.2f} "
       f"(true-gradient calls: {n_samples * (steps + 1):,})")
 
+hp = HyperParams.create(lengthscale2=0.4 * D, noise=1e-8)  # App. F.3 init
 res2 = gpg_hmc(banana_energy, x0, jax.random.PRNGKey(1),
                n_samples=n_samples, eps=eps, steps=steps,
-               lengthscale2=0.4 * D, budget=int(math.sqrt(D)))
+               hypers=hp, budget=int(math.sqrt(D)))
 print(f"GPG-HMC  accept={res2.accept_rate:.2f} "
       f"(true-gradient calls: {res2.n_true_grad_calls} — "
       f"{n_samples * (steps + 1) / res2.n_true_grad_calls:,.0f}x fewer)")
+print(f"surrogate hypers (shared container): {res2.surrogate.hypers}")
 print("samples stay valid: the Metropolis test uses the TRUE energy;")
 print("the surrogate only trades acceptance rate for gradient cost.")
 

@@ -9,17 +9,27 @@ optimizer workloads):
                                                    refactorization)
                       ->  batched candidate scoring over the compiled
                           serve step               (Q candidates along the
-                                                   gradient ray, posterior-
-                                                   value acquisition,
+                                                   gradient ray, EXPECTED
+                                                   IMPROVEMENT acquisition
+                                                   from the posterior
+                                                   mean + std,
                                                    ZERO re-solves)
                       ->  pick the next point, evaluate, repeat.
 
 Every iteration touches the inner system exactly once (the extend's
 warm-started re-solve); all Q candidate evaluations ride the cached
 factors through train/serve.py's fixed-shape jitted query step — the same
-executable across all rounds, because extend() never changes array shapes.
+executable across all rounds, because extend() never changes array shapes
+(and hypers enter as dynamic solver arrays, so even a refit would not
+recompile).
 
-Run:   PYTHONPATH=src python examples/streaming_bo.py [--smoke]
+Acquisition: with ``return_std`` on (the default) candidates are ranked by
+EI against the incumbent's *model* value — the gradient-only posterior
+mean is defined up to an additive constant, so the incumbent is scored in
+the SAME batch and the constant cancels.  ``--mean-only`` falls back to
+pure posterior-mean exploitation (the pre-uncertainty behavior).
+
+Run:   PYTHONPATH=src python examples/streaming_bo.py [--smoke] [--mean-only]
 """
 import sys
 import time
@@ -28,11 +38,13 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
+from jax.scipy.special import erf
 
 from repro.core import GPGState
 from repro.train.serve import build_gp_serve_step
 
 SMOKE = "--smoke" in sys.argv
+USE_STD = "--mean-only" not in sys.argv   # EI needs return_std on the step
 D = 64 if SMOKE else 500          # search-space dimension
 ROUNDS = 6 if SMOKE else 30       # BO iterations
 Q = 64                            # candidates scored per round (batched)
@@ -46,36 +58,67 @@ def f(x):                         # ill-conditioned quadratic + ripple
 
 fg = jax.jit(jax.value_and_grad(f))
 
+
+def _phi(z):                      # standard normal pdf
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def _Phi(z):                      # standard normal cdf
+    return 0.5 * (1.0 + erf(z / jnp.sqrt(2.0)))
+
+
+def expected_improvement(mu, sigma, mu_best):
+    """EI for MINIMIZATION: E[max(mu_best - f, 0)] under N(mu, sigma^2)."""
+    sigma = jnp.maximum(sigma, 1e-12)
+    imp = mu_best - mu
+    z = imp / sigma
+    return imp * _Phi(z) + sigma * _phi(z)
+
+
 key = jax.random.PRNGKey(0)
 x0 = 2.0 * jax.random.normal(key, (D,))
 st = GPGState("rbf", d=D, window=WINDOW, lam=1.0 / D, noise=1e-9)
-serve = build_gp_serve_step(st, microbatch=Q)
+serve = build_gp_serve_step(st, microbatch=Q + 1, return_std=USE_STD)
 
 best_x = x0
 best_f, best_g = fg(x0)
 best_f = float(best_f)
 f0 = best_f
 alpha = 0.05                      # adaptive trust-region step scale
+incumbent_fresh = True            # extend the incumbent only when it moved
 t0 = time.time()
 for it in range(ROUNDS):
-    # 1. stream the gradient at the incumbent into the posterior state
-    st.extend(best_x, best_g)
+    # 1. stream the gradient at the incumbent into the posterior state —
+    #    but only a NEW incumbent: re-appending an unchanged best_x every
+    #    stalled round would fill the sliding window with duplicates and
+    #    degenerate the bordered factorization
+    if incumbent_fresh:
+        st.extend(best_x, best_g)
+        incumbent_fresh = False
 
-    # 2. candidates along the (jittered) gradient ray at Q step sizes;
-    #    ONE batched query against the cached solve scores them all —
-    #    the posterior mean value is the acquisition (pure exploitation)
+    # 2. candidates along the (jittered) gradient ray at Q step sizes,
+    #    plus the incumbent itself (the EI reference — the posterior mean
+    #    from gradients is only defined up to a constant, which cancels
+    #    inside one batch); ONE batched query scores them all
     key, k1 = jax.random.split(key)
     steps = alpha * jnp.logspace(-2.0, 1.0, Q)[:, None]
     jitterd = (0.05 * jnp.linalg.norm(best_g) / jnp.sqrt(D)
                * jax.random.normal(k1, (Q, D)))
     cands = best_x[None] - steps * (best_g[None] + jitterd)
-    pb = serve.query(cands)
-    pick = cands[int(jnp.argmin(pb.value))]
+    batch = jnp.concatenate([cands, best_x[None]], axis=0)
+    pb = serve.query(batch)
+    if pb.std is not None:        # EI acquisition (falls back to mean)
+        mu, mu_best = pb.value[:Q], pb.value[Q]
+        ei = expected_improvement(mu, pb.std[:Q], mu_best)
+        pick = cands[int(jnp.argmax(ei))]
+    else:
+        pick = cands[int(jnp.argmin(pb.value[:Q]))]
 
     # 3. the ONLY true function/gradient evaluation of the round
     fx, gx = fg(pick)
     if float(fx) < best_f:
         best_x, best_f, best_g = pick, float(fx), gx
+        incumbent_fresh = True
         alpha = min(alpha * 1.5, 10.0)         # grow the trust region
     else:
         st.extend(pick, gx)                    # failed pick still informs
@@ -86,6 +129,7 @@ for it in range(ROUNDS):
               f"  n={s['n']}  solves={s['n_solve']}"
               f"  refactors={s['n_refactor']}  cg_iters={s['cg_iters']}")
 
-print(f"\n{ROUNDS} rounds, {Q} candidates/round in {time.time()-t0:.1f}s: "
-      f"f {f0:+.3f} -> {best_f:+.3f}  ({st})")
+acq = "EI" if USE_STD else "mean"
+print(f"\n{ROUNDS} rounds ({acq} acquisition), {Q} candidates/round in "
+      f"{time.time()-t0:.1f}s: f {f0:+.3f} -> {best_f:+.3f}  ({st})")
 assert best_f < f0, "BO loop failed to improve on the start point"

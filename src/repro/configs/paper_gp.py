@@ -37,7 +37,13 @@ class HMCConfig:
     # step size / leapfrog steps scale with D per Neal (App. F.3)
     eps_base: float = 4e-3
     t_base: int = 32
+    # ell^2 = 0.4*D is the paper's HEURISTIC INIT for the axis-aligned
+    # banana (App. F.3) — a hand-set guess, not a fitted value.  With
+    # hyper_mode="mll" it only seeds ``repro.hyper.fit``: the surrogate
+    # re-fits (lengthscale, signal, noise) by exact structured MLL ascent
+    # on the phase-1 training set (GPGState.refit inside gpg_hmc).
     lengthscale2_factor: float = 0.4     # ell^2 = 0.4*D (aligned case)
+    hyper_mode: str = "heuristic"        # 'heuristic' | 'mll'
     budget_factor: float = 1.0           # N = floor(sqrt(D))
     mass: float = 1.0
     seed: int = 0

@@ -10,11 +10,20 @@ Per microbatch of queries, everything routes through the fused backend
 cross-covariance paths (``cross_value_matvec`` / ``cross_grad_matvec`` —
 ``backend.gram_update`` streams, one pallas launch each on TPU):
 
-  value:   posterior mean of f       (Q,)    — up to the prior constant
-  grad:    posterior mean of grad f  (Q, D)  — paper Eq. 26
-  hess_v:  posterior mean Hessian-vector product H(x_q) @ v  (Q, D)
-           — paper Eq. 12, applied through the diag + rank-2N factored
-           form, vmapped over the microbatch.
+  value:    posterior mean of f       (Q,)    — up to the prior constant
+  grad:     posterior mean of grad f  (Q, D)  — paper Eq. 26
+  hess_v:   posterior mean Hessian-vector product H(x_q) @ v  (Q, D)
+            — paper Eq. 12, applied through the diag + rank-2N factored
+            form, vmapped over the microbatch.
+  std:      posterior std of f        (Q,)    — ``return_std=True``
+  grad_std: posterior std of grad f   (Q, D)  — ``return_grad_std=True``
+
+The uncertainty paths (``repro.hyper.variance``) additionally need ONE
+structured factorization of the noisy Gram per state revision (the
+``GramSolver``); it is built on demand here, or passed in pre-factorized
+by the serving layer.  Each value-std query is then one structured
+Woodbury application (O(N^2 D + N^4)); gradient stds cost D applications
+per query and are opt-in separately.
 
 The microbatching loop bounds peak memory at O(B N D) for microbatch B and
 keeps each chunk a single compiled computation — the shape served traffic
@@ -36,11 +45,13 @@ Array = jnp.ndarray
 
 
 class PosteriorBatch(NamedTuple):
-    """Batched posterior means at Q query points."""
+    """Batched posterior means (and optional stds) at Q query points."""
 
-    value: Array                    # (Q,)   mean of f (up to prior const)
-    grad: Array                     # (Q, D) mean of grad f
-    hess_v: Optional[Array] = None  # (Q, D) mean Hessian @ probe, if asked
+    value: Array                      # (Q,)   mean of f (up to prior const)
+    grad: Array                       # (Q, D) mean of grad f
+    hess_v: Optional[Array] = None    # (Q, D) mean Hessian @ probe, if asked
+    std: Optional[Array] = None       # (Q,)   std of f, if return_std
+    grad_std: Optional[Array] = None  # (Q, D) std of grad f, if asked
 
     @property
     def q(self) -> int:
@@ -48,7 +59,8 @@ class PosteriorBatch(NamedTuple):
 
 
 def _query_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
-                 probe: Optional[Array]) -> PosteriorBatch:
+                 probe: Optional[Array], solver=None,
+                 want_grad_std: bool = False) -> PosteriorBatch:
     """One microbatch: fused cross-covariance contractions, no solves."""
     value = cross_value_matvec(spec, Xq, f, Z)
     grad = cross_grad_matvec(spec, Xq, f, Z)
@@ -56,7 +68,27 @@ def _query_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
     if probe is not None:
         hess_v = jax.vmap(
             lambda xq: posterior_hessian(spec, xq, f, Z).matvec(probe))(Xq)
-    return PosteriorBatch(value=value, grad=grad, hess_v=hess_v)
+    std = gstd = None
+    if solver is not None:
+        from repro.hyper.variance import grad_std as _gstd
+        from repro.hyper.variance import value_std as _vstd
+
+        std = _vstd(spec, Xq, f, solver)
+        if want_grad_std:
+            gstd = _gstd(spec, Xq, f, solver)
+    return PosteriorBatch(value=value, grad=grad, hess_v=hess_v, std=std,
+                          grad_std=gstd)
+
+
+def _default_solver(spec: KernelSpec, f: GramFactors, signal):
+    from repro.hyper.variance import make_solver
+
+    # Core convention: GramFactors.noise is the noise on the UNSCALED Gram
+    # (sigma^2/s^2 — what every solve in core/ adds).  make_solver expects
+    # the raw sigma^2 and divides by the signal itself, so undo that here:
+    # the effective noise must stay f.noise for any ``signal``.
+    return make_solver(spec, f, noise=jnp.asarray(f.noise) * signal,
+                       signal=signal)
 
 
 def posterior_batch(
@@ -67,6 +99,10 @@ def posterior_batch(
     *,
     probe: Optional[Array] = None,
     microbatch: Optional[int] = None,
+    return_std: bool = False,
+    return_grad_std: bool = False,
+    signal=1.0,
+    solver=None,
 ) -> PosteriorBatch:
     """Evaluate posterior mean value/grad (and Hessian @ ``probe``) at Xq.
 
@@ -75,30 +111,60 @@ def posterior_batch(
     cost O(Q N D) and perform ZERO solves — the factors and Z are reused
     verbatim (asserted against the ``GPGData.n_solve`` counter in
     tests/test_core_state.py).
+
+    ``return_std=True`` adds the posterior std of the value (``.std``);
+    ``return_grad_std=True`` additionally the per-component gradient std
+    (``.grad_std``).  Both are served through a ``repro.hyper.variance.
+    GramSolver`` — pass one via ``solver`` to amortize its factorization
+    across requests (the serve layer does), else it is built here with
+    ``f.noise`` interpreted as the EFFECTIVE noise sigma^2/s^2 (the core
+    convention for ``GramFactors``) and ``signal`` scaling the prior.
+    The solver is a factorization of the noisy Gram, NOT a re-solve of
+    the representer system: ``n_solve`` stays untouched.
     """
     Xq = jnp.atleast_2d(Xq)
+    if (return_std or return_grad_std) and solver is None:
+        solver = _default_solver(spec, f, signal)
+    if not (return_std or return_grad_std):
+        solver = None
     q = Xq.shape[0]
     if not microbatch or microbatch >= q:
-        return _query_chunk(spec, Xq, f, Z, probe)
-    chunks = [_query_chunk(spec, Xq[i:i + microbatch], f, Z, probe)
+        return _query_chunk(spec, Xq, f, Z, probe, solver, return_grad_std)
+    chunks = [_query_chunk(spec, Xq[i:i + microbatch], f, Z, probe, solver,
+                           return_grad_std)
               for i in range(0, q, microbatch)]
+    cat = lambda xs: jnp.concatenate(xs)
     return PosteriorBatch(
-        value=jnp.concatenate([c.value for c in chunks]),
-        grad=jnp.concatenate([c.grad for c in chunks]),
-        hess_v=None if probe is None else
-        jnp.concatenate([c.hess_v for c in chunks]),
+        value=cat([c.value for c in chunks]),
+        grad=cat([c.grad for c in chunks]),
+        hess_v=None if probe is None else cat([c.hess_v for c in chunks]),
+        std=None if solver is None else cat([c.std for c in chunks]),
+        grad_std=(cat([c.grad_std for c in chunks])
+                  if (solver is not None and return_grad_std) else None),
     )
 
 
-def make_query_fn(spec: KernelSpec, *, with_probe: bool = False):
-    """A jittable (f, Z, Xq[, probe]) -> PosteriorBatch chunk evaluator.
+def make_query_fn(spec: KernelSpec, *, with_probe: bool = False,
+                  with_std: bool = False, with_grad_std: bool = False):
+    """A jittable (f, Z[, solver], Xq[, probe]) -> PosteriorBatch evaluator.
 
-    The factors/Z are *arguments*, not captures, so one compiled function
-    serves every state revision of the same shape — extend() between
-    batches never triggers recompilation (``train/serve.py`` relies on
-    this for the streaming serve loop).
+    The factors/Z (and the variance ``GramSolver``, when ``with_std``) are
+    *arguments*, not captures, so one compiled function serves every state
+    revision of the same shape — extend() between batches never triggers
+    recompilation, and because every hyperparameter lives inside the
+    solver/factor arrays, neither does a refit (``train/serve.py`` relies
+    on this for the streaming serve loop).
     """
-    if with_probe:
+    if with_std or with_grad_std:
+        if with_probe:
+            def fn(f: GramFactors, Z: Array, solver, Xq: Array, probe: Array):
+                return _query_chunk(spec, Xq, f, Z, probe, solver,
+                                    with_grad_std)
+        else:
+            def fn(f: GramFactors, Z: Array, solver, Xq: Array):
+                return _query_chunk(spec, Xq, f, Z, None, solver,
+                                    with_grad_std)
+    elif with_probe:
         def fn(f: GramFactors, Z: Array, Xq: Array, probe: Array):
             return _query_chunk(spec, Xq, f, Z, probe)
     else:

@@ -412,6 +412,7 @@ class GPGState:
         window: int | None = None,
         lam=1.0,
         noise: float = 0.0,
+        signal: float = 1.0,
         c=None,
         jitter: float = 1e-10,
         deg_thresh: float = 1e-8,
@@ -423,6 +424,7 @@ class GPGState:
             raise TypeError("GPGState needs the input dimension d")
         self.spec = get_kernel(kernel) if isinstance(kernel, str) else kernel
         self.noise = float(noise)
+        self.signal = float(signal)
         self.jitter = float(jitter)
         self.deg_thresh = float(deg_thresh)
         self.tol = float(tol)
@@ -443,13 +445,16 @@ class GPGState:
         st = cls(kernel, d, **kw)
         if st.window and n > st.window:
             raise ValueError(f"{n} observations exceed window={st.window}")
+        if n > st.data.capacity:
+            raise ValueError(f"{n} observations exceed "
+                             f"capacity={st.data.capacity}")
         cap = st.data.capacity
         pad = cap - n
         Xp = jnp.pad(jnp.asarray(X, st.data.X.dtype), ((0, pad), (0, 0)))
         Gp = jnp.pad(jnp.asarray(G, st.data.X.dtype), ((0, pad), (0, 0)))
         st.data = st.data._replace(X=Xp, G=Gp,
                                    count=jnp.asarray(n, jnp.int32))
-        st.data = gpg_refactor(st.spec, st.data, noise=st.noise,
+        st.data = gpg_refactor(st.spec, st.data, noise=st._noise_eff,
                                jitter=st.jitter, tol=st.tol,
                                maxiter=st.maxiter)
         return st
@@ -459,12 +464,12 @@ class GPGState:
     def extend(self, x: Array, g: Array, *, solve: bool = True) -> "GPGState":
         """Append one observation; auto-evict (window) / auto-grow (no window)."""
         if self.window and self.n >= self.window:
-            self.data = gpg_evict(self.spec, self.data, noise=self.noise,
+            self.data = gpg_evict(self.spec, self.data, noise=self._noise_eff,
                                   solve=False)
         elif self.n >= self.data.capacity:
             self._grow()
         self.data = gpg_extend(
-            self.spec, self.data, x, g, noise=self.noise, jitter=self.jitter,
+            self.spec, self.data, x, g, noise=self._noise_eff, jitter=self.jitter,
             deg_thresh=self.deg_thresh, tol=self.tol, maxiter=self.maxiter,
             solve=solve)
         return self
@@ -472,14 +477,14 @@ class GPGState:
     def evict(self, k: int = 1) -> "GPGState":
         """Drop the k oldest observations (one re-solve at the end)."""
         for i in range(k):
-            self.data = gpg_evict(self.spec, self.data, noise=self.noise,
+            self.data = gpg_evict(self.spec, self.data, noise=self._noise_eff,
                                   tol=self.tol, maxiter=self.maxiter,
                                   solve=(i == k - 1))
         return self
 
     def refactor(self, lam=None) -> "GPGState":
         """Explicit full refactorization (e.g. after a Lambda refresh)."""
-        self.data = gpg_refactor(self.spec, self.data, lam, noise=self.noise,
+        self.data = gpg_refactor(self.spec, self.data, lam, noise=self._noise_eff,
                                  jitter=self.jitter, tol=self.tol,
                                  maxiter=self.maxiter)
         return self
@@ -488,7 +493,7 @@ class GPGState:
         """Solve for a new RHS with cached factors; returns trimmed Z."""
         full = jnp.zeros_like(self.data.G).at[: rhs.shape[0]].set(
             jnp.asarray(rhs, self.data.G.dtype))
-        self.data = gpg_resolve(self.spec, self.data, full, noise=self.noise,
+        self.data = gpg_resolve(self.spec, self.data, full, noise=self._noise_eff,
                                 tol=self.tol, maxiter=self.maxiter)
         return self.Z
 
@@ -504,6 +509,62 @@ class GPGState:
             X=jnp.pad(d0.X, pr), G=jnp.pad(d0.G, pr), Xt=jnp.pad(d0.Xt, pr),
             Z=jnp.pad(d0.Z, pr), K1e=jnp.pad(d0.K1e, pnn),
             K2e=jnp.pad(d0.K2e, pnn), L=L)
+
+    # -- model selection (repro.hyper) -------------------------------------
+
+    @property
+    def _noise_eff(self) -> float:
+        """sigma^2 / s^2 — the noise the UNSCALED Gram solves see.
+
+        Posterior means only depend on noise through this ratio
+        (s^2 k_q (s^2 K + sigma^2 I)^{-1} = k_q (K + sigma^2/s^2 I)^{-1}),
+        so the representer state is signal-invariant; the signal variance
+        re-enters multiplicatively in the posterior variance paths.
+        """
+        return self.noise / self.signal
+
+    @property
+    def hypers(self):
+        """Current hyperparameters as a ``repro.hyper.HyperParams``."""
+        from repro.hyper import HyperParams
+
+        lam = jnp.asarray(self.data.lam)
+        if lam.ndim != 0:
+            raise ValueError("HyperParams requires scalar (isotropic) Lambda")
+        # floor a noise-free state at a float32-representable tiny so the
+        # log-reparameterization stays finite even without x64
+        return HyperParams.create(
+            lengthscale2=1.0 / lam, signal=self.signal,
+            noise=max(self.noise, 1e-30))
+
+    def mll(self):
+        """Exact log marginal likelihood of the CURRENT window at the
+        current hypers (structured — never the (ND, ND) Gram)."""
+        from repro.hyper import mll as _mll
+
+        if self.n < 1:
+            raise ValueError("mll() needs at least one observation")
+        return _mll(self.spec, self.X, self.G, self.hypers, c=self.data.c)
+
+    def refit(self, *, mask=None, steps: int = 150, lr: float = 0.08,
+              **fit_kw):
+        """Refit the hypers by MLL ascent on the current window, then do the
+        one legitimate full refactorization with the fitted lengthscale.
+
+        Updates ``noise``/``signal``/``lam`` in place and re-solves; returns
+        the ``repro.hyper.FitResult`` (``.improvement`` = MLL gain over the
+        current hypers, which seed the fit).
+        """
+        from repro.hyper import fit as _fit
+
+        if self.n < 2:
+            raise ValueError("refit() needs at least two observations")
+        res = _fit(self.spec, self.X, self.G, init=self.hypers,
+                   c=self.data.c, mask=mask, steps=steps, lr=lr, **fit_kw)
+        self.noise = float(res.hypers.noise)
+        self.signal = float(res.hypers.signal)
+        self.refactor(lam=res.hypers.lam)
+        return res
 
     # -- views -------------------------------------------------------------
 
@@ -534,7 +595,7 @@ class GPGState:
         return GramFactors(K1e=self.data.K1e[:k, :k],
                            K2e=self.data.K2e[:k, :k],
                            Xt=self.data.Xt[:k], lam=self.data.lam,
-                           noise=self.noise, c=self.data.c)
+                           noise=self._noise_eff, c=self.data.c)
 
     @property
     def padded_factors(self) -> GramFactors:
@@ -549,7 +610,7 @@ class GPGState:
         """
         d = self.data
         return GramFactors(K1e=d.K1e, K2e=d.K2e, Xt=d.Xt, lam=d.lam,
-                           noise=self.noise, c=d.c)
+                           noise=self._noise_eff, c=d.c)
 
     @property
     def stats(self) -> dict:
@@ -562,15 +623,27 @@ class GPGState:
         }
 
     def posterior(self, Xq: Array, *, probe: Array | None = None,
-                  microbatch: int | None = None):
+                  microbatch: int | None = None, return_std: bool = False,
+                  return_grad_std: bool = False):
         """Batched posterior queries against the cached solve (zero re-solves).
 
-        See :func:`repro.core.query.posterior_batch`.
+        ``return_std``/``return_grad_std`` add posterior stds via ONE
+        structured factorization of the noisy Gram (``repro.hyper.
+        variance``).  See :func:`repro.core.query.posterior_batch`.
         """
         from .query import posterior_batch
 
+        solver = None
+        if return_std or return_grad_std:
+            from repro.hyper.variance import make_solver
+
+            solver = make_solver(self.spec, self.factors, noise=self.noise,
+                                 signal=self.signal)
         return posterior_batch(self.spec, jnp.atleast_2d(Xq), self.factors,
-                               self.Z, probe=probe, microbatch=microbatch)
+                               self.Z, probe=probe, microbatch=microbatch,
+                               return_std=return_std,
+                               return_grad_std=return_grad_std,
+                               solver=solver)
 
     def __repr__(self):
         s = self.stats

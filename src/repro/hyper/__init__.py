@@ -1,0 +1,31 @@
+"""Model selection & uncertainty: structured exact MLL, hyperparameter
+fitting, and posterior variance (paper Sec. 3-4 structure put to work for
+the evidence; DESIGN.md sec. 11).
+
+  params.py    — ``HyperParams``: the shared log-reparameterized container
+                 (one source of truth across optim / sampling / serve).
+  mll.py       — exact log marginal likelihood from the structured factors
+                 (determinant-lemma logdet on the (N^2, N^2) inner matrix;
+                 never the (ND, ND) Gram — jaxpr-assertable).
+  fit.py       — jit-compiled Adam ascent on the MLL (host loop with early
+                 stop + traceable ``fit_scan`` for in-jit refreshes).
+  variance.py  — posterior value/gradient variance via the structured
+                 Woodbury solver (``GramSolver``), clamped PSD.
+"""
+from .fit import (BOUNDS, FULL_MASK, LENGTHSCALE_ONLY, FitResult, fit,
+                  fit_scan)
+from .mll import (StructureError, assert_no_dense_gram, gram_logdet_quad,
+                  inner_matrix, make_mll_fn, mll, mll_dense)
+from .params import HyperParams
+from .variance import (GramSolver, grad_std, grad_var, make_solver,
+                       solve_gram, value_std, value_var)
+
+__all__ = [
+    "HyperParams",
+    "mll", "mll_dense", "make_mll_fn", "gram_logdet_quad", "inner_matrix",
+    "assert_no_dense_gram", "StructureError",
+    "fit", "fit_scan", "FitResult", "BOUNDS", "FULL_MASK",
+    "LENGTHSCALE_ONLY",
+    "GramSolver", "make_solver", "solve_gram",
+    "value_var", "value_std", "grad_var", "grad_std",
+]

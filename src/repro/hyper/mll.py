@@ -1,0 +1,266 @@
+"""Exact log marginal likelihood of the gradient-GP, from structured factors.
+
+The evidence of N gradient observations is governed by the (ND, ND) matrix
+
+    K = s^2 * (grad K grad')(lam) + sigma^2 I,
+
+whose log-determinant and quadratic form are exactly what the paper's
+low-rank structure (Sec. 3-4) makes cheap: with B = K1n (x) Lambda the free
+Kronecker factor and the derivative term written as the thin product A B^T
+with N^2 columns (DESIGN.md sec. 11), the matrix determinant lemma
+(Weinstein-Aronszajn) gives
+
+    logdet K = ND log s^2  +  D logdet K1n + ND log lam
+             + logdet( I_{N^2} + M ),
+    M[(a,b),(a',b')] = K2e[a,b] * K1n^{-1}[b,a'] * s(a,b,a',b'),
+
+      dot:        s = S[a,b']
+      stationary: s = S[a,a'] - S[a,b'] - S[b,a'] + S[b,b']
+
+where S = Xt Lambda Xt^T and K1n = K1e + (sigma^2/(s^2 lam)) I.  The
+quadratic form comes from the matching Woodbury identity using the same
+(N^2, N^2) inner matrix.  Total cost O(N^2 D + N^4 .. (N^2)^3), memory
+O(ND + N^4) — the (ND, ND) Gram is NEVER materialized (enforceable at the
+jaxpr level via :func:`assert_no_dense_gram`), exact where Padidar et al.
+(2021) resort to variational approximation.
+
+Everything here is a pure jnp computation of ``HyperParams`` pytrees, so
+``jax.grad(mll)`` w.r.t. log-lengthscale / log-signal / log-noise is the
+exact evidence gradient — that is what ``repro.hyper.fit`` descends.
+
+Only scalar (isotropic) Lambda is supported, matching the paper's own
+experiments and the exact-path restriction already present in
+``core/woodbury.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gram import GramFactors, build_factors
+from repro.core.kernels import KernelSpec, get_kernel
+from repro.core.mvm import l_op
+
+from .params import LOG2PI, HyperParams
+
+Array = jnp.ndarray
+
+
+def _as_spec(kernel) -> KernelSpec:
+    return get_kernel(kernel) if isinstance(kernel, str) else kernel
+
+
+# ---------------------------------------------------------------------------
+# The determinant-lemma inner matrix (N^2, N^2) and the structured pieces
+# ---------------------------------------------------------------------------
+
+
+def inner_matrix(spec: KernelSpec, f: GramFactors, K1i: Array,
+                 S: Array) -> Array:
+    """I + M — the (N^2, N^2) determinant-lemma / Woodbury inner matrix.
+
+    Built from the (N, N) strips only (O(N^4) memory).  Zero-padded factor
+    rows are inert: padded (a, b) rows of M vanish (K2e zero tail) and the
+    matrix is block upper-triangular against the identity tail, so both
+    ``slogdet`` and solves against zero-padded right-hand sides are exact.
+    """
+    n = f.K1e.shape[0]
+    if spec.is_stationary:
+        ss = (S[:, None, :, None] - S[:, None, None, :]
+              - S[None, :, :, None] + S[None, :, None, :])
+        M = f.K2e[:, :, None, None] * K1i[None, :, :, None] * ss
+    else:
+        M = (f.K2e[:, :, None, None] * K1i[None, :, :, None]
+             * S[:, None, None, :])
+    return jnp.eye(n * n, dtype=f.K1e.dtype) + M.reshape(n * n, n * n)
+
+
+def _k1n(f: GramFactors, noise_eff) -> Array:
+    """K1e + (sigma_eff^2 / lam) I on the valid block (identity-safe tail)."""
+    n = f.K1e.shape[0]
+    lam = jnp.asarray(f.lam)
+    return f.K1e + (jnp.asarray(noise_eff) / lam) * jnp.eye(n, dtype=f.K1e.dtype)
+
+
+def _rhs_inner(spec: KernelSpec, f: GramFactors, W: Array) -> Array:
+    """B^T B0^{-1} vec(R) as an (N, N) matrix, given W = K1i R / lam."""
+    lam = jnp.asarray(f.lam)
+    sw = lam * (f.Xt @ W.T)                       # sw[a,b] = lam x~_a . W_b
+    if spec.is_stationary:
+        rd = lam * jnp.sum(f.Xt * W, axis=1)      # lam x_b . W_b
+        return f.K2e * (sw - rd[None, :])
+    return f.K2e * sw
+
+
+def _correction(spec: KernelSpec, f: GramFactors, K1i: Array,
+                y: Array) -> Array:
+    """B0^{-1} A vec(y) as an (N, D) matrix (the Woodbury down-correction)."""
+    if spec.is_stationary:
+        return K1i @ (l_op(y) @ f.Xt)
+    return K1i @ (y @ f.Xt)
+
+
+def gram_logdet_quad(
+    spec: KernelSpec,
+    f: GramFactors,
+    G: Array,
+    noise_eff,
+) -> tuple[Array, Array]:
+    """(logdet, quad) of the UNSCALED system  K' = grad K grad' + noise_eff I.
+
+    logdet K' = D logdet K1n + N D log lam + logdet(I + M); the quadratic
+    form  vec(G)^T K'^{-1} vec(G)  reuses the same inner matrix through one
+    LU solve.  O(N^2 D) skinny work + O((N^2)^3) inner dense work; no
+    intermediate ever carries an ND-sized axis.
+    """
+    n, d = f.Xt.shape
+    lam = jnp.asarray(f.lam)
+    K1n = _k1n(f, noise_eff)
+    K1i = jnp.linalg.inv(K1n)
+    S = lam * (f.Xt @ f.Xt.T)
+    A = inner_matrix(spec, f, K1i, S)
+
+    _, ld_inner = jnp.linalg.slogdet(A)
+    _, ld_k1n = jnp.linalg.slogdet(K1n)
+    logdet = d * ld_k1n + n * d * jnp.log(lam) + ld_inner
+
+    W = K1i @ G / lam                              # B0^{-1} vec(G)
+    t = _rhs_inner(spec, f, W)
+    y = jnp.linalg.solve(A, t.reshape(-1)).reshape(n, n)
+    V = W - _correction(spec, f, K1i, y)           # K'^{-1} vec(G)
+    quad = jnp.sum(G * V)
+    return logdet, quad
+
+
+# ---------------------------------------------------------------------------
+# The log marginal likelihood and its dense oracle
+# ---------------------------------------------------------------------------
+
+
+def mll(
+    kernel: str | KernelSpec,
+    X: Array,
+    G: Array,
+    hypers: HyperParams,
+    *,
+    c: Optional[Array] = None,
+) -> Array:
+    """Exact log p(G | X, hypers) of the gradient GP — fully structured.
+
+    Differentiable w.r.t. the ``HyperParams`` pytree (and X/G); jittable.
+    The signal variance folds through the scaling identity
+    s^2 K + sigma^2 I = s^2 (K + sigma^2/s^2 I), so the structured pieces
+    run once on the unscaled Gram.
+    """
+    spec = _as_spec(kernel)
+    n, d = X.shape
+    # the evidence path pins the jnp oracle forms: it must be reverse-mode
+    # differentiable w.r.t. the hypers (the pallas kernels are forward-only)
+    # and is refresh-cadence work, never the per-step hot path
+    from repro.core import backend
+
+    with backend.use_backend("jnp"):
+        f = build_factors(spec, X, lam=hypers.lam, c=c)
+        logdet_u, quad_u = gram_logdet_quad(spec, f, G, hypers.noise_eff)
+    nd = n * d
+    logdet = nd * hypers.log_signal + logdet_u
+    quad = quad_u / hypers.signal
+    return -0.5 * (quad + logdet + nd * LOG2PI)
+
+
+def make_mll_fn(kernel: str | KernelSpec, X: Array, G: Array, *,
+                c: Optional[Array] = None):
+    """hypers -> mll closure over fixed data (what fit/jax.grad consume)."""
+    spec = _as_spec(kernel)
+    X = jnp.asarray(X)
+    G = jnp.asarray(G)
+
+    def fn(hypers: HyperParams) -> Array:
+        return mll(spec, X, G, hypers, c=c)
+
+    return fn
+
+
+def mll_dense(
+    kernel: str | KernelSpec,
+    X: Array,
+    G: Array,
+    hypers: HyperParams,
+    *,
+    c: Optional[Array] = None,
+) -> Array:
+    """O((ND)^3 time, (ND)^2 memory) oracle via the materialized Gram +
+    ``jnp.linalg.slogdet`` — the small-N*D reference ``mll`` is tested
+    against (tests/test_hyper.py, benchmarks/bench_hyper.py)."""
+    from repro.core.gram import dense_gram
+
+    spec = _as_spec(kernel)
+    n, d = X.shape
+    K = (hypers.signal * dense_gram(spec, X, lam=hypers.lam, c=c)
+         + hypers.noise * jnp.eye(n * d, dtype=X.dtype))
+    _, logdet = jnp.linalg.slogdet(K)
+    g = G.reshape(-1)
+    quad = g @ jnp.linalg.solve(K, g)
+    return -0.5 * (quad + logdet + n * d * LOG2PI)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr-level structural guarantee: no (ND, ND) Gram, ever
+# ---------------------------------------------------------------------------
+
+
+class StructureError(AssertionError):
+    """Raised when a traced computation materializes a forbidden axis."""
+
+
+def _jaxpr_axis_sizes(jaxpr) -> list[int]:
+    dims: list[int] = []
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            shape = getattr(getattr(v, "aval", None), "shape", ())
+            dims.extend(int(s) for s in shape if isinstance(s, int))
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (tuple, list)) else (val,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    dims.extend(_jaxpr_axis_sizes(inner))
+    return dims
+
+
+def assert_no_dense_gram(
+    kernel: str | KernelSpec,
+    X: Array,
+    G: Array,
+    hypers: HyperParams,
+    *,
+    c: Optional[Array] = None,
+    grad: bool = False,
+) -> int:
+    """Trace ``mll`` (or its hyper-gradient) and assert that no intermediate
+    carries an axis of size >= N*D — i.e. the (ND, ND) Gram (or even a
+    vec(G)-shaped flattening of it) is structurally absent.
+
+    Requires N*D > N^2 (N < D) so the legitimate (N^2, N^2) inner matrix is
+    distinguishable from the forbidden object; raises ``ValueError``
+    otherwise (the check would be vacuous).  Returns the largest axis seen.
+    """
+    spec = _as_spec(kernel)
+    n, d = X.shape
+    nd = n * d
+    if nd <= n * n:
+        raise ValueError(
+            f"structural check needs N < D to be meaningful (N={n}, D={d}: "
+            f"the legitimate N^2={n * n} inner axis is >= ND={nd})")
+    fn = make_mll_fn(spec, X, G, c=c)
+    if grad:
+        fn = jax.grad(fn)
+    closed = jax.make_jaxpr(fn)(hypers)
+    dims = _jaxpr_axis_sizes(closed.jaxpr)
+    worst = max(dims) if dims else 0
+    if worst >= nd:
+        raise StructureError(
+            f"mll trace materialized an axis of size {worst} >= N*D={nd} — "
+            "the structured path must never build the dense gradient Gram")
+    return worst

@@ -1,0 +1,123 @@
+"""The shared hyperparameter container (one source of truth across
+optim / sampling / serve).
+
+Everything downstream of the Gram factors is parameterized by exactly
+three scalars (the paper's own experiments use isotropic Lambda and fixed
+unit signal variance; App. F):
+
+  * the squared lengthscale  ell^2       (Lambda = ell^-2 I, i.e. lam = 1/ell^2)
+  * the signal variance      s^2         (prior k <- s^2 k)
+  * the noise variance       sigma^2     (observation noise on the gradients)
+
+``HyperParams`` stores their *logs* so the container doubles as the
+unconstrained optimization pytree for ``repro.hyper.fit``: a plain
+jax.grad / Adam step on the NamedTuple is automatically a step in a
+valid (positive) hyperparameter — no projection needed, only the loose
+bound guards of ``fit.py``.
+
+Scaling identities used throughout the package (DESIGN.md sec. 11):
+
+  s^2 * K_G(lam) + sigma^2 I  =  s^2 * [ K_G(lam) + (sigma^2/s^2) I ]
+
+so every structured computation runs on the *unscaled* Gram with the
+effective noise ``sigma^2/s^2``, and the signal re-enters as additive
+``ND log s^2`` (logdet) / multiplicative ``1/s^2`` (quadratic form) /
+``s^2`` (posterior variance) corrections.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class HyperParams(NamedTuple):
+    """Log-reparameterized GP hyperparameters (a jit/grad-friendly pytree).
+
+    Fields are the logs of the positive quantities; use :meth:`create` to
+    build one from natural values and the properties to read them back.
+    """
+
+    log_lengthscale2: Array      # log ell^2  (Lambda = exp(-log ell^2) I)
+    log_signal: Array            # log s^2    (signal variance)
+    log_noise: Array             # log sigma^2 (noise variance)
+
+    # -- natural-space views ------------------------------------------------
+
+    @property
+    def lengthscale2(self) -> Array:
+        return jnp.exp(self.log_lengthscale2)
+
+    @property
+    def lam(self) -> Array:
+        """The isotropic Lambda scalar: lam = 1 / ell^2."""
+        return jnp.exp(-self.log_lengthscale2)
+
+    @property
+    def signal(self) -> Array:
+        return jnp.exp(self.log_signal)
+
+    @property
+    def noise(self) -> Array:
+        return jnp.exp(self.log_noise)
+
+    @property
+    def noise_eff(self) -> Array:
+        """sigma^2 / s^2 — the noise seen by the UNSCALED Gram system."""
+        return jnp.exp(self.log_noise - self.log_signal)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        lengthscale2: float | Array = 1.0,
+        signal: float | Array = 1.0,
+        noise: float | Array = 1e-8,
+        dtype=None,
+    ) -> "HyperParams":
+        """Build from natural-space values (all must be > 0)."""
+        def enc(v):
+            a = jnp.log(jnp.asarray(v, dtype))
+            if a.ndim != 0:
+                raise ValueError("HyperParams fields must be scalars "
+                                 f"(got shape {a.shape})")
+            return a
+
+        return cls(log_lengthscale2=enc(lengthscale2), log_signal=enc(signal),
+                   log_noise=enc(noise))
+
+    @classmethod
+    def from_lam(cls, lam, signal=1.0, noise=1e-8, dtype=None) -> "HyperParams":
+        """Build from the Lambda scalar used across core/ (lam = 1/ell^2)."""
+        lam = jnp.asarray(lam, dtype)
+        if lam.ndim != 0:
+            raise ValueError("HyperParams requires scalar (isotropic) Lambda; "
+                             f"got shape {lam.shape}")
+        return cls.create(lengthscale2=1.0 / lam, signal=signal, noise=noise,
+                          dtype=dtype)
+
+    # -- misc ---------------------------------------------------------------
+
+    def natural(self) -> dict:
+        """Host-side summary {'lengthscale2', 'signal', 'noise'} as floats."""
+        return {
+            "lengthscale2": float(self.lengthscale2),
+            "signal": float(self.signal),
+            "noise": float(self.noise),
+        }
+
+    def __repr__(self):  # NamedTuple repr shows raw logs; natural is nicer
+        try:
+            n = self.natural()
+            return (f"HyperParams(ell2={n['lengthscale2']:.4g}, "
+                    f"s2={n['signal']:.4g}, noise={n['noise']:.4g})")
+        except Exception:  # traced values have no float()
+            return (f"HyperParams(log_ell2={self.log_lengthscale2}, "
+                    f"log_s2={self.log_signal}, log_n2={self.log_noise})")
+
+
+LOG2PI = math.log(2.0 * math.pi)

@@ -1,0 +1,211 @@
+"""Posterior variance / standard deviation for value and gradient queries.
+
+The missing half of the serving story: ``core/query.py`` serves posterior
+*means* off one cached solve; acquisition functions (EI/UCB) and calibrated
+model selection additionally need
+
+    var[f(x_q)]        = s^2 [ k(x_q,x_q)      - c_q^T  K'^{-1} c_q  ]
+    var[d_i f(x_q)]    = s^2 [ blk(q,q)_{ii}   - C_q,i^T K'^{-1} C_q,i ]
+
+with K' = grad K grad' + (sigma^2/s^2) I the UNSCALED noisy Gram and
+c_q / C_q the value/gradient cross-covariance columns — (N, D)-shaped
+right-hand sides in this repo's layout.  Each quadratic form is one
+structured Woodbury application through the SAME (N^2, N^2) inner matrix
+the log-marginal-likelihood uses (``mll.inner_matrix``): the
+:class:`GramSolver` factorizes it ONCE per state revision (O(N^2 D +
+(N^2)^3)), after which every query costs O(N^2 D + N^4) — value queries
+need one application, gradient queries D of them (vmapped).
+
+Variances are clamped at zero (the subtraction of two PSD quadratic forms
+can go negative by roundoff); zero-padded factor rows are masked out of
+the cross-covariance so the solver works verbatim on the fixed-capacity
+padded ``GPGData`` views (``train/serve.py`` passes those for
+compile-stability).
+
+All hyperparameters enter as ARRAYS inside the solver pytree, so a jitted
+consumer taking a ``GramSolver`` argument stays compile-stable when the
+hypers change (refit between requests never recompiles the serve step).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import lu_factor, lu_solve
+
+from repro.core.gram import GramFactors
+from repro.core.kernels import KernelSpec
+
+from .mll import _correction, _rhs_inner, inner_matrix
+
+Array = jnp.ndarray
+
+
+class GramSolver(NamedTuple):
+    """A reusable structured factorization of  K' = grad K grad' + noise I.
+
+    All fields are arrays (a jit-stable pytree): K1i the inverse Kronecker
+    factor, (A_lu, A_piv) the LU of the (N^2, N^2) inner matrix, ``mask``
+    the valid-row indicator (handles zero-padded capacity tails), and the
+    hyperparameters as dynamic scalars.
+    """
+
+    K1i: Array           # (N, N)  inverse of K1e + (noise/lam) I
+    A_lu: Array          # (N^2, N^2) LU factors of I + M
+    A_piv: Array         # (N^2,) pivots
+    mask: Array          # (N,) 1.0 on valid rows, 0.0 on the padded tail
+    lam: Array           # scalar Lambda
+    signal: Array        # scalar s^2
+    noise: Array         # scalar sigma^2 (the true, unscaled noise)
+
+    @property
+    def n(self) -> int:
+        return self.K1i.shape[0]
+
+
+def make_solver(
+    spec: KernelSpec,
+    f: GramFactors,
+    *,
+    noise=None,
+    signal=1.0,
+    count: Optional[Array] = None,
+) -> GramSolver:
+    """Factorize the structured system once (O(N^2 D + (N^2)^3)).
+
+    ``noise`` defaults to ``f.noise``; ``count`` marks the number of valid
+    rows when ``f`` is a zero-padded fixed-capacity view (padded rows of
+    the inner matrix are inert by construction — block triangular against
+    the identity tail — but the cross-covariances must be masked).
+    Traceable: usable inside jit with dynamic hypers.
+    """
+    n = f.K1e.shape[0]
+    lam = jnp.asarray(f.lam)
+    if lam.ndim != 0:
+        raise ValueError("posterior variance requires scalar Lambda "
+                         "(isotropic lengthscale), as in the exact path")
+    signal = jnp.asarray(signal, f.K1e.dtype)
+    noise = jnp.asarray(f.noise if noise is None else noise, f.K1e.dtype)
+    noise_eff = noise / signal
+    mask = (jnp.ones((n,), f.K1e.dtype) if count is None
+            else (jnp.arange(n) < count).astype(f.K1e.dtype))
+    diag = jnp.where(mask > 0, noise_eff / lam, 1.0)
+    K1n = f.K1e + jnp.diag(diag)
+    K1i = jnp.linalg.inv(K1n)
+    S = lam * (f.Xt @ f.Xt.T)
+    A = inner_matrix(spec, f, K1i, S)
+    A_lu, A_piv = lu_factor(A)
+    return GramSolver(K1i=K1i, A_lu=A_lu, A_piv=A_piv, mask=mask, lam=lam,
+                      signal=signal, noise=noise)
+
+
+def solve_gram(spec: KernelSpec, f: GramFactors, solver: GramSolver,
+               R: Array) -> Array:
+    """K'^{-1} vec(R) for an (N, D) right-hand side — O(N^2 D + N^4).
+
+    R must be zero on padded rows (mask it first); the result is again an
+    (N, D) matrix with a zero tail.
+    """
+    n = solver.n
+    W = solver.K1i @ R / solver.lam
+    t = _rhs_inner(spec, f, W)
+    y = lu_solve((solver.A_lu, solver.A_piv), t.reshape(-1)).reshape(n, n)
+    return W - _correction(spec, f, solver.K1i, y)
+
+
+# ---------------------------------------------------------------------------
+# Cross-covariance right-hand sides (the query columns of the joint Gram)
+# ---------------------------------------------------------------------------
+
+
+def _value_cross(spec: KernelSpec, xq: Array, f: GramFactors,
+                 solver: GramSolver):
+    """(c_q as (N, D), prior k_qq) for ONE value query (unscaled kernel)."""
+    lam = solver.lam
+    if spec.is_stationary:
+        dlt = xq[None, :] - f.Xt
+        r = jnp.maximum(jnp.sum(dlt * lam * dlt, axis=1), 0.0)
+        C = -2.0 * spec.k1(r)[:, None] * (lam * dlt)
+        prior = spec.k0(jnp.zeros((), xq.dtype))
+    else:
+        xqt = xq if f.c is None else xq - f.c
+        r = lam * (f.Xt @ xqt)
+        C = spec.k1(r)[:, None] * (lam * xqt)[None, :]
+        prior = spec.k0(lam * jnp.dot(xqt, xqt))
+    return C * solver.mask[:, None], prior
+
+
+def _grad_cross(spec: KernelSpec, xq: Array, f: GramFactors,
+                solver: GramSolver):
+    """(C_q as (D, N, D) RHS stack, prior blk(q,q) diagonal (D,))."""
+    lam = solver.lam
+    d = f.Xt.shape[1]
+    eye = jnp.eye(d, dtype=xq.dtype)
+    if spec.is_stationary:
+        dlt = xq[None, :] - f.Xt
+        r = jnp.maximum(jnp.sum(dlt * lam * dlt, axis=1), 0.0)
+        k1e, k2e = spec.k1e(r), spec.k2e(r)
+        u = lam * dlt                                       # (N, D)
+        # R[i, b, j] = k1e[b] lam I[i,j] + k2e[b] u[b,i] u[b,j]
+        R = (k1e[None, :, None] * lam * eye[:, None, :]
+             + k2e[None, :, None] * u.T[:, :, None] * u[None, :, :])
+        r0 = jnp.zeros((), xq.dtype)
+        prior = spec.k1e(r0) * lam * jnp.ones((d,), xq.dtype)
+    else:
+        xqt = xq if f.c is None else xq - f.c
+        r = lam * (f.Xt @ xqt)
+        k1e, k2e = spec.k1e(r), spec.k2e(r)
+        ub = lam * f.Xt                                     # Lam x~_b
+        uq = lam * xqt                                      # Lam x~_q
+        # R[i, b, j] = k1e[b] lam I[i,j] + k2e[b] ub[b,i] uq[j]
+        R = (k1e[None, :, None] * lam * eye[:, None, :]
+             + k2e[None, :, None] * ub.T[:, :, None] * uq[None, None, :])
+        rqq = lam * jnp.dot(xqt, xqt)
+        prior = spec.k1e(rqq) * lam + spec.k2e(rqq) * uq * uq
+    return R * solver.mask[None, :, None], prior
+
+
+# ---------------------------------------------------------------------------
+# Public variance / std entry points (batched over queries)
+# ---------------------------------------------------------------------------
+
+
+def value_var(spec: KernelSpec, Xq: Array, f: GramFactors,
+              solver: GramSolver) -> Array:
+    """Posterior variance of f at each query row of Xq: (Q,), clamped >= 0."""
+
+    def one(xq):
+        C, prior = _value_cross(spec, xq, f, solver)
+        V = solve_gram(spec, f, solver, C)
+        return prior - jnp.sum(C * V)
+
+    var = jax.vmap(one)(jnp.atleast_2d(Xq))
+    return jnp.maximum(solver.signal * var, 0.0)
+
+
+def grad_var(spec: KernelSpec, Xq: Array, f: GramFactors,
+             solver: GramSolver) -> Array:
+    """Posterior variance of each gradient component at Xq: (Q, D).
+
+    The diagonal of the (D, D) posterior covariance block per query — D
+    structured solves per query, vmapped; clamped at zero.
+    """
+
+    def one(xq):
+        R, prior = _grad_cross(spec, xq, f, solver)
+        V = jax.vmap(lambda Ri: solve_gram(spec, f, solver, Ri))(R)
+        return prior - jnp.sum(R * V, axis=(1, 2))
+
+    var = jax.vmap(one)(jnp.atleast_2d(Xq))
+    return jnp.maximum(solver.signal * var, 0.0)
+
+
+def value_std(spec: KernelSpec, Xq: Array, f: GramFactors,
+              solver: GramSolver) -> Array:
+    return jnp.sqrt(value_var(spec, Xq, f, solver))
+
+
+def grad_std(spec: KernelSpec, Xq: Array, f: GramFactors,
+             solver: GramSolver) -> Array:
+    return jnp.sqrt(grad_var(spec, Xq, f, solver))

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import GramFactors, get_kernel, infer_optimum, posterior_hessian
 from repro.core.state import gpg_evict, gpg_extend, gpg_init, gpg_refactor
+from repro.hyper import LENGTHSCALE_ONLY, HyperParams, fit_scan
 from repro.utils.flat import flatten_pytree, make_flat_spec, unflatten_pytree
 
 from .gp_directions import auto_lengthscale
@@ -55,11 +56,24 @@ def gp_precond(
     max_step_rms: float = 1e-2,
     pad_to: int = 1,
     refresh_every: int = 8,
+    refresh_mode: str = "heuristic",   # 'heuristic' | 'mll'
+    mll_steps: int = 8,
+    mll_lr: float = 0.15,
     cg_tol: float = 1e-6,
     cg_maxiter: int | None = None,
     jitter: float = 1e-6,
 ) -> Optimizer:
-    """GP-H/GP-X as a drop-in pytree optimizer (trust-region-clipped)."""
+    """GP-H/GP-X as a drop-in pytree optimizer (trust-region-clipped).
+
+    ``refresh_mode='mll'`` replaces the median-distance lengthscale
+    heuristic of the periodic refresh with ``mll_steps`` traceable Adam
+    steps on the exact structured log marginal likelihood
+    (``repro.hyper.fit_scan``, lengthscale only — signal/noise stay at the
+    configured values), still inside the jitted sharded training step.
+    """
+    if refresh_mode not in ("heuristic", "mll"):
+        raise ValueError(f"refresh_mode must be 'heuristic' or 'mll', "
+                         f"got {refresh_mode!r}")
     spec = get_kernel(kernel)
     flipped = mode != "gph"       # GP-X: inputs are gradients
     solve_kw = dict(noise=noise, tol=cg_tol,
@@ -109,8 +123,27 @@ def gp_precond(
         def br_refresh(d):    # lengthscale refresh: one full refactor
             d = gpg_extend(spec, d, a_t, b_t, noise=noise, jitter=jitter,
                            solve=False)
-            lam_new = auto_lengthscale(d.G if flipped else d.X,
-                                       lengthscale_factor)
+            lam_heur = auto_lengthscale(d.G if flipped else d.X,
+                                        lengthscale_factor)
+            if refresh_mode == "mll":
+                # traceable MLL ascent on the window (lengthscale only) —
+                # exact evidence gradient, heuristic kept as the seed AND
+                # the non-finite fallback (bound guards live in fit_scan).
+                # The evidence sees only the TRUE parameter columns: the
+                # pad_to tail is identically-zero fake dimensions that
+                # would bias the per-dimension logdet/quad terms (the
+                # slice bound fspec.total is static, so this jits fine)
+                obs = _rhs(d) if flipped else d.G
+                init = HyperParams.from_lam(lam_heur, signal=1.0,
+                                            noise=max(noise, 1e-12))
+                fitted, _ = fit_scan(spec, d.X[:, :fspec.total],
+                                     obs[:, :fspec.total], init,
+                                     steps=mll_steps, lr=mll_lr,
+                                     mask=LENGTHSCALE_ONLY)
+                lam_new = jnp.where(jnp.isfinite(fitted.lam), fitted.lam,
+                                    lam_heur)
+            else:
+                lam_new = lam_heur
             return gpg_refactor(spec, d, lam_new, jitter=jitter,
                                 rhs=_rhs(d), **solve_kw)
 

@@ -1,7 +1,8 @@
 from .hmc import HMCResult, hmc, leapfrog
-from .gpg_hmc import GPGHMCResult, GradientSurrogate, gpg_hmc
+from .gpg_hmc import (GPGHMCResult, GradientSurrogate, condition_surrogate,
+                      gpg_hmc)
 from .targets import banana_energy, banana_energy_rotated, random_rotation
 
 __all__ = ["HMCResult", "hmc", "leapfrog", "GPGHMCResult",
-           "GradientSurrogate", "gpg_hmc", "banana_energy",
-           "banana_energy_rotated", "random_rotation"]
+           "GradientSurrogate", "condition_surrogate", "gpg_hmc",
+           "banana_energy", "banana_energy_rotated", "random_rotation"]

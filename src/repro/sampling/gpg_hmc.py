@@ -29,10 +29,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import GPGState, cross_grad_matvec
+from repro.hyper import HyperParams
 
 from .hmc import leapfrog
 
 Array = jnp.ndarray
+
+
+def _as_hypers(hypers, lengthscale2, *, noise: float = 1e-8) -> HyperParams:
+    """Normalize the hyperparameter inputs to ONE ``HyperParams``.
+
+    ``lengthscale2`` is the legacy loose-float spelling (kept so existing
+    call sites run unchanged); ``hypers`` — e.g. a ``repro.hyper.fit``
+    result — wins when both are given.
+    """
+    if hypers is not None:
+        if not isinstance(hypers, HyperParams):
+            raise TypeError(f"hypers must be a HyperParams, got "
+                            f"{type(hypers).__name__}")
+        return hypers
+    if lengthscale2 is None:
+        raise TypeError("need either hypers=HyperParams(...) or "
+                        "lengthscale2=<float>")
+    return HyperParams.create(lengthscale2=lengthscale2, noise=noise)
 
 
 @dataclasses.dataclass
@@ -61,6 +80,12 @@ class GradientSurrogate:
     def lam(self) -> float:
         return float(self.state.data.lam)
 
+    @property
+    def hypers(self) -> HyperParams:
+        """The surrogate's current hypers (shared container, one source of
+        truth with optim/ and serve/)."""
+        return self.state.hypers
+
     def predictor(self) -> Callable[[Array], Array]:
         spec, f, Z = self.state.spec, self.state.factors, self.state.Z
 
@@ -73,11 +98,20 @@ class GradientSurrogate:
         return self.predictor()(x)
 
 
-def condition_surrogate(X: Array, G: Array, lam: float,
+def condition_surrogate(X: Array, G: Array,
+                        hypers: HyperParams | float | None = None,
                         noise: float = 1e-8) -> GradientSurrogate:
     """Bulk-condition a surrogate (one solve); stream further points with
-    ``surrogate.state.extend``."""
-    st = GPGState.from_data("rbf", X, G, lam=lam, noise=noise)
+    ``surrogate.state.extend``.  ``hypers`` is a ``HyperParams`` (preferred)
+    or the legacy bare Lambda float."""
+    if hypers is None:
+        raise TypeError("condition_surrogate needs hypers=HyperParams(...) "
+                        "or the legacy bare Lambda float")
+    if not isinstance(hypers, HyperParams):
+        hypers = HyperParams.from_lam(float(hypers), noise=noise)
+    st = GPGState.from_data("rbf", X, G, lam=hypers.lam,
+                            noise=float(hypers.noise),
+                            signal=float(hypers.signal))
     return GradientSurrogate(state=st)
 
 
@@ -116,17 +150,25 @@ def gpg_hmc(
     n_samples: int,
     eps: float,
     steps: int,
-    lengthscale2: float,
     budget: int,
+    hypers: HyperParams | None = None,
+    lengthscale2: float | None = None,
+    refit_surrogate: bool = False,
     mass: float = 1.0,
     max_train_iters: int = 5000,
 ) -> GPGHMCResult:
+    """Alg. 3.  Hyperparameters come in as ONE ``HyperParams`` container
+    (``lengthscale2=`` is the legacy float spelling); ``refit_surrogate``
+    re-fits them by exact MLL ascent on the phase-1 training set right
+    after the cold solve (``GPGState.refit``), so phases 2-3 run on
+    evidence-optimal hypers instead of the ell^2 = 0.4 D heuristic."""
+    hp = _as_hypers(hypers, lengthscale2)
     grad_true = jax.grad(energy_fn)
-    lam = 1.0 / lengthscale2
+    lam = float(hp.lam)
     x = jnp.asarray(x0)
     e_x = energy_fn(x)
     st = GPGState("rbf", x.shape[0], capacity=max(budget, 2), lam=lam,
-                  noise=1e-8)
+                  noise=float(hp.noise), signal=float(hp.signal))
     st.extend(x, grad_true(x), solve=False)
     n_true = 1
     it = 0
@@ -143,6 +185,11 @@ def gpg_hmc(
             n_true += 2  # leapfrog used true grads anyway; count the query
 
     st.resolve(st.G)                  # first (and only cold) solve
+    if refit_surrogate and st.n >= 2:
+        # fit on the diverse phase-1 set; refit() refactors + re-solves,
+        # and the distance gate below follows the fitted lengthscale
+        st.refit(steps=60)
+        lam = float(st.data.lam)
     sur = GradientSurrogate(state=st)
     grad_sur = sur.predictor()
 

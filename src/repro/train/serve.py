@@ -121,12 +121,42 @@ class GPServeBundle:
     CURRENT state revision (factors/Z are read per call), and trims the
     padding off. Zero solves per request; extend() between requests reuses
     the same executable.
+
+    With ``return_std`` the step additionally takes a ``GramSolver``
+    argument (the structured factorization of the noisy Gram, built once
+    per request by ``refresh_solver``).  Every hyperparameter — lam,
+    signal, noise — reaches the compiled step as an ARRAY inside the
+    factor/solver pytrees, so a ``refit()`` between requests changes the
+    numbers but never the shapes: hypers are dynamic arguments and the
+    executable survives them.
     """
 
     state: Any                       # GPGState
     microbatch: int
-    step: Callable                   # jitted (factors, Z, chunk[, probe])
+    step: Callable                   # jitted (factors, Z[, solver], chunk[, probe])
     probe: Optional[jnp.ndarray]
+    return_std: bool = False
+    return_grad_std: bool = False
+    _solver_cache: Any = None        # (revision key, GramSolver)
+
+    def refresh_solver(self):
+        """The variance solver for the CURRENT state revision — factorized
+        once per revision (O(N^2 D + (N^2)^3)) and cached: every state
+        mutation replaces the ``GPGData`` pytree and bumps its op counters,
+        so repeated requests against an unchanged state reuse the LU."""
+        from repro.hyper.variance import make_solver
+
+        st = self.state
+        c = self._solver_cache
+        if c is not None and c[0] is st.data and c[1] == (st.noise,
+                                                          st.signal):
+            return c[2]
+        solver = make_solver(st.spec, st.padded_factors, noise=st.noise,
+                             signal=st.signal, count=st.data.count)
+        # hold the data pytree itself: identity can't be recycled while
+        # cached, so `is` is an exact revision check
+        self._solver_cache = (st.data, (st.noise, st.signal), solver)
+        return solver
 
     def query(self, Xq):
         from repro.core.query import PosteriorBatch
@@ -139,23 +169,31 @@ class GPServeBundle:
         # fixed-capacity padded views: shapes are stable across extend(),
         # so the compiled step is reused (padding is exact for queries)
         f, Z = self.state.padded_factors, self.state.data.Z
+        want_std = self.return_std or self.return_grad_std
+        solver = self.refresh_solver() if want_std else None
         chunks = []
         for i in range(0, q + pad, b):
+            args = (f, Z) + ((solver,) if want_std else ()) + (Xp[i:i + b],)
             if self.probe is not None:
-                chunks.append(self.step(f, Z, Xp[i:i + b], self.probe))
-            else:
-                chunks.append(self.step(f, Z, Xp[i:i + b]))
+                args = args + (self.probe,)
+            chunks.append(self.step(*args))
+        cat = lambda xs: jnp.concatenate(xs)[:q]
         out = PosteriorBatch(
-            value=jnp.concatenate([c.value for c in chunks])[:q],
-            grad=jnp.concatenate([c.grad for c in chunks])[:q],
+            value=cat([c.value for c in chunks]),
+            grad=cat([c.grad for c in chunks]),
             hess_v=None if self.probe is None else
-            jnp.concatenate([c.hess_v for c in chunks])[:q],
+            cat([c.hess_v for c in chunks]),
+            std=cat([c.std for c in chunks]) if self.return_std or
+            self.return_grad_std else None,
+            grad_std=cat([c.grad_std for c in chunks])
+            if self.return_grad_std else None,
         )
         return out
 
 
-def build_gp_serve_step(state, *, microbatch: int = 64,
-                        probe=None) -> GPServeBundle:
+def build_gp_serve_step(state, *, microbatch: int = 64, probe=None,
+                        return_std: bool = False,
+                        return_grad_std: bool = False) -> GPServeBundle:
     """Compile a batched posterior query step for a ``GPGState``.
 
     One compilation per (microbatch, capacity, D) shape — the step is fed
@@ -164,11 +202,18 @@ def build_gp_serve_step(state, *, microbatch: int = 64,
     doubling does).  Q-query requests cost O(Q N D) with exactly zero
     inner solves (the solve happened at ``extend()`` time — factor reuse
     is the whole point of the state).
+
+    ``return_std=True`` serves posterior value stds (``return_grad_std``
+    gradient stds too) through one structured Gram factorization per
+    request; the hypers ride inside the solver pytree, so refits between
+    requests never recompile (asserted in tests/test_hyper.py).
     """
     from repro.core.query import make_query_fn
 
-    fn = make_query_fn(state.spec, with_probe=probe is not None)
+    fn = make_query_fn(state.spec, with_probe=probe is not None,
+                       with_std=return_std, with_grad_std=return_grad_std)
     return GPServeBundle(
         state=state, microbatch=int(microbatch), step=jax.jit(fn),
         probe=None if probe is None else jnp.asarray(probe),
+        return_std=bool(return_std), return_grad_std=bool(return_grad_std),
     )
