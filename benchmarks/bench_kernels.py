@@ -1,17 +1,23 @@
 """Pallas kernel microbenchmarks (interpret-mode correctness + jnp-path
 throughput on CPU; the BlockSpec geometry is the TPU deliverable).
 
-For each kernel: max abs error vs the ref.py oracle across a shape sweep,
-plus CPU wall time of the jnp reference path (the number that matters on
-this container; TPU timing requires hardware).
+For each kernel: normwise relative error vs the ref.py oracle across a
+shape sweep, plus CPU wall time of the jnp reference path.  The top-level
+``mode`` field records how the Pallas bodies executed — ``"interpret"``
+(CPU: Python interpreter, correctness only) or ``"compiled"`` (TPU: real
+Mosaic kernels, and ``pallas_seconds`` columns appear next to the oracle
+timings) — so the perf trajectory across PRs is honest about which
+numbers are wall clock and which are models.
 
-The fused_gram_mvm section additionally scores the single-launch Alg.-2
-megakernel against the unfused three-launch sequence on the metric that
-governs TPU wall clock for these memory-bound ops: **HBM bytes per CG
-iteration**, via the analytic transfer model of DESIGN.md §4.3, converted
-to roofline seconds for a TPU v5e. The fused path must come in at <= ~60%
-of the unfused bytes (claim gate below); results land in
-BENCH_kernels.json at the repo root for cross-PR tracking.
+Three claim gates:
+  * fused_gram_mvm: single-launch Alg.-2 megakernel HBM bytes <= 60% of
+    the unfused sequence (analytic model, DESIGN.md §4.3);
+  * fused_factor_build: the single-sweep factor bundle's modeled HBM
+    bytes <= 40% of the pre-fusion multi-pass factor build (DESIGN.md
+    §12), and the lowered exact solve / query microbatch consume exactly
+    ONE reduction stream of X (jaxpr-counted);
+  * precision: bf16-in/f32-accum results track the f32 oracle on the same
+    stored values to <= 1e-3 normwise on every gated kernel.
 """
 import time
 
@@ -19,14 +25,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import (fused_gram_mvm, fused_gram_mvm_multi,
+from repro.kernels import (fused_factor_build, fused_factor_build_ref,
+                           fused_gram_mvm, fused_gram_mvm_multi,
                            fused_gram_mvm_ref, fused_gram_norms,
                            fused_gram_norms_ref, gram_update, gram_update_ref,
-                           skinny_gram, skinny_gram_ref)
+                           skinny_gram, skinny_gram_ref, small_matmul)
+from repro.utils.hlo import count_data_streams, count_primitive
 from repro.utils.roofline import TPUv5e
 
 
-from repro.utils.hlo import count_primitive
+def _mode() -> str:
+    return "compiled" if jax.default_backend() == "tpu" else "interpret"
 
 
 def _count_pallas_calls(jaxpr) -> int:
@@ -44,6 +53,23 @@ def _time(fn, reps=5):
         jax.block_until_ready(fn())
         ts.append(time.time() - t0)
     return min(ts)
+
+
+def _pallas_time(fn, reps=5):
+    """Compiled-Pallas wall time — only meaningful on real hardware.
+
+    In interpret mode the kernel body runs in Python, so timing it would
+    poison the cross-PR trajectory; the column stays None on CPU."""
+    if _mode() != "compiled":
+        return None
+    return _time(fn, reps)
+
+
+def _nrel(got, want):
+    got = jnp.asarray(got, jnp.float64).reshape(-1)
+    want = jnp.asarray(want, jnp.float64).reshape(-1)
+    return float(jnp.linalg.norm(got - want) /
+                 (jnp.linalg.norm(want) + 1e-30))
 
 
 # ---------------------------------------------------------------------------
@@ -74,9 +100,91 @@ def mvm_hbm_bytes(n: int, d: int, *, r: int = 1, itemsize: int = 4) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Analytic HBM model for the single-sweep factor build (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+
+def factor_build_hbm_bytes(n: int, d: int, *, itemsize: int = 4) -> dict:
+    """Bytes to build ALL exact-solve factors from (X, G), per solve.
+
+    Baseline = the pre-fusion sequence this PR replaced (each launch
+    streams its operands; (N, N) outputs negligible and omitted):
+      pairwise-r gram+norms (one fused_gram_norms): read X, X     2 nd
+      S = (Xt L) Xt^T       (skinny_gram):          read Xt, Xt   2 nd
+      W0 = K1i @ G          (kron_precond):         read G, write W0  2 nd
+      T0 = W0 @ Xt^T        (skinny_gram):          read W0, Xt   2 nd
+    Fused = ONE fused_factor_build launch: read A(=Xt), B(=Xt), V(=G)
+    once each — T0 = K1i @ (G Xt^T) needs no stream (associativity), and
+    the (N, D) intermediate W0 no longer exists.
+    """
+    nd = n * d * itemsize
+    unfused = 8 * nd
+    fused = 3 * nd
+    return {
+        "unfused_bytes": int(unfused),
+        "fused_bytes": int(fused),
+        "ratio": fused / unfused,
+        "fused_bytes_bf16": int(fused) // 2,   # bf16 storage halves inputs
+        "ratio_bf16_vs_f32_baseline": (fused // 2) / unfused,
+        "unfused_roofline_s": unfused / TPUv5e.hbm_bw,
+        "fused_roofline_s": fused / TPUv5e.hbm_bw,
+    }
+
+
+def query_chunk_hbm_bytes(q: int, n: int, d: int, *,
+                          itemsize: int = 4) -> dict:
+    """Informational (ungated): value+grad posterior means per microbatch.
+
+    Unfused sequence (cross_value_matvec + cross_grad_matvec, stationary):
+    2x pairwise_r (qd+nd each), 2x scaled_gram(Xq, Z) (qd+nd), 2x
+    row_dots(Xt, Z) (2nd), gram_update (2nd, write qd), epilogue (read
+    W+Xq, write grad: 3qd).  Fused: one factor sweep (qd+2nd), one
+    gram_update (2nd + write qd), epilogue (3qd).
+    """
+    qd, nd = q * d * itemsize, n * d * itemsize
+    unfused = 5 * qd + 10 * nd + 3 * qd
+    fused = 2 * qd + 4 * nd + 3 * qd
+    return {"unfused_bytes": int(unfused), "fused_bytes": int(fused),
+            "ratio": fused / unfused}
+
+
+# ---------------------------------------------------------------------------
+# Structural single-sweep gate: jaxpr stream counts of the solve/query path
+# ---------------------------------------------------------------------------
+
+def x_stream_counts() -> dict:
+    from repro.core import build_factors, get_kernel, use_backend
+    from repro.core import woodbury_solve
+    from repro.core.query import _query_chunk
+
+    n, q, d = 5, 4, 384
+    rng = jax.random.PRNGKey(3)
+    out = {}
+    for name in ("rbf", "expdot"):
+        spec = get_kernel(name)
+        c = None if spec.is_stationary else jnp.full((d,), 0.01, jnp.float32)
+        X = jax.random.normal(jax.random.fold_in(rng, 1), (n, d), jnp.float32)
+        G = jax.random.normal(jax.random.fold_in(rng, 2), (n, d), jnp.float32)
+        Xq = jax.random.normal(jax.random.fold_in(rng, 3), (q, d),
+                               jnp.float32)
+        with use_backend("pallas"):
+            f = build_factors(spec, X, lam=0.5, c=c, noise=1e-3)
+            solve_j = jax.make_jaxpr(
+                lambda Xt, g: woodbury_solve(spec, f._replace(Xt=Xt),
+                                             g))(f.Xt, G)
+            query_j = jax.make_jaxpr(
+                lambda Xt, z, xq: _query_chunk(spec, xq, f._replace(Xt=Xt),
+                                               z, None))(f.Xt, G, Xq)
+        out[name] = {
+            "woodbury_solve": count_data_streams(solve_j, 0, d),
+            "query_chunk": count_data_streams(query_j, 0, d),
+        }
+    return out
+
+
 def run() -> dict:
     rng = jax.random.PRNGKey(0)
-    out = {}
+    out = {"mode": _mode()}
     shapes = [(8, 8, 4096), (16, 16, 65536), (8, 8, 262144)]
     rows = []
     for na, nb, d in shapes:
@@ -91,7 +199,9 @@ def run() -> dict:
         t = _time(lambda: ref(A, B))
         gbps = (A.size + B.size) * 4 / t / 1e9
         rows.append({"shape": [na, nb, d], "interp_err": err,
-                     "jnp_seconds": t, "jnp_gb_per_s": gbps})
+                     "jnp_seconds": t, "jnp_gb_per_s": gbps,
+                     "pallas_seconds": _pallas_time(
+                         lambda: skinny_gram(A, B, 0.5))})
     out["skinny_gram"] = rows
 
     n, d = 8, 65536
@@ -104,14 +214,27 @@ def run() -> dict:
         gram_update_ref(K1, M, V, X, 0.5))))
     ref2 = jax.jit(lambda: gram_update_ref(K1, M, V, X, 0.5))
     out["gram_update"] = {"shape": [n, d], "interp_err": err,
-                          "jnp_seconds": _time(lambda: ref2())}
+                          "jnp_seconds": _time(lambda: ref2()),
+                          "pallas_seconds": _pallas_time(
+                              lambda: gram_update(K1, M, V, X, 0.5))}
 
+    # fused_gram_norms: the norm outputs have magnitude ~lam*D (all-positive
+    # sums), so an ABSOLUTE error metric reads ~1e-3 at D=65536 while the
+    # per-output RELATIVE error sits at f32-accumulation level like every
+    # sibling kernel (the PR-5 "5.9e-3 interp_err" was exactly this metric
+    # artifact, not an accumulation-order bug).  Gate the relative metric.
     A = jax.random.normal(jax.random.fold_in(rng, 7), (8, 65536))
     P, na_, nb_ = fused_gram_norms(A, A, 0.3, interpret=True)
     Pr, nar, nbr = fused_gram_norms_ref(A, A, 0.3)
     out["fused_gram_norms"] = {
-        "interp_err": float(max(jnp.max(jnp.abs(P - Pr)),
-                                jnp.max(jnp.abs(na_ - nar[:, 0])))),
+        "interp_rel_err": float(max(_nrel(P, Pr), _nrel(na_, nar[:, 0]),
+                                    _nrel(nb_, nbr[:, 0]))),
+        "interp_abs_err_norms": float(jnp.max(jnp.abs(na_ - nar[:, 0]))),
+        "norm_magnitude": float(jnp.max(jnp.abs(nar))),
+        "note": "norms are O(lam*D) positive sums; abs err ~1e-3 here IS "
+                "rel err ~3e-7 — the claim gate uses the relative metric",
+        "pallas_seconds": _pallas_time(
+            lambda: fused_gram_norms(A, A, 0.3)),
     }
 
     # --- fused Alg.-2 megakernel: parity + HBM-bytes-per-iteration model ---
@@ -141,6 +264,9 @@ def run() -> dict:
         fused_rows.append({
             "stationary": stationary, "shape": [n, d], "interp_err": err,
             "jnp_unfused_seconds": t,
+            "pallas_seconds": _pallas_time(
+                lambda s=stationary: fused_gram_mvm(
+                    K1e, K2e, Xt, Vv, 0.5, stationary=s, noise=1e-2)),
             "hbm_model": mvm_hbm_bytes(n, d),
         })
     # multi-RHS amortization sweep
@@ -173,14 +299,97 @@ def run() -> dict:
                        "unfused sequence (DESIGN.md 4.3)",
     }
 
+    # --- single-sweep fused factor build (DESIGN.md §12) -------------------
+    n, d = 16, 65536
+    G = jax.random.normal(jax.random.fold_in(rng, 13), (n, d))
+    ffb_rows = []
+    for na, nb, dd in [(8, 8, 4096), (16, 16, 65536)]:
+        Af = Xt[:na, :dd]
+        Bf = Xt[:nb, :dd]
+        Vf = G[:nb, :dd]
+        got = fused_factor_build(Af, Bf, Vf, 0.5, interpret=True)
+        want = fused_factor_build_ref(Af, Bf, Vf, 0.5)
+        err = max(_nrel(g, w) for g, w in zip(got, want))
+        ffb_rows.append({
+            "shape": [na, nb, dd], "interp_err": err,
+            "jnp_seconds": _time(jax.jit(
+                lambda a=Af, b=Bf, v=Vf: fused_factor_build_ref(a, b, v,
+                                                                0.5))),
+            "pallas_seconds": _pallas_time(
+                lambda a=Af, b=Bf, v=Vf: fused_factor_build(a, b, v, 0.5)),
+            "hbm_model": factor_build_hbm_bytes(na, dd),
+        })
+    ffb_launches = _count_pallas_calls(jax.make_jaxpr(
+        lambda a, v: fused_factor_build(Xt, a, v, 0.5, interpret=True))(
+            Xt, G).jaxpr)
+    out["fused_factor_build"] = {
+        "rows": ffb_rows,
+        "pallas_calls_per_bundle": ffb_launches,
+        "query_chunk_model": query_chunk_hbm_bytes(16, 16, 65536),
+        "x_streams": x_stream_counts(),
+        "paper_claim": "ONE sweep of (X, G) builds every exact-solve factor "
+                       "(gram, norms, S, G Xt^T); the lowered solve/query "
+                       "reads X in exactly one reduction stream "
+                       "(DESIGN.md 12)",
+    }
+
+    # --- precision policy: bf16-in / f32-accum vs the f32 oracle -----------
+    n, d = 8, 65536
+    X16 = Xt[:n, :d].astype(jnp.bfloat16)
+    V16 = Vv[:n, :d].astype(jnp.bfloat16)
+    X32, V32 = X16.astype(jnp.float32), V16.astype(jnp.float32)
+    Kb = K1e[:n, :n]
+    K2b = K2e[:n, :n]
+    bf16 = {}
+    bf16["skinny_gram"] = _nrel(skinny_gram(X16, V16, 0.5, interpret=True),
+                                skinny_gram_ref(X32, V32, 0.5))
+    bf16["gram_update"] = _nrel(
+        gram_update(Kb, K2b, V16, X16, 0.5, noise=0.1, interpret=True),
+        gram_update_ref(Kb, K2b, V32, X32, 0.5, noise=0.1))
+    bf16["small_matmul"] = _nrel(small_matmul(Kb, V16, 0.5, interpret=True),
+                                 (Kb @ V32) * 0.5)
+    P16 = fused_gram_norms(X16, V16, 0.5, interpret=True)
+    P32 = fused_gram_norms_ref(X32, V32, 0.5)
+    bf16["fused_gram_norms"] = max(
+        _nrel(g, w) for g, w in zip(P16, (P32[0], P32[1][:, 0],
+                                          P32[2][:, 0])))
+    bf16["fused_gram_mvm"] = _nrel(
+        fused_gram_mvm(Kb, K2b, X16, V16, 0.5, stationary=True, noise=0.1,
+                       interpret=True),
+        fused_gram_mvm_ref(Kb, K2b, X32, V32, 0.5, stationary=True,
+                           noise=0.1))
+    F16 = fused_factor_build(X16, X16, V16, 0.5, interpret=True)
+    F32 = fused_factor_build_ref(X32, X32, V32, 0.5)
+    bf16["fused_factor_build"] = max(
+        _nrel(g, w) for g, w in zip(F16, F32))
+    out["bf16_vs_f32_oracle_rel"] = {
+        **{k: float(v) for k, v in bf16.items()},
+        "note": "kernel(bf16 storage) vs f32 oracle on the same stored "
+                "values, normwise — isolates what the pipeline adds "
+                "(accumulation order) from storage quantization; gate "
+                "<= 1e-3 (DESIGN.md 12 precision table)",
+    }
+
+    streams_ok = all(
+        v["woodbury_solve"]["reduction"] == 1
+        and v["query_chunk"]["reduction"] == 1
+        for v in out["fused_factor_build"]["x_streams"].values())
     byte_ratio_ok = all(r["hbm_model"]["ratio"] <= 0.6 for r in fused_rows)
+    ffb_ratio_ok = all(r["hbm_model"]["ratio"] <= 0.4 for r in ffb_rows)
+    bf16_ok = all(v <= 1e-3 for v in bf16.values())
     out["claim_holds"] = bool(
         all(r["interp_err"] < 1e-5 for r in rows)
         and out["gram_update"]["interp_err"] < 1e-4
+        and out["fused_gram_norms"]["interp_rel_err"] < 1e-5
         and all(r["interp_err"] < 1e-4 for r in fused_rows)
         and out["fused_gram_mvm"]["multi_rhs_interp_err"] < 1e-4
         and launches == 1 and launches_multi == 1
-        and byte_ratio_ok)
+        and byte_ratio_ok
+        and all(r["interp_err"] < 1e-5 for r in ffb_rows)
+        and ffb_launches == 1
+        and ffb_ratio_ok
+        and streams_ok
+        and bf16_ok)
     return out
 
 

@@ -4,11 +4,85 @@ benches. ``PYTHONPATH=src python -m benchmarks.run [--only a,b]``.
 Each bench returns a dict with a ``claim_holds`` verdict tying the
 measurement back to the paper's statement; the summary table at the end is
 the reproduction scorecard.
+
+``--check`` turns the committed ``BENCH_*.json`` baselines into a
+regression gate: fresh results are diffed against them and any claim
+metric that regresses by more than ``CHECK_TOLERANCE`` (20%) — byte
+ratios/totals growing, error metrics growing past a floating-point jitter
+floor, a ``claim_holds`` flipping to false — fails the run.  Wall-clock
+and GB/s columns are excluded (machine-dependent noise); the gated
+metrics are the deterministic models and accuracy numbers that define the
+perf story.
 """
 import argparse
 import json
 import time
 import traceback
+
+CHECK_TOLERANCE = 0.20      # fail on > 20% regression of a claim metric
+_ERR_FLOOR = 1e-5           # abs floor under which error metrics are noise
+
+
+def _is_claim_metric(key: str) -> bool:
+    # "unfused_*" is the baseline side of a model, not a deliverable
+    return (key == "claim_holds" or key == "ratio" or key.endswith("_err")
+            or (key.endswith("_bytes") and not key.startswith("unfused"))
+            or key.endswith("_rel") or key.startswith("ratio_"))
+
+
+def _walk_regressions(base, fresh, path, failures):
+    """Recursively diff claim metrics; append (path, old, new) regressions.
+
+    Higher is worse for every gated numeric metric (byte counts/ratios and
+    error magnitudes); ``claim_holds`` must not flip true -> false.
+    Structure drift (new/removed keys) is NOT a failure — baselines are
+    refreshed by committing the new JSON.
+    """
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in base:
+            if k in fresh:
+                _walk_regressions(base[k], fresh[k], path + (str(k),),
+                                  failures)
+        return
+    if isinstance(base, list) and isinstance(fresh, list):
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            _walk_regressions(b, f, path + (str(i),), failures)
+        return
+    key = path[-1] if path else ""
+    # a metric is gated by its own key, or by sitting inside a gated
+    # container (e.g. the per-kernel entries of bf16_vs_f32_oracle_rel)
+    if not (_is_claim_metric(key)
+            or any(_is_claim_metric(p) for p in path[:-1])):
+        return
+    if not _is_claim_metric(key):
+        key = next(p for p in path if _is_claim_metric(p))
+    if isinstance(base, bool) or isinstance(fresh, bool):
+        if base is True and fresh is not True:
+            failures.append((".".join(path), base, fresh))
+        return
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        limit = base * (1.0 + CHECK_TOLERANCE)
+        if key.endswith("_err") or key.endswith("_rel"):
+            limit = max(limit, _ERR_FLOOR)
+        if fresh > limit:
+            failures.append((".".join(path), base, fresh))
+
+
+def check_against_baselines(results: dict, root: str) -> list:
+    """Diff fresh results vs the committed BENCH_*.json; list regressions."""
+    import os
+
+    failures = []
+    for key in PERF_TRACKED:
+        if key not in results:
+            continue
+        base_path = os.path.join(root, f"BENCH_{key}.json")
+        if not os.path.exists(base_path):
+            continue    # first run for this bench: nothing to regress from
+        with open(base_path) as f:
+            base = json.load(f)
+        _walk_regressions(base, results[key], (key,), failures)
+    return failures
 
 BENCHES = [
     ("fig2_linalg", "benchmarks.bench_fig2_linalg",
@@ -33,6 +107,10 @@ BENCHES = [
      "DESIGN 11: structured exact MLL + hyperparameter fit"),
 ]
 
+# Benches whose JSON lands at the repo root for cross-PR tracking; also
+# the set --check regresses against.
+PERF_TRACKED = ("kernels", "iterative", "hyper")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -41,6 +119,10 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero if any executed claim gate fails "
                          "(used by CI to enforce the perf/repro gates)")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: diff fresh results against the "
+                         "committed BENCH_*.json baselines and exit nonzero "
+                         "on a >20%% regression of any claim metric")
     args = ap.parse_args()
 
     results = {}
@@ -70,16 +152,32 @@ def main() -> None:
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
+    # Regression gate BEFORE the baselines are overwritten below.
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    regressions = check_against_baselines(results, root) if args.check else []
+    if regressions:
+        print(f"\n===== --check: {len(regressions)} claim-metric "
+              f"regression(s) vs committed baselines =====")
+        for path, old, new in regressions:
+            print(f"  REGRESSED {path}: {old} -> {new}")
+    elif args.check:
+        print("\n--check: no claim-metric regressions vs committed baselines")
     # Per-PR perf trajectory: the roofline-scored benches land at the repo
     # root so successive PRs can diff them (CI uploads them as artifacts).
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    for key in ("kernels", "iterative", "hyper"):
-        if key in results:
-            with open(os.path.join(root, f"BENCH_{key}.json"), "w") as f:
-                json.dump(results[key], f, indent=1, default=str)
+    # NEVER overwrite the baselines with results that just failed the
+    # regression gate — a rerun would then compare regressed-vs-regressed
+    # and pass, masking the regression.
+    if regressions:
+        print("(baselines left untouched — fix the regression or commit "
+              "new baselines deliberately with a run without --check)")
+    else:
+        for key in PERF_TRACKED:
+            if key in results:
+                with open(os.path.join(root, f"BENCH_{key}.json"), "w") as f:
+                    json.dump(results[key], f, indent=1, default=str)
     n_fail = sum(1 for r in results.values() if not r.get("claim_holds"))
     print(f"\n{len(results) - n_fail}/{len(results)} claims hold")
-    if args.strict and n_fail:
+    if (args.strict and n_fail) or regressions:
         raise SystemExit(1)
 
 

@@ -31,6 +31,21 @@ class RosenbrockConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class GPServeConfig:
+    """Knobs of the batched posterior-query serving path (train/serve.py).
+
+    ``precision`` selects the STREAM storage dtype of the (N, D) operands
+    the query path reads (X/Xt/Z and the query batch): 'bf16' halves their
+    HBM bytes — which IS the wall clock of these memory-bound sweeps —
+    while every contraction still accumulates in f32 and all factors/
+    solves stay f32 (precision policy table, DESIGN.md sec. 12).
+    """
+
+    microbatch: int = 64
+    precision: str = "f32"       # 'f32' | 'bf16' stream storage
+
+
+@dataclasses.dataclass(frozen=True)
 class HMCConfig:
     d: int = 100
     n_samples: int = 2000
@@ -52,3 +67,4 @@ class HMCConfig:
 LINALG = LinalgConfig()
 ROSEN = RosenbrockConfig()
 HMC = HMCConfig()
+GP_SERVE = GPServeConfig()

@@ -1,7 +1,10 @@
 """Core: structured GP inference with derivative observations (the paper)."""
 from . import backend
-from .backend import resolve_backend, set_backend, use_backend
-from .gram import GramFactors, build_factors, dense_gram, dense_cross_gram, pairwise_r, scaled_gram
+from .backend import (resolve_backend, resolve_precision, set_backend,
+                      set_precision, stream_dtype, use_backend, use_precision)
+from .gram import (FactorBundle, GramFactors, build_factor_bundle,
+                   build_factors, dense_gram, dense_cross_gram, pairwise_r,
+                   scaled_gram)
 from .inference import (
     HessianOperator,
     infer_optimum,
@@ -32,13 +35,15 @@ from .state import (
 from .woodbury import dense_solve, poly2_quadratic_solve, woodbury_solve
 
 __all__ = [
-    "GramFactors", "backend", "build_factors", "dense_gram",
+    "FactorBundle", "GramFactors", "backend", "build_factor_bundle",
+    "build_factors", "dense_gram",
     "dense_cross_gram", "pairwise_r", "scaled_gram", "HessianOperator",
     "infer_optimum", "posterior_grad", "posterior_hessian", "posterior_value",
     "KernelSpec", "get_kernel", "kernel_names", "cross_grad_matvec",
     "cross_value_matvec", "gram_matvec", "gram_matvec_multi", "l_op", "lt_op",
     "CGResult", "cg", "gram_cg_solve", "gram_cg_solve_multi",
-    "resolve_backend", "set_backend", "use_backend", "dense_solve",
+    "resolve_backend", "set_backend", "use_backend", "resolve_precision",
+    "set_precision", "use_precision", "stream_dtype", "dense_solve",
     "poly2_quadratic_solve", "woodbury_solve",
     "GPGData", "GPGState", "gpg_evict", "gpg_extend", "gpg_init",
     "gpg_refactor", "gpg_resolve",

@@ -37,6 +37,9 @@ Array = jnp.ndarray
 _VALID = ("jnp", "pallas")
 _FORCED: str | None = None
 
+_VALID_PRECISION = ("f32", "bf16")
+_FORCED_PRECISION: str | None = None
+
 
 def resolve_backend() -> str:
     """The backend the next hot contraction will use: 'jnp' | 'pallas'."""
@@ -72,6 +75,69 @@ def _pallas() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Precision policy (DESIGN.md sec. 12): bf16 STORAGE, f32 ACCUMULATION.
+#
+# The method's hot paths are memory-bound streams over (N, D) data, so the
+# input dtype — not the math — sets the wall clock.  The policy has exactly
+# three rules:
+#   1. (N, D) stream operands (X, G, Z, queries) MAY be stored/streamed
+#      bf16; halving their bytes halves the HBM roofline of every sweep.
+#   2. every contraction accumulates in f32 (``preferred_element_type`` in
+#      the Pallas kernels; an explicit upcast on the jnp fallback so the
+#      oracle path never silently accumulates in bf16).
+#   3. all factor outputs (grams, norms, K1e/K2e, solves Z) stay f32 —
+#      results are never rounded back to storage precision.
+# ``resolve_precision`` is a session knob consumed by the state/serve
+# layers when casting their stream copies; the backend ops themselves are
+# polymorphic (they accept whatever storage dtype the caller holds).
+# ---------------------------------------------------------------------------
+
+def resolve_precision() -> str:
+    """The storage precision streams default to: 'f32' | 'bf16'."""
+    if _FORCED_PRECISION is not None:
+        return _FORCED_PRECISION
+    env = os.environ.get("REPRO_PRECISION", "").strip().lower()
+    if env in _VALID_PRECISION:
+        return env
+    return "f32"
+
+
+def set_precision(name: str | None) -> None:
+    """Force the stream storage precision; None restores auto-resolution."""
+    global _FORCED_PRECISION
+    if name is not None and name not in _VALID_PRECISION:
+        raise ValueError(
+            f"precision must be one of {_VALID_PRECISION} or None, got {name!r}")
+    _FORCED_PRECISION = name
+
+
+@contextlib.contextmanager
+def use_precision(name: str) -> Iterator[None]:
+    """Scoped ``set_precision``."""
+    prev = _FORCED_PRECISION
+    set_precision(name)
+    try:
+        yield
+    finally:
+        set_precision(prev)
+
+
+def stream_dtype(precision: str | None = None):
+    """The jnp dtype of (N, D) stream storage under ``precision``."""
+    p = resolve_precision() if precision is None else precision
+    if p not in _VALID_PRECISION:
+        raise ValueError(f"precision must be one of {_VALID_PRECISION}, got {p!r}")
+    return jnp.bfloat16 if p == "bf16" else jnp.float32
+
+
+def _acc(x: Array) -> Array:
+    """Accumulation-dtype view: upcast sub-f32 storage so the jnp fallback
+    matches the kernels' bf16-in/f32-accum contract (rule 2 above)."""
+    x = jnp.asarray(x)
+    return x.astype(jnp.float32) if x.dtype in (jnp.bfloat16, jnp.float16) else x
+
+
+# ---------------------------------------------------------------------------
 # The O(ND) contraction vocabulary
 # ---------------------------------------------------------------------------
 
@@ -79,6 +145,7 @@ def scaled_gram(A: Array, B: Array, lam) -> Array:
     """(N_a, N_b) matrix  A Lambda B^T — THE hot contraction of the method."""
     if _pallas():
         return _k.skinny_gram(A, B, lam)
+    A, B = _acc(A), _acc(B)
     return (A * lam) @ B.T
 
 
@@ -86,10 +153,34 @@ def gram_norms(A: Array, B: Array, lam):
     """(P, |A|^2_lam rowwise, |B|^2_lam rowwise) in one logical pass."""
     if _pallas():
         return _k.fused_gram_norms(A, B, lam)
+    A, B = _acc(A), _acc(B)
     P = (A * lam) @ B.T
     na = jnp.sum((A * lam) * A, axis=-1)
     nb = jnp.sum((B * lam) * B, axis=-1)
     return P, na, nb
+
+
+def fused_factor_build(A: Array, B: Array, V: Array | None, lam, *,
+                       v_scale=1.0):
+    """The single-sweep factor bundle (P, na, nb, C, tv) — DESIGN.md sec. 12.
+
+    ONE pass over A/B/V emits every skinny factor of a solve or query
+    microbatch: P = (A*lam) @ B^T, lam-weighted row norms na/nb,
+    C = (V*v_scale) @ A^T, tv = rowdots(B, V, lam).  On the pallas backend
+    this is a single ``kernels.fused_factor_build`` launch; the jnp form
+    spells out the same contractions (XLA is free to fuse them, and the
+    x64 oracle semantics are preserved for f32/f64 inputs).
+    """
+    if _pallas():
+        return _k.fused_factor_build(A, B, V, lam, v_scale=v_scale)
+    A, B = _acc(A), _acc(B)
+    V = B if V is None else _acc(V)
+    P = (A * lam) @ B.T
+    na = jnp.sum((A * lam) * A, axis=-1)
+    nb = jnp.sum((B * lam) * B, axis=-1)
+    C = (V * v_scale) @ A.T
+    tv = jnp.sum((B * lam) * V, axis=-1)
+    return P, na, nb, C, tv
 
 
 def pairwise_r(spec, A: Array, B: Array, lam, c=None) -> Array:
@@ -108,6 +199,7 @@ def row_dots(A: Array, B: Array, lam) -> Array:
     Bandwidth-identical on both backends (a single elementwise pass with an
     axis reduction), so there is no pallas kernel for it.
     """
+    A, B = _acc(A), _acc(B)
     return jnp.sum((A * lam) * B, axis=-1)
 
 
@@ -121,8 +213,9 @@ def gram_update(K1: Array, small: Array, V: Array, X: Array, lam, *,
     if _pallas():
         return _k.gram_update(K1, small, V, X, lam, v_scale=v_scale,
                               noise=noise)
+    V, X = _acc(V), _acc(X)
     Vs = V if v_scale is None else V * v_scale
-    W = (K1 @ Vs + small @ X) * lam
+    W = (_acc(K1) @ Vs + _acc(small) @ X) * lam
     if noise:
         W = W + noise * V
     return W
@@ -135,7 +228,7 @@ def kron_precond(K1i: Array, V: Array, lam) -> Array:
     """
     if _pallas() and V.ndim == 2:
         return _k.small_matmul(K1i, V, 1.0 / jnp.asarray(lam))
-    return (K1i @ V) / lam
+    return (_acc(K1i) @ _acc(V)) / lam
 
 
 def fused_gram_mvm(K1e: Array, K2e: Array, Xt: Array, V: Array, lam, *,
@@ -150,6 +243,7 @@ def fused_gram_mvm(K1e: Array, K2e: Array, Xt: Array, V: Array, lam, *,
     if _pallas():
         return _k.fused_gram_mvm(K1e, K2e, Xt, V, lam, stationary=stationary,
                                  noise=noise)
-    # Native-dtype oracle (keeps x64 precision; broadcast over stacked RHS).
-    return _kref.gram_mvm_oracle(K1e, K2e, Xt, V, lam, stationary=stationary,
-                                 noise=noise)
+    # Native-dtype oracle (keeps x64 precision; broadcast over stacked RHS);
+    # bf16 storage upcasts first so accumulation stays f32 (precision rule 2).
+    return _kref.gram_mvm_oracle(_acc(K1e), _acc(K2e), _acc(Xt), _acc(V),
+                                 lam, stationary=stationary, noise=noise)

@@ -67,6 +67,15 @@ class GramFactors(NamedTuple):
     lam: Array | float
     noise: float = 0.0
     c: Optional[Array] = None  # dot-kernel center; queries are centered with it
+    # Stationary stream-quantization shift (DESIGN.md sec. 12.2): when set,
+    # the stored Xt rows are RELATIVE to this f32 vector — exact for
+    # stationary kernels (translation invariance) and essential under bf16
+    # storage: quantizing absolute coordinates of clustered data destroys
+    # the |a|^2+|b|^2-2ab cancellation, while spread-scale coordinates keep
+    # it at storage precision.  Only ``query._mean_chunk`` consumes it
+    # (queries are shifted by the same vector before casting); every other
+    # consumer must receive unshifted factors (shift=None).
+    shift: Optional[Array] = None
 
     @property
     def n(self) -> int:
@@ -91,6 +100,48 @@ def build_factors(
     Xt = X if (spec.is_stationary or c is None) else X - c
     return GramFactors(K1e=K1e, K2e=K2e, Xt=Xt, lam=lam, noise=float(noise),
                        c=None if spec.is_stationary else c)
+
+
+class FactorBundle(NamedTuple):
+    """Single-sweep factor set for one exact solve (DESIGN.md sec. 12).
+
+    factors: the usual ``GramFactors`` (K1e/K2e from the same sweep).
+    S:       (N, N)  (Xt Lam) Xt^T — Woodbury's inner-system gram.
+    C:       (N, N)  G Xt^T — the right-hand contraction; by associativity
+             T0 = (K1i G) Xt^T = K1i @ C, so the exact solve never streams
+             G through K1i nor materializes the (N, D) intermediate.
+    """
+
+    factors: GramFactors
+    S: Array
+    C: Array
+
+
+def build_factor_bundle(
+    spec: KernelSpec,
+    X: Array,
+    G: Array,
+    lam: Array | float = 1.0,
+    c: Optional[Array] = None,
+    noise: float = 0.0,
+) -> FactorBundle:
+    """ONE pass over (X, G) -> every skinny factor of an exact solve.
+
+    Where :func:`build_factors` + ``woodbury_solve`` used to make four
+    separate O(N^2 D) passes (pairwise-r gram, S, K1i @ G, its @ Xt^T),
+    this streams X and G once through ``backend.fused_factor_build`` and
+    assembles r/K1e/K2e/S/C from the resulting (N, N) strips — the rest of
+    the solve is D-free until the final output assembly.
+    """
+    Xt = X if (spec.is_stationary or c is None) else X - c
+    P, na, nb, C, _ = backend.fused_factor_build(Xt, Xt, G, lam)
+    if spec.is_stationary:
+        r = jnp.maximum(na[:, None] + nb[None, :] - 2.0 * P, 0.0)
+    else:
+        r = P
+    f = GramFactors(K1e=spec.k1e(r), K2e=spec.k2e(r), Xt=Xt, lam=lam,
+                    noise=float(noise), c=None if spec.is_stationary else c)
+    return FactorBundle(factors=f, S=P, C=C)
 
 
 # --------------------------------------------------------------------------

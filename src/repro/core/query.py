@@ -6,9 +6,11 @@ the SAME cached solve — O(Q N D) total for Q query points, no inner system
 ever touched again (paper Sec. 4: "the cost of inference is dominated by
 the solve"; the serving layer amortizes that solve across every query).
 
-Per microbatch of queries, everything routes through the fused backend
-cross-covariance paths (``cross_value_matvec`` / ``cross_grad_matvec`` —
-``backend.gram_update`` streams, one pallas launch each on TPU):
+Per microbatch of queries, the value and grad means come off ONE
+single-sweep factor launch (``backend.fused_factor_build`` — cross gram,
+norm strips, cross contraction and row-dot correction in the same read
+of Xq/Xt/Z) plus one fused grad output stream (``backend.gram_update``);
+see ``_mean_chunk`` and DESIGN.md sec. 12.  The chunk serves:
 
   value:    posterior mean of f       (Q,)    — up to the prior constant
   grad:     posterior mean of grad f  (Q, D)  — paper Eq. 26
@@ -36,10 +38,10 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from . import backend
 from .gram import GramFactors
 from .inference import posterior_hessian
 from .kernels import KernelSpec
-from .mvm import cross_grad_matvec, cross_value_matvec
 
 Array = jnp.ndarray
 
@@ -58,12 +60,92 @@ class PosteriorBatch(NamedTuple):
         return self.grad.shape[0]
 
 
+def _mean_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
+                stream_dt=None):
+    """Value + grad posterior means off ONE factor sweep (DESIGN.md sec. 12).
+
+    A single ``backend.fused_factor_build`` launch streams (Xq, Xt, Z)
+    once and emits every reduction both means need — the cross gram P,
+    the norm strips for stationary r, the cross contraction
+    C^T = (Xq L) Z^T, and the row-dot correction tz.  The only other
+    D-touching op is the one fused output stream for grad
+    (``backend.gram_update``).  Replaces the pre-fusion sequence of two
+    ``pairwise_r`` + two ``scaled_gram`` + two ``row_dots`` launches
+    (``cross_value_matvec`` / ``cross_grad_matvec`` kept for single-point
+    callers).
+
+    ``stream_dt`` quantizes the streams to storage precision here.  For
+    stationary kernels the coordinates are shifted to the first data row
+    BEFORE casting (every quantity below — r, m, and the two-term grad
+    assembly — is exactly translation invariant, and quantizing absolute
+    coordinates of clustered data would destroy their cancellations at
+    ~|x|/spread amplification; DESIGN.md sec. 12.2).  A pre-quantized
+    ``f`` carries the same shift in ``f.shift`` so queries join its
+    frame.
+    """
+    lam = f.lam
+    if stream_dt is not None and f.Xt.dtype != stream_dt:
+        if spec.is_stationary:
+            shift = f.Xt[0]
+            f = f._replace(Xt=(f.Xt - shift).astype(stream_dt), shift=None)
+            Xq = (Xq - shift).astype(stream_dt)
+        else:
+            Xqt0 = Xq if f.c is None else Xq - f.c
+            f = f._replace(Xt=f.Xt.astype(stream_dt), c=None)
+            Xq = Xqt0.astype(stream_dt)  # pre-centered in the dot frame
+        # Z is NEVER quantized (precision rule 3: solve outputs stay f32).
+        # Representers of a near-singular window are huge and cancel by
+        # orders of magnitude in the posterior mean — storage quantization
+        # of Z would be amplified by |Z|/|mean|, catastrophically for
+        # clustered data.  X/G/query streams carry physical scales and
+        # quantize safely.
+    elif f.shift is not None:
+        Xq = (Xq - f.shift).astype(f.Xt.dtype)
+    elif f.Xt.dtype != Xq.dtype:
+        # f arrived pre-quantized (cached stream copies): join its frame.
+        # Dot-kernel Xt is stored centered, so queries must center THEN
+        # cast — quantizing absolute coordinates first would lose
+        # |x|/|x-c| of the precision the centered storage preserves.
+        if not spec.is_stationary and f.c is not None:
+            Xq = (Xq - f.c).astype(f.Xt.dtype)
+            f = f._replace(c=None)
+        else:
+            Xq = Xq.astype(f.Xt.dtype)
+    if spec.is_stationary:
+        P, naq, nbd, C, tz = backend.fused_factor_build(Xq, f.Xt, Z, lam,
+                                                        v_scale=lam)
+        r = jnp.maximum(naq[:, None] + nbd[None, :] - 2.0 * P, 0.0)
+        m = C.T - tz[None, :]
+        value = jnp.sum(-2.0 * spec.k1(r) * m, axis=1)
+        Mt = spec.k2e(r) * m
+        W = backend.gram_update(spec.k1e(r), -Mt, Z, f.Xt, lam)
+        grad = W + (Xq * jnp.sum(Mt, axis=1)[:, None]) * lam
+    else:
+        Xqt = Xq if f.c is None else Xq - f.c
+        P, _, _, C, _ = backend.fused_factor_build(Xqt, f.Xt, Z, lam,
+                                                   v_scale=lam)
+        m = C.T
+        value = jnp.sum(spec.k1(P) * m, axis=1)
+        grad = backend.gram_update(spec.k1e(P), spec.k2e(P) * m, Z, f.Xt, lam)
+    return value, grad
+
+
 def _query_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
                  probe: Optional[Array], solver=None,
-                 want_grad_std: bool = False) -> PosteriorBatch:
-    """One microbatch: fused cross-covariance contractions, no solves."""
-    value = cross_value_matvec(spec, Xq, f, Z)
-    grad = cross_grad_matvec(spec, Xq, f, Z)
+                 want_grad_std: bool = False,
+                 stream_dt=None) -> PosteriorBatch:
+    """One microbatch: fused cross-covariance contractions, no solves.
+
+    The mean path may run on quantized (``stream_dt``) or pre-quantized
+    shifted (``f.shift``) streams; the Hessian-probe and std paths always
+    need UNSHIFTED factors, so callers requesting them must pass the f32
+    masters (the state/serve layers do).
+    """
+    if f.shift is not None and (probe is not None or solver is not None):
+        raise ValueError("probe/std queries need unshifted factors — pass "
+                         "the f32 masters (the shifted bf16 view is a "
+                         "mean-path stream, see GramFactors.shift)")
+    value, grad = _mean_chunk(spec, Xq, f, Z, stream_dt)
     hess_v = None
     if probe is not None:
         hess_v = jax.vmap(
@@ -103,6 +185,7 @@ def posterior_batch(
     return_grad_std: bool = False,
     signal=1.0,
     solver=None,
+    precision: Optional[str] = None,
 ) -> PosteriorBatch:
     """Evaluate posterior mean value/grad (and Hessian @ ``probe``) at Xq.
 
@@ -121,17 +204,24 @@ def posterior_batch(
     convention for ``GramFactors``) and ``signal`` scaling the prior.
     The solver is a factorization of the noisy Gram, NOT a re-solve of
     the representer system: ``n_solve`` stays untouched.
+
+    ``precision='bf16'`` streams Xq/Xt/Z in bf16 storage (f32 accumulation
+    and outputs — the repo precision policy, DESIGN.md sec. 12); the
+    default defers to ``backend.resolve_precision()``.
     """
     Xq = jnp.atleast_2d(Xq)
+    sd = backend.stream_dtype(precision)
+    stream_dt = sd if sd != jnp.float32 else None
     if (return_std or return_grad_std) and solver is None:
         solver = _default_solver(spec, f, signal)
     if not (return_std or return_grad_std):
         solver = None
     q = Xq.shape[0]
     if not microbatch or microbatch >= q:
-        return _query_chunk(spec, Xq, f, Z, probe, solver, return_grad_std)
+        return _query_chunk(spec, Xq, f, Z, probe, solver, return_grad_std,
+                            stream_dt)
     chunks = [_query_chunk(spec, Xq[i:i + microbatch], f, Z, probe, solver,
-                           return_grad_std)
+                           return_grad_std, stream_dt)
               for i in range(0, q, microbatch)]
     cat = lambda xs: jnp.concatenate(xs)
     return PosteriorBatch(

@@ -138,16 +138,23 @@ def gpg_init(
 # ---------------------------------------------------------------------------
 
 def _border(spec: KernelSpec, data: GPGData, x: Array):
-    """New factor border: (xt_new, k1_col, k2_col, r_self) — O(ND)."""
+    """New factor border: (xt_new, k1_col, k2_col, r_self) — O(ND).
+
+    ONE ``backend.fused_factor_build`` sweep of the stored (cap, D) strip
+    emits the border gram column AND both norm strips (stationary r) AND
+    the new point's self-dot (dot-kernel r_self) — the pre-fusion
+    scaled_gram/gram_norms/row_dots launches are gone (DESIGN.md sec. 12).
+    """
     mask = _row_mask(data)
+    xt_new = x if (spec.is_stationary or data.c is None) else x - data.c
+    P, na, nb, _, _ = backend.fused_factor_build(data.Xt, xt_new[None], None,
+                                                 data.lam)
     if spec.is_stationary:
-        xt_new = x
-        r_col = backend.pairwise_r(spec, data.Xt, x[None], data.lam)[:, 0]
+        r_col = jnp.maximum(na + nb[0] - 2.0 * P[:, 0], 0.0)
         r_self = jnp.zeros((), x.dtype)
     else:
-        xt_new = x if data.c is None else x - data.c
-        r_col = backend.scaled_gram(data.Xt, xt_new[None], data.lam)[:, 0]
-        r_self = backend.row_dots(xt_new[None], xt_new[None], data.lam)[0]
+        r_col = P[:, 0]
+        r_self = nb[0]
     k1_col = jnp.where(mask, spec.k1e(r_col), 0.0)
     k2_col = jnp.where(mask, spec.k2e(r_col), 0.0)
     return xt_new, k1_col, k2_col, r_self
@@ -419,10 +426,19 @@ class GPGState:
         tol: float = 1e-10,
         maxiter: int | None = None,
         dtype=None,
+        precision: str | None = None,
     ):
         if d is None:
             raise TypeError("GPGState needs the input dimension d")
         self.spec = get_kernel(kernel) if isinstance(kernel, str) else kernel
+        # Stream storage precision (DESIGN.md sec. 12): 'f32' | 'bf16'.
+        # bf16 keeps the f32 masters in ``data`` for every solve/factor and
+        # maintains bf16 COPIES of the (cap, D) stream operands for the
+        # query path — cast once per state revision, not once per query.
+        self.precision = (backend.resolve_precision() if precision is None
+                          else precision)
+        backend.stream_dtype(self.precision)  # validate early
+        self._stream_cache = None
         self.noise = float(noise)
         self.signal = float(signal)
         self.jitter = float(jitter)
@@ -612,6 +628,61 @@ class GPGState:
         return GramFactors(K1e=d.K1e, K2e=d.K2e, Xt=d.Xt, lam=d.lam,
                            noise=self._noise_eff, c=d.c)
 
+    def set_precision(self, precision: str) -> "GPGState":
+        """Switch the stream storage precision ('f32' | 'bf16').
+
+        Owns the cache invalidation that goes with it.  NOTE: precision is
+        a property of the STATE, shared by every serve bundle and
+        ``posterior()`` caller on it — switching here changes what all of
+        them stream (the f32 masters and every solve are unaffected).
+        """
+        backend.stream_dtype(precision)  # validate
+        if precision != self.precision:
+            self.precision = precision
+            self._stream_cache = None
+        return self
+
+    @property
+    def stream_factors(self):
+        """(padded factors, Z) views in the STREAM storage precision.
+
+        With ``precision='bf16'`` the DATA stream the query path reads —
+        Xt (and the query batches, cast at request time) — is a bf16 copy
+        cached per state revision (every mutation replaces the ``GPGData``
+        pytree, so identity is an exact revision key); the (cap, cap)
+        factors, the representers Z (a solve output) and the f32 masters
+        are untouched.  All downstream contractions accumulate in f32 and
+        return f32 (``core.backend`` precision rules).
+
+        Stationary coordinates are stored RELATIVE to the first
+        observation (``GramFactors.shift``) before casting — exactly
+        invariant, and what keeps clustered-data r/m cancellations at
+        storage precision instead of |x|-amplified (DESIGN.md sec. 12.2).
+        The shifted view serves the MEAN path only; probe/std queries run
+        on the f32 masters.
+        """
+        if self.precision != "bf16":
+            return self.padded_factors, self.data.Z
+        c = self._stream_cache
+        if c is None or c[0] is not self.data:
+            d = self.data
+            if self.spec.is_stationary:
+                shift = d.Xt[0]
+                mask = (jnp.arange(d.capacity) < d.count)[:, None]
+                # padded rows stay exactly zero (the serving contract)
+                xt = jnp.where(mask, d.Xt - shift, 0.0)
+            else:
+                shift = None
+                xt = d.Xt
+            f = self.padded_factors._replace(Xt=xt.astype(jnp.bfloat16),
+                                             shift=shift)
+            # Z stays f32: it is a SOLVE output (precision rule 3), and
+            # representers cancel by orders of magnitude in the mean —
+            # quantizing them is |Z|/|mean|-amplified.  Only the data
+            # stream Xt (and queries) carry bf16 storage.
+            self._stream_cache = (d, f, d.Z)
+        return self._stream_cache[1], self._stream_cache[2]
+
     @property
     def stats(self) -> dict:
         return {
@@ -637,13 +708,25 @@ class GPGState:
         if return_std or return_grad_std:
             from repro.hyper.variance import make_solver
 
+            # the variance FACTORIZATION always runs on the f32 masters
+            # (precision rule 3); only the streams may be bf16
             solver = make_solver(self.spec, self.factors, noise=self.noise,
                                  signal=self.signal)
-        return posterior_batch(self.spec, jnp.atleast_2d(Xq), self.factors,
-                               self.Z, probe=probe, microbatch=microbatch,
+        if probe is not None or solver is not None:
+            # probe/std paths need the unshifted f32 masters; the mean
+            # path still quantizes in-chunk under precision='bf16'
+            f, Zq = self.factors, self.Z
+        else:
+            fp, Zp = self.stream_factors
+            k = self.n
+            f = fp._replace(K1e=fp.K1e[:k, :k], K2e=fp.K2e[:k, :k],
+                            Xt=fp.Xt[:k])
+            Zq = Zp[:k]
+        return posterior_batch(self.spec, jnp.atleast_2d(Xq), f,
+                               Zq, probe=probe, microbatch=microbatch,
                                return_std=return_std,
                                return_grad_std=return_grad_std,
-                               solver=solver)
+                               solver=solver, precision=self.precision)
 
     def __repr__(self):
         s = self.stats

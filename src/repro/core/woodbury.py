@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from . import backend
-from .gram import GramFactors, scaled_gram
+from .gram import FactorBundle, GramFactors
 from .kernels import KernelSpec
 from .mvm import l_op, lt_op
 
@@ -58,8 +58,18 @@ def woodbury_solve(
     f: GramFactors,
     G: Array,
     jitter: float = 1e-10,
+    bundle: FactorBundle | None = None,
 ) -> Array:
-    """Z (N, D) with (grad K grad') vec(Z) = vec(G). Exact (paper Eq. 6-8)."""
+    """Z (N, D) with (grad K grad') vec(Z) = vec(G). Exact (paper Eq. 6-8).
+
+    The O(N^2 D) work is ONE fused factor sweep (``backend.
+    fused_factor_build``: S and C = G Xt^T in the same read of Xt/G) plus
+    the single fused output assembly at the end — the old separate
+    S-gram / K1i-stream / @Xt^T passes are gone (DESIGN.md sec. 12);
+    T0 = (K1i G) Xt^T = K1i @ C never touches a D-axis.  Pass ``bundle``
+    (from :func:`repro.core.gram.build_factor_bundle`, which shares the
+    sweep with the K1e/K2e build) to skip even that one input sweep.
+    """
     n = f.n
     dtype = G.dtype
     K1 = f.K1e
@@ -70,9 +80,12 @@ def woodbury_solve(
             raise ValueError("noise > 0 requires scalar Lambda on the exact path")
         K1 = K1 + (f.noise / lam_s) * jnp.eye(n, dtype=dtype)
     K1i = jnp.linalg.inv(K1 + jitter * jnp.eye(n, dtype=dtype))
-    S = scaled_gram(f.Xt, f.Xt, f.lam)
-    W0 = backend.kron_precond(K1i, G, 1.0)              # K1i @ G, O(N^2 D)
-    T0 = backend.scaled_gram(W0, f.Xt, 1.0)             # W0 @ Xt^T, O(N^2 D)
+    if bundle is None:
+        S, _, _, C, _ = backend.fused_factor_build(f.Xt, f.Xt, G, f.lam)
+    else:
+        S, C = bundle.S, bundle.C
+    S = S.astype(dtype)
+    T0 = K1i @ C.astype(dtype)                # = (K1i G) Xt^T, now O(N^3)
 
     if spec.is_stationary:
         T = lt_op(T0)
@@ -117,12 +130,15 @@ def poly2_quadratic_solve(
     Gt = G if g_c is None else G - g_c
     n = f.n
     dtype = G.dtype
-    S = scaled_gram(f.Xt, f.Xt, f.lam)
+    # ONE sweep of (Xt, Gt): S = (Xt L) Xt^T and C = Gt Xt^T together
+    # (Sa = Xt Gt^T = C^T) — the two separate gram passes are fused.
+    S, _, _, C, _ = backend.fused_factor_build(f.Xt, f.Xt, Gt, f.lam)
+    S = S.astype(dtype)
     eye = jnp.eye(n, dtype=dtype)
     Sj = S + jitter * eye
     # Sa = Xt Gt^T  (= X~ A X~^T on a true quadratic, symmetric);
     # Q = 1/2 Sa S^{-1} solves F(Q) = T analytically (paper App. C.1).
-    Sa = backend.scaled_gram(f.Xt, Gt, 1.0)
+    Sa = C.T.astype(dtype)
     Q = 0.5 * jnp.linalg.solve(Sj.T, Sa.T).T          # Sa @ S^{-1}
     K1i = jnp.linalg.inv(f.K1e + jitter * eye)
     # K1i @ (Gt/lam - Q @ Xt), fused into one D-stream as in woodbury_solve.

@@ -8,6 +8,8 @@ modules directly, so the jnp oracle path stays a drop-in fallback.
 """
 from .ops import (
     DEFAULT_VMEM_BUDGET,
+    fused_factor_build,
+    fused_factor_build_ref,
     fused_gram_mvm,
     fused_gram_mvm_multi,
     fused_gram_mvm_ref,
@@ -22,6 +24,7 @@ from .ops import (
 
 __all__ = [
     "DEFAULT_VMEM_BUDGET",
+    "fused_factor_build", "fused_factor_build_ref",
     "fused_gram_mvm", "fused_gram_mvm_multi", "fused_gram_mvm_ref",
     "fused_gram_norms", "fused_gram_norms_ref", "gram_update",
     "gram_update_ref", "skinny_gram", "skinny_gram_ref", "small_matmul",

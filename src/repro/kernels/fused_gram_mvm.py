@@ -46,6 +46,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 Array = jnp.ndarray
 
+from .gram_update import _out_dtype  # bf16 storage in -> f32 out
+
 
 def _eye(n: int) -> Array:
     # 2D iota (TPU cannot lower 1D iota); used for on-chip diag extraction.
@@ -127,7 +129,7 @@ def fused_gram_mvm_padded(
             pl.BlockSpec((1, block_d), lambda p, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((n, block_d), lambda p, j: (0, j * p)),
-        out_shape=jax.ShapeDtypeStruct((n, d), V.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, d), _out_dtype(V.dtype)),
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
         interpret=interpret,
     )(K1e, K2e, Xt, V, lam2)
@@ -200,7 +202,7 @@ def fused_gram_mvm_multi_padded(
             pl.BlockSpec((1, block_d), lambda p, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((r, n, block_d), lambda p, j: (0, 0, j * p)),
-        out_shape=jax.ShapeDtypeStruct((r, n, d), V.dtype),
+        out_shape=jax.ShapeDtypeStruct((r, n, d), _out_dtype(V.dtype)),
         scratch_shapes=[pltpu.VMEM((r, n, n), jnp.float32)],
         interpret=interpret,
     )(K1e, K2e, Xt, V, lam2)

@@ -27,6 +27,12 @@ from jax.experimental import pallas as pl
 Array = jnp.ndarray
 
 
+def _out_dtype(dt):
+    """bf16 storage in, f32 out: the accumulator is f32 and the precision
+    policy (DESIGN.md sec. 12) never rounds results back to storage."""
+    return jnp.float32 if dt == jnp.bfloat16 else dt
+
+
 def _kernel(k1_ref, m_ref, v_ref, x_ref, lam_ref, vs_ref, o_ref, *, noise: float):
     k1 = k1_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
@@ -72,7 +78,7 @@ def small_matmul_padded(
             pl.BlockSpec((1, block_d), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((nq, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((nq, d), V.dtype),
+        out_shape=jax.ShapeDtypeStruct((nq, d), _out_dtype(V.dtype)),
         interpret=interpret,
     )(K, V, s2)
 
@@ -107,6 +113,6 @@ def gram_update_padded(
             pl.BlockSpec((1, block_d), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((nq, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((nq, d), V.dtype),
+        out_shape=jax.ShapeDtypeStruct((nq, d), _out_dtype(V.dtype)),
         interpret=interpret,
     )(K1, M, V, X, lam2, vs2)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .fused_factor_build import fused_factor_build_padded
 from .fused_gram_mvm import fused_gram_mvm_multi_padded, fused_gram_mvm_padded
 from .fused_gram_norms import fused_gram_norms_padded
 from .gram_update import gram_update_padded, small_matmul_padded
@@ -176,6 +177,40 @@ def small_matmul(K: Array, V: Array, scale=1.0, *, block_d: int = 1024,
     return W[:nq, :d]
 
 
+def fused_factor_build(A: Array, B: Array, V: Array | None, lam, *,
+                       v_scale=1.0, block_d: int = 1024,
+                       interpret: bool | None = None,
+                       vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET):
+    """Single-sweep factor bundle (P, na, nb, C, tv) — ONE launch.
+
+    A: (Na, D), B: (Nb, D), V: (Nb, D) (or None to reuse B).  Returns
+    P = (A*lam) @ B^T (Na, Nb), row norms na (Na,) / nb (Nb,),
+    C = (V*v_scale) @ A^T (Nb, Na), tv = rowdots(B, V, lam) (Nb,).
+    Accepts bf16 storage for A/B/V; all outputs f32.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    if V is None:
+        V = B
+    if V.shape != B.shape:
+        raise ValueError(f"V must share B's shape (tv/C row contract): "
+                         f"V {V.shape} vs B {B.shape}")
+    na, d = A.shape
+    nb = B.shape[0]
+    nap, nbp = _round_up(na, _SUBLANE), _round_up(nb, _SUBLANE)
+    block_d = _pick_block_d(
+        d, block_d, stream_rows=nap + 2 * nbp + 2,
+        resident_bytes=4 * (2 * nap * nbp + nap + 2 * nbp),
+        vmem_budget_bytes=vmem_budget_bytes)
+    dp = _round_up(d, block_d)
+    vs = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32), (d,))
+    (Ap, Bp, Vp, vs_p), lam_p = _pad_d_inputs([A, B, V, vs], lam, d, dp)
+    Ap = _pad_rows(Ap, nap)
+    Bp, Vp = _pad_rows(Bp, nbp), _pad_rows(Vp, nbp)
+    P, na_o, nb_o, C, tv = fused_factor_build_padded(
+        Ap, Bp, Vp, lam_p, vs_p, block_d=block_d, interpret=interpret)
+    return (P[:na, :nb], na_o[:na, 0], nb_o[:nb, 0], C[:nb, :na], tv[:nb, 0])
+
+
 def fused_gram_norms(A: Array, B: Array, lam, *, block_d: int = 1024,
                      interpret: bool | None = None,
                      vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET):
@@ -253,3 +288,4 @@ skinny_gram_ref = ref.skinny_gram_ref
 gram_update_ref = ref.gram_update_ref
 fused_gram_norms_ref = ref.fused_gram_norms_ref
 fused_gram_mvm_ref = ref.fused_gram_mvm_ref
+fused_factor_build_ref = ref.fused_factor_build_ref

@@ -6,6 +6,11 @@ import jax.numpy as jnp
 Array = jnp.ndarray
 
 
+def _out_dtype(dt):
+    """bf16 storage in, f32 out — mirror of the kernels' output contract."""
+    return jnp.float32 if dt == jnp.bfloat16 else dt
+
+
 def skinny_gram_ref(A: Array, B: Array, lam) -> Array:
     """P = (A * lam) @ B^T in f32 accumulation."""
     a = A.astype(jnp.float32) * jnp.asarray(lam, jnp.float32)
@@ -14,7 +19,7 @@ def skinny_gram_ref(A: Array, B: Array, lam) -> Array:
 
 def gram_update_ref(K1: Array, M: Array, V: Array, X: Array, lam,
                     v_scale=None, noise: float = 0.0) -> Array:
-    """W = (K1 @ (V*v_scale) + M @ X) * lam + noise*V, result in V.dtype."""
+    """W = (K1 @ (V*v_scale) + M @ X) * lam + noise*V (f32 out for bf16 V)."""
     v = V.astype(jnp.float32)
     vs = v if v_scale is None else v * jnp.asarray(v_scale, jnp.float32)
     acc = K1.astype(jnp.float32) @ vs
@@ -22,7 +27,7 @@ def gram_update_ref(K1: Array, M: Array, V: Array, X: Array, lam,
     out = acc * jnp.asarray(lam, jnp.float32)
     if noise:
         out = out + jnp.float32(noise) * v
-    return out.astype(V.dtype)
+    return out.astype(_out_dtype(V.dtype))
 
 
 def fused_gram_norms_ref(A: Array, B: Array, lam):
@@ -33,6 +38,25 @@ def fused_gram_norms_ref(A: Array, B: Array, lam):
     na = jnp.sum(a * lamv * a, axis=1, keepdims=True)
     nb = jnp.sum(b * lamv * b, axis=1, keepdims=True)
     return P, na, nb
+
+
+def fused_factor_build_ref(A: Array, B: Array, V: Array, lam, vs=1.0):
+    """(P, na, nb, C, tv) — the single-sweep factor bundle, f32 accumulation.
+
+    P = (A*lam) @ B^T, na/nb the lam-weighted row norms, C = (V*vs) @ A^T,
+    tv = rowdots(B, V, lam).  V must share B's row count.
+    """
+    lamv = jnp.asarray(lam, jnp.float32)
+    vsv = jnp.asarray(vs, jnp.float32)
+    a = A.astype(jnp.float32)
+    b = B.astype(jnp.float32)
+    v = V.astype(jnp.float32)
+    P = (a * lamv) @ b.T
+    na = jnp.sum(a * lamv * a, axis=1, keepdims=True)
+    nb = jnp.sum(b * lamv * b, axis=1, keepdims=True)
+    C = (v * vsv) @ a.T
+    tv = jnp.sum(b * lamv * v, axis=1, keepdims=True)
+    return P, na, nb, C, tv
 
 
 def small_op(K2e: Array, M: Array, *, stationary: bool) -> Array:
@@ -70,4 +94,4 @@ def fused_gram_mvm_ref(K1e: Array, K2e: Array, Xt: Array, V: Array, lam,
         Xt.astype(jnp.float32), V.astype(jnp.float32),
         jnp.asarray(lam, jnp.float32), stationary=stationary,
         noise=float(noise))
-    return out.astype(V.dtype)
+    return out.astype(_out_dtype(V.dtype))

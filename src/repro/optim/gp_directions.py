@@ -29,8 +29,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import (build_factors, get_kernel, infer_optimum,
-                        posterior_hessian, woodbury_solve)
+from repro.core import (get_kernel, infer_optimum, posterior_hessian,
+                        woodbury_solve)
+from repro.core.gram import build_factor_bundle
 
 Array = jnp.ndarray
 
@@ -39,11 +40,14 @@ def gph_direction(
     X: Array, G: Array, x_t: Array, g_t: Array, *,
     kernel: str = "rbf", lam=1.0, noise: float = 0.0, jitter: float = 1e-8,
 ) -> Array:
-    """Quasi-Newton step -H̄(x_t)^{-1} g_t from gradient history (X, G)."""
+    """Quasi-Newton step -H̄(x_t)^{-1} g_t from gradient history (X, G).
+
+    Factor build + Woodbury right-hand contractions come out of ONE fused
+    sweep of (X, G) (``build_factor_bundle``, DESIGN.md sec. 12)."""
     spec = get_kernel(kernel)
-    f = build_factors(spec, X, lam=lam, noise=noise)
-    Z = woodbury_solve(spec, f, G, jitter=jitter)
-    H = posterior_hessian(spec, x_t, f, Z)
+    b = build_factor_bundle(spec, X, G, lam=lam, noise=noise)
+    Z = woodbury_solve(spec, b.factors, G, jitter=jitter, bundle=b)
+    H = posterior_hessian(spec, x_t, b.factors, Z)
     return -H.solve(g_t, jitter=jitter)
 
 
@@ -53,9 +57,9 @@ def gpx_direction(
 ) -> Array:
     """Step towards the inferred optimum x̄*(g=0) (flipped inference)."""
     spec = get_kernel(kernel)
-    f_g = build_factors(spec, G, lam=lam, noise=noise)
-    Z = woodbury_solve(spec, f_g, X - x_t, jitter=jitter)
-    x_star = infer_optimum(spec, f_g, Z, x_t)
+    b = build_factor_bundle(spec, G, X - x_t, lam=lam, noise=noise)
+    Z = woodbury_solve(spec, b.factors, X - x_t, jitter=jitter, bundle=b)
+    x_star = infer_optimum(spec, b.factors, Z, x_t)
     return x_star - x_t
 
 

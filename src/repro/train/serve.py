@@ -137,25 +137,39 @@ class GPServeBundle:
     probe: Optional[jnp.ndarray]
     return_std: bool = False
     return_grad_std: bool = False
-    _solver_cache: Any = None        # (revision key, GramSolver)
+    _solver_cache: Any = None        # OrderedDict: revision key -> GramSolver
+    # LU factorizations per cached revision are O(cap^4) floats — a
+    # long-running server interleaving refit()/extend() with queries would
+    # otherwise accrete one per revision forever, so the cache is a small
+    # LRU: the common alternating-revision pattern still hits, memory is
+    # bounded at _SOLVER_CACHE_MAX factorizations.
+    _SOLVER_CACHE_MAX = 4
 
     def refresh_solver(self):
         """The variance solver for the CURRENT state revision — factorized
-        once per revision (O(N^2 D + (N^2)^3)) and cached: every state
-        mutation replaces the ``GPGData`` pytree and bumps its op counters,
-        so repeated requests against an unchanged state reuse the LU."""
+        once per revision (O(N^2 D + (N^2)^3)) and LRU-cached: every state
+        mutation (extend/evict/refit) replaces the ``GPGData`` pytree, so
+        identity + (noise, signal) is an exact revision key and repeated
+        requests against an unchanged state reuse the LU."""
+        import collections
+
         from repro.hyper.variance import make_solver
 
         st = self.state
-        c = self._solver_cache
-        if c is not None and c[0] is st.data and c[1] == (st.noise,
-                                                          st.signal):
-            return c[2]
+        if self._solver_cache is None:
+            self._solver_cache = collections.OrderedDict()
+        # hold the data pytree itself in the key: identity can't be
+        # recycled while cached, so `is`-equality (via id) is exact
+        key = (id(st.data), st.noise, st.signal)
+        hit = self._solver_cache.get(key)
+        if hit is not None and hit[0] is st.data:
+            self._solver_cache.move_to_end(key)
+            return hit[1]
         solver = make_solver(st.spec, st.padded_factors, noise=st.noise,
                              signal=st.signal, count=st.data.count)
-        # hold the data pytree itself: identity can't be recycled while
-        # cached, so `is` is an exact revision check
-        self._solver_cache = (st.data, (st.noise, st.signal), solver)
+        self._solver_cache[key] = (st.data, solver)
+        while len(self._solver_cache) > self._SOLVER_CACHE_MAX:
+            self._solver_cache.popitem(last=False)
         return solver
 
     def query(self, Xq):
@@ -165,11 +179,27 @@ class GPServeBundle:
         q, d = Xq.shape
         b = self.microbatch
         pad = (-q) % b
-        Xp = jnp.pad(Xq, ((0, pad), (0, 0)))
-        # fixed-capacity padded views: shapes are stable across extend(),
-        # so the compiled step is reused (padding is exact for queries)
-        f, Z = self.state.padded_factors, self.state.data.Z
+        # fixed-capacity padded views in the state's STREAM precision:
+        # shapes are stable across extend(), so the compiled step is
+        # reused (padding is exact for queries); with precision='bf16'
+        # the bf16 copies are cached per revision by the state, so the
+        # serve step streams half the bytes with no per-request cast.
+        # probe/std endpoints serve from the unshifted f32 masters
+        # (GramFactors.shift is a mean-path-only frame).
         want_std = self.return_std or self.return_grad_std
+        if want_std or self.probe is not None:
+            f, Z = self.state.padded_factors, self.state.data.Z
+        else:
+            f, Z = self.state.stream_factors
+        if f.shift is not None:
+            Xq = (Xq - f.shift).astype(f.Xt.dtype)
+            f = f._replace(shift=None)
+        elif f.c is not None and f.Xt.dtype == jnp.bfloat16:
+            # dot-kernel bf16 stream: center-then-cast (the stored Xt is
+            # centered; quantizing absolute coords first loses |x|/|x-c|)
+            Xq = (Xq - f.c).astype(f.Xt.dtype)
+            f = f._replace(c=None)
+        Xp = jnp.pad(Xq.astype(f.Xt.dtype), ((0, pad), (0, 0)))
         solver = self.refresh_solver() if want_std else None
         chunks = []
         for i in range(0, q + pad, b):
@@ -191,9 +221,11 @@ class GPServeBundle:
         return out
 
 
-def build_gp_serve_step(state, *, microbatch: int = 64, probe=None,
+def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
                         return_std: bool = False,
-                        return_grad_std: bool = False) -> GPServeBundle:
+                        return_grad_std: bool = False,
+                        precision: str | None = None,
+                        config=None) -> GPServeBundle:
     """Compile a batched posterior query step for a ``GPGState``.
 
     One compilation per (microbatch, capacity, D) shape — the step is fed
@@ -207,9 +239,25 @@ def build_gp_serve_step(state, *, microbatch: int = 64, probe=None,
     gradient stds too) through one structured Gram factorization per
     request; the hypers ride inside the solver pytree, so refits between
     requests never recompile (asserted in tests/test_hyper.py).
+
+    ``config`` (a ``repro.configs.paper_gp.GPServeConfig``) supplies
+    defaults for ``microbatch`` and ``precision``; an explicit
+    ``precision`` (or config) of 'bf16' switches the STATE's stream
+    storage to bf16 — the per-revision bf16 copies live on the state, so
+    every consumer of ``state.stream_factors`` shares them.
     """
+    from repro.configs.paper_gp import GP_SERVE
     from repro.core.query import make_query_fn
 
+    if config is not None and precision is None:
+        precision = config.precision
+    if microbatch is None:
+        microbatch = (config or GP_SERVE).microbatch
+    if precision is not None:
+        # precision lives on the STATE (shared by every bundle/consumer);
+        # an explicit request here re-points all of them — see
+        # GPGState.set_precision
+        state.set_precision(precision)
     fn = make_query_fn(state.spec, with_probe=probe is not None,
                        with_std=return_std, with_grad_std=return_grad_std)
     return GPServeBundle(

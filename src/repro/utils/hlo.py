@@ -76,6 +76,79 @@ def collective_bytes(hlo_text: str) -> int:
     return sum(collective_breakdown(hlo_text).values())
 
 
+_STREAM_CONSUMERS = ("dot_general", "pallas_call")
+
+
+def _axis_ge(aval, d: int) -> bool:
+    shape = getattr(aval, "shape", ())
+    return any(isinstance(s, int) and s >= d for s in shape)
+
+
+def _is_var(v) -> bool:
+    import jax
+
+    return not isinstance(v, jax.core.Literal)
+
+
+def _walk_streams(jaxpr, tainted: set, d: int, counts: dict) -> set:
+    """Taint-propagate a D-axis data argument; classify its consumers.
+
+    A *consumer* is a contraction primitive (``dot_general`` or a
+    ``pallas_call`` launch — the only ops that stream an operand through
+    the MXU/HBM pipeline); every other eqn just forwards taint to outputs
+    that keep a >= d axis (pads/casts/masks/elementwise).  Consumers are
+    classified by their outputs: all outputs D-free -> a *reduction*
+    stream (factor build); any output keeping the D axis -> an
+    *expansion* stream (output assembly).  Taint does NOT flow through a
+    consumer: its result is derived data, and a further pass over it is a
+    new stream of that object, not of the argument being tracked.
+    """
+    for eqn in jaxpr.eqns:
+        tin = any(_is_var(v) and v in tainted for v in eqn.invars)
+        name = eqn.primitive.name
+        if name in _STREAM_CONSUMERS:
+            if tin:
+                kind = ("expansion" if any(_axis_ge(v.aval, d)
+                                           for v in eqn.outvars)
+                        else "reduction")
+                counts[kind] = counts.get(kind, 0) + 1
+            continue  # opaque: no taint through, no recursion into bodies
+        sub = eqn.params.get("jaxpr", eqn.params.get("call_jaxpr"))
+        inner = getattr(sub, "jaxpr", sub)
+        if hasattr(inner, "eqns") and len(inner.invars) == len(eqn.invars):
+            sub_taint = {iv for iv, ov in zip(inner.invars, eqn.invars)
+                         if _is_var(ov) and ov in tainted}
+            out_taint = _walk_streams(inner, sub_taint, d, counts)
+            for outer_v, inner_v in zip(eqn.outvars, inner.outvars):
+                if _is_var(inner_v) and inner_v in out_taint:
+                    tainted.add(outer_v)
+            continue
+        if tin:
+            for ov in eqn.outvars:
+                if _axis_ge(ov.aval, d):
+                    tainted.add(ov)
+    return tainted
+
+
+def count_data_streams(closed_jaxpr, argnum: int, d: int) -> dict:
+    """{'reduction': r, 'expansion': e} streams of argument ``argnum``.
+
+    The structural teeth behind the single-sweep claim (DESIGN.md sec. 12):
+    tracing e.g. ``woodbury_solve`` as a function of X and counting the
+    contractions that consume X (or anything elementwise-derived from it,
+    pads and casts included) proves the lowered program reads the data
+    stream exactly once to build factors (``reduction == 1``) plus the one
+    unavoidable output-assembly stream (``expansion``) — a refactor that
+    reintroduces a separate norms/S/RHS pass flips the count.  ``d`` is
+    the data axis length; derived (N, N) objects must all be smaller, so
+    pick shapes with max(N, Q)**2 < d when tracing.
+    """
+    jaxpr = closed_jaxpr.jaxpr
+    counts: dict = {"reduction": 0, "expansion": 0}
+    _walk_streams(jaxpr, {jaxpr.invars[argnum]}, d, counts)
+    return counts
+
+
 def count_primitive(jaxpr, name: str) -> int:
     """Recursively count occurrences of a jax primitive in a jaxpr.
 

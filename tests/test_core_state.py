@@ -213,6 +213,43 @@ def test_posterior_batch_q64_single_inner_solve(rng):
     assert jnp.allclose(pb.hess_v, pb1.hess_v)
 
 
+@pytest.mark.parametrize("q,microbatch", [(7, 3), (5, 4), (1, 4), (9, 2)])
+def test_posterior_batch_ragged_microbatch(q, microbatch, rng):
+    """Q not divisible by the microbatch: the trailing partial chunk must
+    be served exactly — same values/grads/stds as the unchunked call, and
+    output shapes trimmed to Q."""
+    X, G = _data(rng, 6)
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE)
+    Xq = jax.random.normal(jax.random.fold_in(rng, 11), (q, D))
+    probe = jnp.ones((D,))
+    pb = st.posterior(Xq, probe=probe, microbatch=microbatch,
+                      return_std=True)
+    ref = st.posterior(Xq, probe=probe, return_std=True)
+    assert pb.value.shape == (q,) and pb.grad.shape == (q, D)
+    assert pb.std.shape == (q,) and pb.hess_v.shape == (q, D)
+    assert jnp.allclose(pb.value, ref.value)
+    assert jnp.allclose(pb.grad, ref.grad)
+    assert jnp.allclose(pb.std, ref.std)
+    assert jnp.allclose(pb.hess_v, ref.hess_v)
+
+
+@pytest.mark.parametrize("q", [1, 5, 11])
+def test_serve_bundle_ragged_request(q, rng):
+    """Serve-side padding path for requests not divisible by microbatch
+    (including a single query and q > 2*microbatch)."""
+    from repro.train.serve import build_gp_serve_step
+
+    X, G = _data(rng, 5)
+    st = GPGState.from_data("rbf", X, G, lam=LAM, noise=NOISE)
+    srv = build_gp_serve_step(st, microbatch=4)
+    Xq = jax.random.normal(jax.random.fold_in(rng, 12), (q, D))
+    pb = srv.query(Xq)
+    ref = st.posterior(Xq)
+    assert pb.value.shape == (q,) and pb.grad.shape == (q, D)
+    assert jnp.allclose(pb.grad, ref.grad)
+    assert jnp.allclose(pb.value, ref.value)
+
+
 def test_posterior_batch_matches_pointwise_inference(rng):
     X, G = _data(rng, 6)
     st = GPGState.from_data("rq", X, G, lam=LAM, noise=NOISE)

@@ -183,6 +183,96 @@ def test_gram_update_rectangular(rng):
 
 
 # ---------------------------------------------------------------------------
+# Precision policy: bf16-in / f32-accum tracks the f32 oracle <= 1e-3 rel
+# on every fused entry point (same stored data: the comparison isolates
+# what the PIPELINE adds — accumulation order, fusion — from the
+# unavoidable bf16 storage quantization, which belongs to the data)
+# ---------------------------------------------------------------------------
+
+BF16_TOL = 1e-3
+
+
+def _norm_rel(got, want):
+    got = jnp.asarray(got, jnp.float64)
+    want = jnp.asarray(want, jnp.float64)
+    return float(jnp.linalg.norm(got - want) / (jnp.linalg.norm(want) + 1e-30))
+
+
+def _bf16_case(rng, n, d, nq=None):
+    mk = lambda k, shape: jax.random.normal(
+        jax.random.fold_in(rng, k), shape, jnp.float32).astype(jnp.bfloat16)
+    K = jax.random.normal(jax.random.fold_in(rng, 9), (nq or n, n),
+                          jnp.float32)
+    return mk(1, (n, d)), mk(2, (n, d)), K
+
+
+@pytest.mark.parametrize("entry", [
+    "skinny_gram", "gram_update", "small_matmul", "fused_gram_norms",
+    "fused_gram_mvm", "fused_gram_mvm_multi", "fused_factor_build",
+])
+def test_bf16_in_f32_accum_tracks_f32_oracle(entry, rng):
+    """kernel(bf16 storage) vs f32 oracle on the SAME stored values."""
+    from repro.kernels import fused_factor_build, fused_factor_build_ref
+    from repro.kernels import small_matmul
+
+    n, d = 8, 4096
+    X16, V16, K = _bf16_case(rng, n, d)
+    X32, V32 = X16.astype(jnp.float32), V16.astype(jnp.float32)
+    lam = 0.5
+    if entry == "skinny_gram":
+        got = [skinny_gram(X16, V16, lam, interpret=True)]
+        want = [skinny_gram_ref(X32, V32, lam)]
+    elif entry == "gram_update":
+        M = jax.random.normal(jax.random.fold_in(rng, 8), (n, n), jnp.float32)
+        got = [gram_update(K, M, V16, X16, lam, noise=0.1, interpret=True)]
+        want = [gram_update_ref(K, M, V32, X32, lam, noise=0.1)]
+    elif entry == "small_matmul":
+        got = [small_matmul(K, V16, lam, interpret=True)]
+        want = [(K @ V32) * lam]
+    elif entry == "fused_gram_norms":
+        got = list(fused_gram_norms(X16, V16, lam, interpret=True))
+        want = [w.reshape(g.shape) for g, w in zip(
+            got, fused_gram_norms_ref(X32, V32, lam))]
+    elif entry in ("fused_gram_mvm", "fused_gram_mvm_multi"):
+        K2 = 0.1 * jax.random.normal(jax.random.fold_in(rng, 7), (n, n),
+                                     jnp.float32)
+        if entry == "fused_gram_mvm":
+            got = [fused_gram_mvm(K, K2, X16, V16, lam, stationary=True,
+                                  noise=0.1, interpret=True)]
+            want = [fused_gram_mvm_ref(K, K2, X32, V32, lam, stationary=True,
+                                       noise=0.1)]
+        else:
+            Vs16 = jnp.stack([V16, X16])
+            got = [fused_gram_mvm_multi(K, K2, X16, Vs16, lam,
+                                        stationary=True, interpret=True)]
+            want = [fused_gram_mvm_ref(K, K2, X32, Vs16.astype(jnp.float32),
+                                       lam, stationary=True)]
+    else:
+        got = list(fused_factor_build(X16, X16, V16, lam, interpret=True))
+        want = [w.reshape(g.shape) for g, w in zip(
+            got, fused_factor_build_ref(X32, X32, V32, lam))]
+    for g, w in zip(got, want):
+        assert g.dtype == jnp.float32      # f32 outputs, never bf16 rounded
+        assert _norm_rel(g, w) < BF16_TOL, (entry, _norm_rel(g, w))
+
+
+# ---------------------------------------------------------------------------
+# Fused single-sweep factor-build megakernel (see also test_fused_factor.py)
+# ---------------------------------------------------------------------------
+
+def test_fused_factor_build_single_launch(rng):
+    """The whole factor bundle == exactly ONE pallas_call in the jaxpr."""
+    from repro.kernels import fused_factor_build
+    from repro.utils.hlo import count_primitive
+
+    A = jax.random.normal(jax.random.fold_in(rng, 1), (5, 300), jnp.float32)
+    B = jax.random.normal(jax.random.fold_in(rng, 2), (7, 300), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda a, b: fused_factor_build(a, b, None, 0.5, interpret=True))(A, B)
+    assert count_primitive(closed.jaxpr, "pallas_call") == 1
+
+
+# ---------------------------------------------------------------------------
 # block_d selection: pad-waste bound + VMEM budget
 # ---------------------------------------------------------------------------
 
