@@ -40,6 +40,10 @@ def _walk_regressions(base, fresh, path, failures):
     """
     if isinstance(base, dict) and isinstance(fresh, dict):
         for k in base:
+            if k == "telemetry":
+                # observability sections are machine/run-dependent (and
+                # full of *_bytes gauge names) — never regression-gated
+                continue
             if k in fresh:
                 _walk_regressions(base[k], fresh[k], path + (str(k),),
                                   failures)
@@ -56,6 +60,11 @@ def _walk_regressions(base, fresh, path, failures):
         return
     if not _is_claim_metric(key):
         key = next(p for p in path if _is_claim_metric(p))
+    # null/absent metrics are "not measured here", never a regression:
+    # interpret-mode baselines carry e.g. ``pallas_seconds: null`` and a
+    # compiled column must not trip against them (nor vice versa)
+    if base is None or fresh is None:
+        return
     if isinstance(base, bool) or isinstance(fresh, bool):
         if base is True and fresh is not True:
             failures.append((".".join(path), base, fresh))
@@ -125,22 +134,36 @@ def main() -> None:
                          "on a >20%% regression of any claim metric")
     args = ap.parse_args()
 
+    # with REPRO_OBS=on each bench row grows a ``telemetry`` section (the
+    # registry delta across the bench: CG iterations, fallbacks, spans);
+    # --check skips the subtree, so telemetry never gates perf
+    try:
+        from repro.obs import trace as obs
+        obs_on = obs.enabled()
+    except ImportError:     # benches runnable without src on the path
+        obs, obs_on = None, False
+
     results = {}
     for key, module, desc in BENCHES:
         if args.only and key not in args.only.split(","):
             continue
         t0 = time.time()
         print(f"=== {key}: {desc}", flush=True)
+        snap = obs.snapshot() if obs_on else None
         try:
             mod = __import__(module, fromlist=["run"])
             r = mod.run()
             r["_seconds"] = round(time.time() - t0, 1)
+            if obs_on:
+                r["telemetry"] = obs.REGISTRY.delta(snap)
             results[key] = r
             print(json.dumps(r, indent=1, default=str), flush=True)
         except Exception as e:  # noqa: BLE001
             results[key] = {"error": str(e), "claim_holds": False,
                             "_trace": traceback.format_exc()[-1500:]}
             print(f"ERROR {e}", flush=True)
+    if obs_on:
+        obs.flush()     # final registry snapshot into the JSONL sink
 
     print("\n===== reproduction scorecard =====")
     for key, module, desc in BENCHES:

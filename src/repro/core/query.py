@@ -38,6 +38,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as _obs
+
 from . import backend
 from .gram import GramFactors
 from .inference import posterior_hessian
@@ -217,6 +219,14 @@ def posterior_batch(
     if not (return_std or return_grad_std):
         solver = None
     q = Xq.shape[0]
+    # host-side telemetry only (never from inside a trace — a traced call
+    # must not leak per-trace python effects into the registry)
+    if _obs.enabled() and not isinstance(Xq, jax.core.Tracer):
+        _obs.REGISTRY.inc("query.requests")
+        _obs.REGISTRY.inc("query.points", q)
+        _obs.REGISTRY.inc(
+            "query.microbatches",
+            1 if (not microbatch or microbatch >= q) else -(-q // microbatch))
     if not microbatch or microbatch >= q:
         return _query_chunk(spec, Xq, f, Z, probe, solver, return_grad_std,
                             stream_dt)

@@ -43,6 +43,9 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import cho_solve, solve_triangular
 
+from repro.obs import injit as _obs_tap
+from repro.obs import trace as _obs
+
 from . import backend
 from .gram import GramFactors
 from .kernels import KernelSpec, get_kernel
@@ -175,17 +178,21 @@ def _full_chol(data: GPGData, noise: float, jitter: float) -> Array:
 
 
 def _chol_append(L: Array, k_col: Array, kappa, n: Array, deg_thresh: float):
-    """Bordered Cholesky: O(N^2) append of row n. Returns (L', degraded).
+    """Bordered Cholesky: O(N^2) append of row n.
+    Returns (L', degraded, pivot2).
 
     k_col must be zero at rows >= n (and L identity there), so the
-    triangular solve is exact on the padded arrays.
+    triangular solve is exact on the padded arrays.  ``pivot2`` is the
+    squared new pivot — the numerical-health signal the obs taps record
+    (it collapsing toward ``deg_thresh * kappa`` is the early warning for
+    the O(N^3) fallback).
     """
     l = solve_triangular(L, k_col, lower=True)
     pivot2 = kappa - jnp.vdot(l, l)
     degraded = pivot2 <= deg_thresh * jnp.maximum(kappa, _TINY)
     row = jnp.where(jnp.arange(L.shape[0]) < n, l, 0.0)
     row = row.at[n].set(jnp.sqrt(jnp.maximum(pivot2, _TINY)))
-    return L.at[n].set(row), degraded
+    return L.at[n].set(row), degraded, pivot2
 
 
 def _chol_rank1_update(L: Array, v: Array) -> Array:
@@ -226,6 +233,8 @@ def _solve(spec: KernelSpec, data: GPGData, rhs: Array, z0: Array, *,
     M_inv = lambda V: cho_solve((data.L, True), V) / data.lam
     res = cg(mv, jnp.where(mask, rhs, 0.0), x0=jnp.where(mask, z0, 0.0),
              tol=tol, maxiter=maxiter, M_inv=M_inv)
+    _obs_tap.tap("state.cg_iters", res.iters, kind="hist")
+    _obs_tap.tap("state.cg_resnorm", res.resnorm)
     Z = jnp.where(mask & jnp.isfinite(res.x), res.x, 0.0)
     return data._replace(Z=Z, n_solve=data.n_solve + 1, cg_iters=res.iters,
                          resnorm=jnp.asarray(res.resnorm, data.resnorm.dtype))
@@ -276,8 +285,10 @@ def gpg_extend(
         count=n + 1,
     )
 
-    L_new, degraded = _chol_append(data.L, k1_col, k1_diag + shift, n,
-                                   deg_thresh)
+    L_new, degraded, pivot2 = _chol_append(data.L, k1_col, k1_diag + shift,
+                                           n, deg_thresh)
+    _obs_tap.tap("state.pivot2", pivot2)
+    _obs_tap.tap("state.degenerate_fallback", degraded, kind="counter")
     data = jax.lax.cond(
         degraded,
         lambda d: d._replace(L=_full_chol(d, noise, jitter),
@@ -449,6 +460,19 @@ class GPGState:
         cap = self.window if self.window else int(capacity)
         self.data = gpg_init(self.spec, int(d), cap, lam=lam, c=c,
                              dtype=dtype)
+        # Monotonic revision counters (repro.obs): ``revision`` bumps on
+        # EVERY data mutation, ``factor_revision`` only when the factor
+        # strips / Cholesky / lam / count change — it is the exact cache
+        # key the serve layer's variance-solver LRU needs (a resolve()
+        # against a new RHS changes Z but not the factorization).
+        self.revision = 0
+        self.factor_revision = 0
+        self._health = None
+        if _obs.enabled():
+            # pre-register so a run that never trips them still exports
+            # the keys (tools/check_telemetry.py self-consistency gate)
+            _obs.REGISTRY.inc("state.extend_calls", 0)
+            _obs.REGISTRY.inc("state.refactor_fallback", 0)
 
     # -- construction ------------------------------------------------------
 
@@ -477,40 +501,86 @@ class GPGState:
 
     # -- streaming updates -------------------------------------------------
 
+    def _bump(self, factors: bool = True) -> None:
+        """Advance the revision counters after a data mutation."""
+        self.revision += 1
+        if factors:
+            self.factor_revision += 1
+
+    def attach_health(self, monitor=None) -> "GPGState":
+        """Attach a ``repro.obs.HealthMonitor`` (ticked on every extend)."""
+        from repro.obs import HealthMonitor
+
+        self._health = HealthMonitor() if monitor is None else monitor
+        return self
+
     def extend(self, x: Array, g: Array, *, solve: bool = True) -> "GPGState":
         """Append one observation; auto-evict (window) / auto-grow (no window)."""
-        if self.window and self.n >= self.window:
-            self.data = gpg_evict(self.spec, self.data, noise=self._noise_eff,
-                                  solve=False)
-        elif self.n >= self.data.capacity:
-            self._grow()
-        self.data = gpg_extend(
-            self.spec, self.data, x, g, noise=self._noise_eff, jitter=self.jitter,
-            deg_thresh=self.deg_thresh, tol=self.tol, maxiter=self.maxiter,
-            solve=solve)
+        obs_on = _obs.enabled()
+        with _obs.span("state.extend"):
+            # the in-jit tap counts degenerate pivots as they happen; the
+            # host-side counter below is the device-synced ground truth
+            # (the auto-evict above never refactors, so any n_refactor
+            # delta across this call IS the degenerate-pivot fallback)
+            before = int(self.data.n_refactor) if obs_on else 0
+            if self.window and self.n >= self.window:
+                self.data = gpg_evict(self.spec, self.data,
+                                      noise=self._noise_eff, solve=False)
+            elif self.n >= self.data.capacity:
+                self._grow()
+            self.data = gpg_extend(
+                self.spec, self.data, x, g, noise=self._noise_eff,
+                jitter=self.jitter, deg_thresh=self.deg_thresh, tol=self.tol,
+                maxiter=self.maxiter, solve=solve)
+            if obs_on:
+                _obs.REGISTRY.inc("state.extend_calls")
+                fallbacks = int(self.data.n_refactor) - before
+                if fallbacks:
+                    _obs.REGISTRY.inc("state.refactor_fallback", fallbacks)
+                _obs.REGISTRY.set_gauge("state.n", self.n)
+                if self._health is not None:
+                    self._health.tick(self)
+        self._bump()
         return self
 
     def evict(self, k: int = 1) -> "GPGState":
         """Drop the k oldest observations (one re-solve at the end)."""
-        for i in range(k):
-            self.data = gpg_evict(self.spec, self.data, noise=self._noise_eff,
-                                  tol=self.tol, maxiter=self.maxiter,
-                                  solve=(i == k - 1))
+        with _obs.span("state.evict", k=k):
+            for i in range(k):
+                self.data = gpg_evict(self.spec, self.data,
+                                      noise=self._noise_eff, tol=self.tol,
+                                      maxiter=self.maxiter,
+                                      solve=(i == k - 1))
+            if _obs.enabled():
+                _obs.REGISTRY.inc("state.evict_calls")
+                _obs.REGISTRY.set_gauge("state.n", self.n)
+        self._bump()
         return self
 
     def refactor(self, lam=None) -> "GPGState":
         """Explicit full refactorization (e.g. after a Lambda refresh)."""
-        self.data = gpg_refactor(self.spec, self.data, lam, noise=self._noise_eff,
-                                 jitter=self.jitter, tol=self.tol,
-                                 maxiter=self.maxiter)
+        with _obs.span("state.refactor"):
+            self.data = gpg_refactor(self.spec, self.data, lam,
+                                     noise=self._noise_eff,
+                                     jitter=self.jitter, tol=self.tol,
+                                     maxiter=self.maxiter)
+            if _obs.enabled():
+                _obs.REGISTRY.inc("state.refactor_calls")
+        self._bump()
         return self
 
     def resolve(self, rhs: Array) -> Array:
         """Solve for a new RHS with cached factors; returns trimmed Z."""
-        full = jnp.zeros_like(self.data.G).at[: rhs.shape[0]].set(
-            jnp.asarray(rhs, self.data.G.dtype))
-        self.data = gpg_resolve(self.spec, self.data, full, noise=self._noise_eff,
-                                tol=self.tol, maxiter=self.maxiter)
+        with _obs.span("state.resolve"):
+            full = jnp.zeros_like(self.data.G).at[: rhs.shape[0]].set(
+                jnp.asarray(rhs, self.data.G.dtype))
+            self.data = gpg_resolve(self.spec, self.data, full,
+                                    noise=self._noise_eff, tol=self.tol,
+                                    maxiter=self.maxiter)
+            if _obs.enabled():
+                _obs.REGISTRY.inc("state.resolve_calls")
+        # factors/Cholesky untouched: the variance-solver LRU stays valid
+        self._bump(factors=False)
         return self.Z
 
     def _grow(self):
@@ -575,11 +645,12 @@ class GPGState:
 
         if self.n < 2:
             raise ValueError("refit() needs at least two observations")
-        res = _fit(self.spec, self.X, self.G, init=self.hypers,
-                   c=self.data.c, mask=mask, steps=steps, lr=lr, **fit_kw)
-        self.noise = float(res.hypers.noise)
-        self.signal = float(res.hypers.signal)
-        self.refactor(lam=res.hypers.lam)
+        with _obs.span("state.refit"):
+            res = _fit(self.spec, self.X, self.G, init=self.hypers,
+                       c=self.data.c, mask=mask, steps=steps, lr=lr, **fit_kw)
+            self.noise = float(res.hypers.noise)
+            self.signal = float(res.hypers.signal)
+            self.refactor(lam=res.hypers.lam)
         return res
 
     # -- views -------------------------------------------------------------

@@ -28,6 +28,10 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+# aliased import: fit_scan's scan outputs are locally named ``trace``
+from repro.obs import injit as _obs_tap
+from repro.obs import trace as _obs
+
 from .mll import make_mll_fn
 from .params import HyperParams
 
@@ -125,6 +129,8 @@ def fit_scan(
     ok = jnp.isfinite(final) & jax.tree_util.tree_reduce(
         lambda a, b: a & b,
         jax.tree_util.tree_map(lambda v: jnp.all(jnp.isfinite(v)), h))
+    _obs_tap.tap("hyper.fit_scan.final_mll", final)
+    _obs_tap.tap("hyper.fit_scan.nonfinite_fallback", ~ok, kind="counter")
     h = jax.tree_util.tree_map(
         lambda a, b: jnp.where(ok, a, b), h, _clip(init))
     return h, jnp.where(ok, final, trace[0] if steps else final)
@@ -181,27 +187,29 @@ def fit(
     stall = 0
     converged = False
     k = 0
-    for k in range(steps):
-        h_new, m, v, val = step_fn(h, m, v, jnp.asarray(k))
-        history.append(float(val))
-        if mll0 is None and bool(jnp.isfinite(val)):
-            mll0 = val            # the first FINITE evidence (at the init
-            # on step 0; improvement stays NaN-free even if the very first
-            # evaluation tripped the bound guards)
-        if not bool(jnp.isfinite(val)):
-            # bound guard tripped anyway — reject the step, keep going from
-            # the best iterate with the optimizer state reset
-            h, m, v = best_h, zeros, zeros
-            stall += 1
-        else:
-            if float(val) > float(best_val) + tol * (1.0 + abs(float(val))):
-                best_h, best_val, stall = h, val, 0
-            else:
+    with _obs.span("hyper.fit", steps=steps):
+        for k in range(steps):
+            h_new, m, v, val = step_fn(h, m, v, jnp.asarray(k))
+            history.append(float(val))
+            if mll0 is None and bool(jnp.isfinite(val)):
+                mll0 = val        # the first FINITE evidence (at the init
+                # on step 0; improvement stays NaN-free even if the very
+                # first evaluation tripped the bound guards)
+            if not bool(jnp.isfinite(val)):
+                # bound guard tripped anyway — reject the step, keep going
+                # from the best iterate with the optimizer state reset
+                h, m, v = best_h, zeros, zeros
                 stall += 1
-            h = h_new
-        if stall >= patience:
-            converged = True
-            break
+            else:
+                if float(val) > float(best_val) + tol * (1.0
+                                                         + abs(float(val))):
+                    best_h, best_val, stall = h, val, 0
+                else:
+                    stall += 1
+                h = h_new
+            if stall >= patience:
+                converged = True
+                break
     # the loop scores iterates BEFORE stepping, so the last Adam iterate is
     # still unevaluated here — score it and adopt it if it won (this is
     # also what makes fit(steps=1) perform a real step, not a no-op)
@@ -211,6 +219,13 @@ def fit(
     if mll0 is None:
         mll0 = best_val           # never finite during the loop: report
         # zero improvement rather than a NaN baseline
+    if _obs.enabled():
+        _obs.REGISTRY.inc("hyper.fit.calls")
+        _obs.REGISTRY.inc("hyper.fit.stop.early" if converged
+                          else "hyper.fit.stop.max_steps")
+        _obs.REGISTRY.set_gauge("hyper.fit.steps", k + 1)
+        _obs.REGISTRY.set_gauge("hyper.fit.improvement",
+                                float(best_val) - float(mll0))
     return FitResult(
         hypers=best_h,
         mll=jnp.asarray(best_val),

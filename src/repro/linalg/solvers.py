@@ -26,8 +26,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build_factors, get_kernel, poly2_quadratic_solve, posterior_hessian
+from repro.obs import trace as _obs
 
 Array = jnp.ndarray
+
+
+def _record(name: str, trace: "SolveTrace") -> "SolveTrace":
+    """Publish linalg.<name>.{solves,iters,relres} for a finished solve."""
+    if _obs.enabled():
+        _obs.REGISTRY.inc(f"linalg.{name}.solves")
+        _obs.REGISTRY.observe(f"linalg.{name}.iters", trace.iters)
+        _obs.REGISTRY.set_gauge(f"linalg.{name}.relres",
+                                float(trace.relres[-1]))
+    return trace
 
 
 class SolveTrace(NamedTuple):
@@ -59,7 +70,7 @@ def make_test_matrix(d: int, *, lam_min: float = 0.5, lam_max: float = 100.0,
 
 
 def _run(step_dir: Callable, A: Array, b: Array, x0: Array, tol: float,
-         max_iters: int) -> SolveTrace:
+         max_iters: int, name: str = "solver") -> SolveTrace:
     """Shared loop: direction from `step_dir`, exact quadratic line search."""
     x = jnp.asarray(x0, jnp.float64)
     g = A @ x - b
@@ -84,7 +95,8 @@ def _run(step_dir: Callable, A: Array, b: Array, x0: Array, tol: float,
         hist_x.append(x)
         hist_g.append(g)
         rel.append(float(jnp.linalg.norm(g)) / g0)
-    return SolveTrace(x=x, relres=np.array(rel), iters=len(rel) - 1)
+    return _record(name,
+                   SolveTrace(x=x, relres=np.array(rel), iters=len(rel) - 1))
 
 
 def cg_solve(A: Array, b: Array, x0: Array, *, tol: float = 1e-5,
@@ -106,7 +118,8 @@ def cg_solve(A: Array, b: Array, x0: Array, *, tol: float = 1e-5,
         rel.append(float(np.sqrt(rs_new)) / g0)
         p = r + (rs_new / rs) * p
         rs = rs_new
-    return SolveTrace(x=x, relres=np.array(rel), iters=len(rel) - 1)
+    return _record("cg",
+                   SolveTrace(x=x, relres=np.array(rel), iters=len(rel) - 1))
 
 
 def solution_probabilistic_solver(
@@ -130,7 +143,7 @@ def solution_probabilistic_solver(
         term2 = lam * (Gt.T @ jnp.linalg.solve(Sj, bb))
         return term1 + term2              # = x_hat - x_m
 
-    return _run(direction, A, b, x0, tol, max_iters)
+    return _run(direction, A, b, x0, tol, max_iters, name="gpx")
 
 
 def hessian_probabilistic_solver(
@@ -154,4 +167,4 @@ def hessian_probabilistic_solver(
         H = H._replace(diag=H.diag + tau)
         return -H.solve(g_t, jitter=jitter)
 
-    return _run(direction, A, b, x0, tol, max_iters)
+    return _run(direction, A, b, x0, tol, max_iters, name="gph")

@@ -1,0 +1,124 @@
+"""Recompile sentinel: count XLA compiles per shape signature.
+
+The serve step's contract (DESIGN.md sec. 9/13) is that extend, evict,
+refit, and precision toggles within one geometry never retrigger XLA
+compilation — only genuinely new shape signatures do.  Pre-obs that was
+folklore; :func:`wrap` makes it an asserted runtime invariant.
+
+Mechanism: the wrapped function gets an inert zero-size marker argument
+closed over per watcher; a host callback placed FIRST in the traced body
+runs once per trace (jit caches by signature, so a cache hit never
+re-traces).  Each trace increments ``compile.<name>.compiles`` and a
+per-signature table; the *n-th* trace of a signature already seen
+(n > 1) is a violation: ``compile.<name>.recompiles`` increments and a
+``{"type": "compile", "nth": n}`` event with n > 1 lands in the JSONL —
+which ``tools/check_telemetry.py`` treats as a hard failure.
+
+Signatures are (treedef, per-leaf (shape, dtype)) — matching jit's own
+cache granularity for weak-typed python scalars is not attempted;
+instead python numbers hash by type only, mirroring jit's
+value-independence for float leaves (a refit that only changes noise
+values keeps the signature AND jit's cache entry: no trace, no event).
+
+When observability is disabled, :func:`wrap` returns a plain
+``jax.jit(fn)`` — bit-identical behavior to pre-obs code.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.obs import trace as _trace
+
+_WATCHES: list["CompileWatch"] = []
+
+
+def _leaf_sig(leaf: Any) -> tuple:
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is not None and dtype is not None:
+        return (tuple(shape), str(dtype))
+    return (type(leaf).__name__, ())
+
+
+def signature(args: tuple, kwargs: dict) -> tuple:
+    """Hashable (treedef, leaf avals) key for an argument bundle."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (treedef, tuple(_leaf_sig(leaf) for leaf in leaves))
+
+
+class CompileWatch:
+    """A jitted callable that records every trace per shape signature."""
+
+    def __init__(self, fn: Callable, name: str, **jit_kwargs: Any):
+        import jax
+
+        self.name = name
+        self.calls = 0
+        self.compiles: dict[tuple, int] = {}
+        self._current: tuple | None = None
+        _trace.REGISTRY.inc(f"compile.{name}.compiles", 0)
+        _trace.REGISTRY.inc(f"compile.{name}.recompiles", 0)
+
+        def shimmed(*args, **kwargs):
+            # Runs at TRACE time only — jit cache hits skip it entirely.
+            self._record_trace()
+            return fn(*args, **kwargs)
+
+        self._jitted = jax.jit(shimmed, **jit_kwargs)
+        _WATCHES.append(self)
+
+    def _record_trace(self) -> None:
+        sig = self._current
+        nth = self.compiles.get(sig, 0) + 1
+        self.compiles[sig] = nth
+        _trace.REGISTRY.inc(f"compile.{self.name}.compiles")
+        if nth > 1:
+            _trace.REGISTRY.inc(f"compile.{self.name}.recompiles")
+        _trace.emit({"type": "compile", "watch": self.name,
+                     "sig": repr(sig), "nth": nth})
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        self._current = signature(args, kwargs)
+        try:
+            return self._jitted(*args, **kwargs)
+        finally:
+            self._current = None
+
+    def n_compiles(self) -> int:
+        return sum(self.compiles.values())
+
+    def n_signatures(self) -> int:
+        return len(self.compiles)
+
+    def violations(self) -> list[tuple]:
+        """Signatures traced more than once (recompile events)."""
+        return [sig for sig, n in self.compiles.items() if n > 1]
+
+    def assert_stable(self) -> None:
+        bad = self.violations()
+        if bad:
+            raise AssertionError(
+                f"compile watch '{self.name}': {len(bad)} signature(s) "
+                f"recompiled — serve-step compile stability violated")
+
+
+def wrap(fn: Callable, *, name: str, **jit_kwargs: Any):
+    """``jax.jit(fn)`` with compile counting when observability is on;
+    a plain ``jax.jit(fn)`` (no wrapper at all) when off."""
+    import jax
+
+    if not _trace.enabled():
+        return jax.jit(fn, **jit_kwargs)
+    return CompileWatch(fn, name, **jit_kwargs)
+
+
+def all_watches() -> list[CompileWatch]:
+    return list(_WATCHES)
+
+
+def assert_all_stable() -> None:
+    for w in _WATCHES:
+        w.assert_stable()

@@ -1,0 +1,140 @@
+"""Numerical-health monitors: cheap, cadence-sampled sanity probes.
+
+Three probes over a live ``GPGState`` / ``GPGData``, each a handful of
+O(N^2 D) host calls (never the dense (ND, ND) objects):
+
+  * :func:`condition_proxy`    — (max/min valid Cholesky diagonal)^2, a
+    free lower bound on cond(K1n) read straight off the cached ``L``.
+    This is the early-warning signal for the degenerate-pivot fallback:
+    nearly-collinear observations drive the smallest pivot toward the
+    ``deg_thresh`` cliff long before the O(N^3) refactor actually fires.
+  * :func:`solve_residual`     — relative residual ||A Z - rhs|| / ||rhs||
+    of the cached representer solve, recomputed through ONE fused Gram
+    MVM against the f32 masters.  A spot check that warm-started CG plus
+    bordered-factor reuse has not silently drifted.
+  * :func:`precision_drift`    — bf16-vs-f32 relative gradient-mean error
+    on a few stored inputs, reusing the PR-5 oracle approach: the same
+    ``posterior_batch`` evaluated at both stream precisions, f32 as the
+    oracle.  Bounds what bf16 storage is currently costing the mean path.
+
+:class:`HealthMonitor` samples all three at a configurable cadence and
+publishes ``health.*`` gauges + one JSONL event per sample — attach one
+with ``GPGState.attach_health`` and every ``extend()`` ticks it.
+
+Imports from ``repro.core`` are deferred to call time so
+``repro.obs.__init__`` (imported BY core.state) stays cycle-free.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs import trace as _trace
+
+
+def condition_proxy(data) -> float:
+    """(max/min valid diag of L)^2 — a lower bound on cond(K1n), free."""
+    import jax.numpy as jnp
+
+    n = int(data.count)
+    if n < 1:
+        return 1.0
+    diag = jnp.diagonal(data.L)[:n]
+    lo = float(jnp.min(diag))
+    hi = float(jnp.max(diag))
+    if lo <= 0.0:
+        return float("inf")
+    return (hi / lo) ** 2
+
+
+def solve_residual(spec, data, *, noise: float = 0.0,
+                   rhs=None) -> float:
+    """Relative residual of the cached representer solve (default rhs: G).
+
+    One fused Gram MVM on the f32 masters — the same operator ``_solve``
+    iterated, applied once to the stored Z.  States solved against a
+    custom RHS (flipped GP-X) should pass it explicitly.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.gram import GramFactors
+    from repro.core.mvm import gram_matvec
+
+    n = int(data.count)
+    if n < 1:
+        return 0.0
+    mask = (jnp.arange(data.capacity) < data.count)[:, None]
+    f = GramFactors(K1e=data.K1e, K2e=data.K2e,
+                    Xt=jnp.where(mask, data.Xt, 0.0), lam=data.lam,
+                    noise=float(noise), c=data.c)
+    b = jnp.where(mask, data.G if rhs is None else rhs, 0.0)
+    r = gram_matvec(f, data.Z, stationary=spec.is_stationary) - b
+    denom = float(jnp.linalg.norm(b))
+    if denom == 0.0:
+        return 0.0
+    return float(jnp.linalg.norm(jnp.where(mask, r, 0.0))) / denom
+
+
+def precision_drift(state, Xq=None, *, n_points: int = 4) -> float:
+    """Relative bf16-vs-f32 gradient-mean error at a few query points.
+
+    The f32 evaluation is the oracle (PR-5 bench machinery, now samplable
+    live); queries default to the first stored inputs — exactly where the
+    posterior is best constrained and cancellation is harshest.
+    """
+    import jax.numpy as jnp
+
+    n = int(state.n)
+    if n < 1:
+        return 0.0
+    if Xq is None:
+        Xq = state.X[: min(n, n_points)]
+    f, Z = state.factors, state.Z
+    from repro.core.query import posterior_batch
+
+    lo = posterior_batch(state.spec, Xq, f, Z, precision="bf16")
+    hi = posterior_batch(state.spec, Xq, f, Z, precision="f32")
+    denom = float(jnp.linalg.norm(hi.grad))
+    if denom == 0.0:
+        return 0.0
+    return float(jnp.linalg.norm(lo.grad - hi.grad)) / denom
+
+
+class HealthMonitor:
+    """Cadence-sampled health probes over a streaming ``GPGState``.
+
+    ``tick(state)`` is called on every mutation (``GPGState`` does this
+    when a monitor is attached); every ``cadence``-th tick runs the probes
+    and publishes ``health.cond_k1n`` / ``health.solve_rel_residual`` /
+    ``health.bf16_drift_rel`` gauges plus one ``{"type": "health"}``
+    JSONL event.  ``drift`` costs two query evaluations — leave it off
+    (default) unless bf16 storage is actually in play.
+    """
+
+    def __init__(self, cadence: int = 16, *, drift: bool = False):
+        self.cadence = max(int(cadence), 1)
+        self.drift = bool(drift)
+        self.ticks = 0
+
+    def tick(self, state) -> Optional[dict]:
+        if not _trace.enabled():
+            return None
+        self.ticks += 1
+        _trace.REGISTRY.inc("health.ticks")
+        if self.ticks % self.cadence != 0 or state.n < 1:
+            return None
+        return self.sample(state)
+
+    def sample(self, state) -> dict:
+        cond = condition_proxy(state.data)
+        res = solve_residual(state.spec, state.data,
+                             noise=state._noise_eff)
+        out = {"cond_k1n": cond, "solve_rel_residual": res, "n": state.n}
+        _trace.REGISTRY.inc("health.samples")
+        _trace.REGISTRY.set_gauge("health.cond_k1n", cond)
+        _trace.REGISTRY.set_gauge("health.solve_rel_residual", res)
+        if self.drift:
+            dr = precision_drift(state)
+            out["bf16_drift_rel"] = dr
+            _trace.REGISTRY.set_gauge("health.bf16_drift_rel", dr)
+        _trace.emit({"type": "health", **out})
+        return out

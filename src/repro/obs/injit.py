@@ -1,0 +1,94 @@
+"""In-jit metric taps: traced scalars -> the host registry.
+
+Traceable code cannot touch :mod:`repro.obs.trace` directly (python side
+effects are trace-time only), and widening result pytrees with metric
+fields would change every caller's jaxpr — the off-mode zero-cost
+guarantee forbids that.  Instead, hot loops *tap*: :func:`tap` stages a
+``jax.debug.callback`` that folds the traced scalar into the registry
+when the compiled program runs.  ``debug.callback`` is the right
+primitive here (not ``io_callback``): its Debug effect is legal inside
+``lax.cond``/``lax.scan`` bodies, which is exactly where the bordered-
+Cholesky degenerate branch and the CG loop live.
+
+The gate is TRACE-time: ``tap`` returns immediately when observability
+is disabled, so nothing enters the jaxpr — disabled-mode programs are
+bit-identical to pre-obs ones (asserted via
+``count_primitive(jaxpr, "debug_callback") == 0`` in tests/test_obs.py).
+Consequence: enable obs BEFORE first compilation; a function compiled
+with taps keeps them (cache), and one compiled without has none.
+
+For callers that prefer to carry metrics out of jit explicitly (e.g.
+a scan that accumulates per-step scalars), ``metrics_of_state`` /
+``fold`` convert a ``GPGData``-style counter block into registry
+updates on the host — the "Metrics pytree" escape hatch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Mapping
+
+from repro.obs import trace as _trace
+
+enabled = _trace.enabled
+
+
+def _fold_one(name: str, kind: str, value) -> None:
+    v = float(value)
+    if kind == "counter":
+        _trace.REGISTRY.inc(name, v)
+    elif kind == "hist":
+        _trace.REGISTRY.observe(name, v)
+    else:
+        _trace.REGISTRY.set_gauge(name, v)
+
+
+def tap(name: str, value, kind: str = "gauge") -> None:
+    """Stage a host fold of traced scalar ``value`` under ``name``.
+
+    ``kind``: ``"gauge"`` (last value), ``"counter"`` (accumulate), or
+    ``"hist"`` (observe into a histogram).  Trace-time no-op when
+    observability is disabled — zero jaxpr footprint.  Works in eager
+    mode too (the callback runs immediately).
+    """
+    if not enabled():
+        return
+    import jax
+
+    jax.debug.callback(partial(_fold_one, name, kind), value)
+
+
+def tap_metrics(metrics: Mapping[str, object], kind: str = "gauge") -> None:
+    """Tap every entry of a {name: traced scalar} mapping."""
+    if not enabled():
+        return
+    for name, value in metrics.items():
+        tap(name, value, kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# Explicit Metrics-pytree escape hatch (host side)
+# ---------------------------------------------------------------------------
+
+#: A Metrics value is just a flat {name: scalar} dict — any pytree of
+#: scalars a traced function chooses to return alongside its result.
+Metrics = dict
+
+
+def metrics_of_state(data) -> Metrics:
+    """Standard metric block extracted from a ``GPGData`` pytree."""
+    return {
+        "state.count": data.count,
+        "state.cg_iters": data.cg_iters,
+        "state.cg_resnorm": data.resnorm,
+        "state.n_refactor": data.n_refactor,
+        "state.n_solve": data.n_solve,
+    }
+
+
+def fold(metrics: Mapping[str, object], kind: str = "gauge") -> None:
+    """Fold a concrete (already device-fetched) Metrics dict into the
+    registry on the host.  Call this OUTSIDE jit, on jit outputs."""
+    if not enabled():
+        return
+    for name, value in metrics.items():
+        _fold_one(name, kind, value)

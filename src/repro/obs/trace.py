@@ -1,0 +1,290 @@
+"""Host-side spans, the metric registry, and the JSONL event sink.
+
+The observability substrate for the whole GP inference stack
+(DESIGN.md sec. 13, docs/observability.md).  Three pieces:
+
+  * ``span(name)``  — nestable context managers with monotonic timing.
+    Nesting builds a dotted path (``span("hmc.phase2")`` inside
+    ``span("hmc.gpg_hmc")`` records ``hmc.gpg_hmc.hmc.phase2``); every
+    completed span observes a ``span.<path>.seconds`` histogram and, when
+    a sink is configured, appends one JSONL event.  With
+    ``REPRO_OBS_PROFILER=on`` each span additionally opens a
+    ``jax.profiler.TraceAnnotation`` so the same names show up inside
+    Perfetto/TensorBoard device traces.
+  * ``Registry``    — a process-global store of counters (monotonic),
+    gauges (last value) and histograms (count/total/min/max).  Cheap
+    enough to be always-on internally; the *wiring call sites* across
+    core/train/hyper are gated on :func:`enabled` so disabled mode costs
+    one predicate per call.
+  * JSONL sink      — ``configure(jsonl=path)`` (or the
+    ``REPRO_OBS_JSONL`` env var) appends events as JSON lines;
+    ``flush()`` writes a full registry snapshot event, and an atexit
+    hook writes a final one, so ``tools/check_telemetry.py`` can gate a
+    run from the log alone.
+
+The master switch is the ``REPRO_OBS`` env var (default OFF) or
+``set_enabled``/``use_obs``.  Everything here is host-side python — when
+disabled, nothing in this module touches a jaxpr, and the in-jit taps
+(``repro.obs.injit``) are trace-time no-ops, so compiled programs are
+bit-identical with observability off (asserted in tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import atexit
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Any, Iterator, Optional
+
+_ON_VALUES = ("1", "on", "true", "yes")
+
+_FORCED: Optional[bool] = None
+_LOCK = threading.RLock()
+_TLS = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# The master switch
+# ---------------------------------------------------------------------------
+
+def enabled() -> bool:
+    """Whether observability is on: ``set_enabled`` override > REPRO_OBS."""
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get("REPRO_OBS", "").strip().lower() in _ON_VALUES
+
+
+def set_enabled(on: Optional[bool]) -> None:
+    """Force observability on/off; ``None`` restores env-var resolution."""
+    global _FORCED
+    _FORCED = None if on is None else bool(on)
+
+
+@contextlib.contextmanager
+def use_obs(on: bool = True) -> Iterator[None]:
+    """Scoped ``set_enabled`` — the test suite's harness."""
+    prev = _FORCED
+    set_enabled(on)
+    try:
+        yield
+    finally:
+        set_enabled(prev)
+
+
+def _profiler_on() -> bool:
+    return os.environ.get("REPRO_OBS_PROFILER", "").strip().lower() \
+        in _ON_VALUES
+
+
+# ---------------------------------------------------------------------------
+# Registry: counters / gauges / histograms
+# ---------------------------------------------------------------------------
+
+class Hist:
+    """count/total/min/max summary of an observed stream of scalars."""
+
+    __slots__ = ("count", "total", "min", "max", "last")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.last = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self.last = v
+
+    def to_dict(self) -> dict:
+        return {"count": self.count, "total": self.total,
+                "min": self.min if self.count else 0.0,
+                "max": self.max if self.count else 0.0, "last": self.last}
+
+
+class Registry:
+    """Process-global counters/gauges/histograms (thread-safe)."""
+
+    def __init__(self):
+        self.counters: dict[str, float] = {}
+        self.gauges: dict[str, float] = {}
+        self.hists: dict[str, Hist] = {}
+
+    def inc(self, name: str, n: float = 1.0) -> None:
+        with _LOCK:
+            self.counters[name] = self.counters.get(name, 0.0) + float(n)
+
+    def set_gauge(self, name: str, v: float) -> None:
+        with _LOCK:
+            self.gauges[name] = float(v)
+
+    def observe(self, name: str, v: float) -> None:
+        with _LOCK:
+            h = self.hists.get(name)
+            if h is None:
+                h = self.hists[name] = Hist()
+            h.observe(v)
+
+    def snapshot(self) -> dict:
+        with _LOCK:
+            return {
+                "counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "hists": {k: h.to_dict() for k, h in self.hists.items()},
+            }
+
+    def delta(self, before: dict) -> dict:
+        """Registry change since a previous :meth:`snapshot` — counter and
+        histogram count/total deltas (zero-delta counters dropped), gauges
+        at their current values.  The per-bench ``telemetry`` sections of
+        ``benchmarks/run.py`` are built from this."""
+        cur = self.snapshot()
+        b_c = before.get("counters", {})
+        b_h = before.get("hists", {})
+        counters = {k: v - b_c.get(k, 0.0) for k, v in cur["counters"].items()
+                    if v - b_c.get(k, 0.0) != 0.0}
+        hists = {}
+        for k, h in cur["hists"].items():
+            dc = h["count"] - b_h.get(k, {}).get("count", 0)
+            if dc:
+                hists[k] = {"count": dc,
+                            "total": h["total"] - b_h.get(k, {}).get(
+                                "total", 0.0),
+                            "last": h["last"]}
+        return {"counters": counters, "gauges": cur["gauges"],
+                "hists": hists}
+
+    def reset(self) -> None:
+        with _LOCK:
+            self.counters.clear()
+            self.gauges.clear()
+            self.hists.clear()
+
+
+REGISTRY = Registry()
+
+
+def counter_value(name: str) -> float:
+    return REGISTRY.counters.get(name, 0.0)
+
+
+def gauge_value(name: str, default: float = 0.0) -> float:
+    return REGISTRY.gauges.get(name, default)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    REGISTRY.reset()
+
+
+# ---------------------------------------------------------------------------
+# JSONL sink
+# ---------------------------------------------------------------------------
+
+_SINK = None            # open file object, or None
+_SINK_PATH: Optional[str] = None
+_SINK_EXPLICIT = False  # configure() beats the env var
+_ATEXIT_ARMED = False
+
+
+def configure(jsonl: Optional[str] = None) -> None:
+    """Point the event sink at ``jsonl`` (append mode); ``None`` closes it
+    and restores ``REPRO_OBS_JSONL`` env resolution."""
+    global _SINK, _SINK_PATH, _SINK_EXPLICIT
+    with _LOCK:
+        if _SINK is not None:
+            _SINK.close()
+            _SINK = None
+        _SINK_PATH = jsonl
+        _SINK_EXPLICIT = jsonl is not None
+
+
+def _get_sink():
+    global _SINK, _SINK_PATH, _ATEXIT_ARMED
+    with _LOCK:
+        if _SINK is not None:
+            return _SINK
+        path = _SINK_PATH if _SINK_EXPLICIT else \
+            os.environ.get("REPRO_OBS_JSONL") or None
+        if not path:
+            return None
+        _SINK = open(path, "a", encoding="utf-8")
+        if not _ATEXIT_ARMED:
+            _ATEXIT_ARMED = True
+            atexit.register(_final_flush)
+        return _SINK
+
+
+def emit(event: dict) -> None:
+    """Append one event to the JSONL sink (no-op when disabled/unsinked)."""
+    if not enabled():
+        return
+    sink = _get_sink()
+    if sink is None:
+        return
+    event.setdefault("t", time.time())
+    with _LOCK:
+        sink.write(json.dumps(event, default=str) + "\n")
+        sink.flush()
+
+
+def flush() -> None:
+    """Write a full registry snapshot event to the sink."""
+    emit({"type": "snapshot", **REGISTRY.snapshot()})
+
+
+def _final_flush() -> None:
+    try:
+        if enabled() and _get_sink() is not None:
+            flush()
+    except Exception:       # noqa: BLE001 — never fail interpreter exit
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Spans
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def span(name: str, **attrs: Any) -> Iterator[Optional[str]]:
+    """A timed, nestable span.  Disabled mode: a bare nullcontext-grade
+    no-op (one ``enabled()`` predicate).  Enabled: monotonic duration into
+    the ``span.<path>.seconds`` histogram + one JSONL event, and a
+    ``jax.profiler.TraceAnnotation`` when ``REPRO_OBS_PROFILER=on`` so
+    the span lands in Perfetto/TensorBoard device traces."""
+    if not enabled():
+        yield None
+        return
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    path = ".".join(stack + [name])
+    stack.append(name)
+    wall = time.time()
+    t0 = time.monotonic()
+    prof = contextlib.nullcontext()
+    if _profiler_on():
+        import jax
+
+        prof = jax.profiler.TraceAnnotation(path)
+    try:
+        with prof:
+            yield path
+    finally:
+        stack.pop()
+        dur = time.monotonic() - t0
+        REGISTRY.observe(f"span.{path}.seconds", dur)
+        ev = {"type": "span", "name": name, "path": path, "t": wall,
+              "dur_s": dur}
+        if attrs:
+            ev["attrs"] = attrs
+        emit(ev)

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.core import GramFactors, get_kernel, infer_optimum, posterior_hessian
 from repro.core.state import gpg_evict, gpg_extend, gpg_init, gpg_refactor
 from repro.hyper import LENGTHSCALE_ONLY, HyperParams, fit_scan
+from repro.obs import injit as _obs_tap
 from repro.utils.flat import flatten_pytree, make_flat_spec, unflatten_pytree
 
 from .gp_directions import auto_lengthscale
@@ -153,6 +154,12 @@ def gp_precond(
 
         idx = jnp.where(~gp_on, 0, jnp.where(refresh_now, 1, 2))
         data = jax.lax.switch(idx, [br_fill, br_refresh, br_incr], data)
+        # in-jit taps: trace-time no-ops when observability is off, so the
+        # training-step jaxpr is unchanged (tests/test_obs.py)
+        _obs_tap.tap("gp_precond.steps", 1, kind="counter")
+        _obs_tap.tap("gp_precond.refresh", refresh_now, kind="counter")
+        _obs_tap.tap("gp_precond.cg_iters", data.cg_iters, kind="hist")
+        _obs_tap.tap("gp_precond.resnorm", data.resnorm)
         m_buf = fallback_beta * state["m"] + g_t
 
         def gp_branch(_):

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import GPGState, cross_grad_matvec
 from repro.hyper import HyperParams
+from repro.obs import trace as _obs
 
 from .hmc import leapfrog
 
@@ -175,21 +176,24 @@ def gpg_hmc(
 
     # Phase 1: plain HMC until budget/2 diverse points; the surrogate is
     # not queried yet, so observations append factor borders without solves
-    while st.n < max(budget // 2, 2) and it < max_train_iters:
-        key, k = jax.random.split(key)
-        x, e_x, _, _ = _hmc_step(energy_fn, grad_true, x, e_x, k, eps, steps,
-                                 mass)
-        it += 1
-        if _min_r(x, st.X, lam) > 1.0:
-            st.extend(x, grad_true(x), solve=False)
-            n_true += 2  # leapfrog used true grads anyway; count the query
+    with _obs.span("hmc.phase1"):
+        while st.n < max(budget // 2, 2) and it < max_train_iters:
+            key, k = jax.random.split(key)
+            x, e_x, _, _ = _hmc_step(energy_fn, grad_true, x, e_x, k, eps,
+                                     steps, mass)
+            it += 1
+            if _min_r(x, st.X, lam) > 1.0:
+                st.extend(x, grad_true(x), solve=False)
+                n_true += 2  # leapfrog used true grads anyway; count the
+                # query
 
-    st.resolve(st.G)                  # first (and only cold) solve
-    if refit_surrogate and st.n >= 2:
-        # fit on the diverse phase-1 set; refit() refactors + re-solves,
-        # and the distance gate below follows the fitted lengthscale
-        st.refit(steps=60)
-        lam = float(st.data.lam)
+        st.resolve(st.G)              # first (and only cold) solve
+        if refit_surrogate and st.n >= 2:
+            # fit on the diverse phase-1 set; refit() refactors +
+            # re-solves, and the distance gate below follows the fitted
+            # lengthscale
+            st.refit(steps=60)
+            lam = float(st.data.lam)
     sur = GradientSurrogate(state=st)
     grad_sur = sur.predictor()
 
@@ -199,19 +203,22 @@ def gpg_hmc(
     # wrong, so that is where the next true gradient is spent. Without this
     # the chain can deadlock (all proposals rejected -> no new locations).
     # Each recondition is ONE bordered extend + warm re-solve on the state.
-    while st.n < budget and it < max_train_iters:
-        key, k = jax.random.split(key)
-        x, e_x, _, x_prop = _hmc_step(energy_fn, grad_sur, x, e_x, k, eps,
-                                      steps, mass)
-        it += 1
-        added = False
-        for cand in (x, x_prop):
-            if st.n < budget and _min_r(cand, st.X, lam) > 1.0:
-                st.extend(cand, grad_true(cand))
-                n_true += 1
-                added = True
-        if added:
-            grad_sur = sur.predictor()
+    n_recond = 0
+    with _obs.span("hmc.phase2"):
+        while st.n < budget and it < max_train_iters:
+            key, k = jax.random.split(key)
+            x, e_x, _, x_prop = _hmc_step(energy_fn, grad_sur, x, e_x, k,
+                                          eps, steps, mass)
+            it += 1
+            added = False
+            for cand in (x, x_prop):
+                if st.n < budget and _min_r(cand, st.X, lam) > 1.0:
+                    st.extend(cand, grad_true(cand))
+                    n_true += 1
+                    added = True
+            if added:
+                n_recond += 1
+                grad_sur = sur.predictor()
 
     # Phase 3: pure surrogate sampling (jitted chain)
     def step(carry, k):
@@ -221,7 +228,15 @@ def gpg_hmc(
         return (x_, e_), (x_, acc)
 
     keys = jax.random.split(key, n_samples)
-    (_, _), (xs, accepts) = jax.lax.scan(step, (x, e_x), keys)
+    with _obs.span("hmc.phase3", n_samples=n_samples):
+        (_, _), (xs, accepts) = jax.lax.scan(step, (x, e_x), keys)
+        accepts = jax.block_until_ready(accepts)
+    if _obs.enabled():
+        _obs.REGISTRY.inc("hmc.true_grad_calls", n_true)
+        _obs.REGISTRY.inc("hmc.reconditions", n_recond)
+        _obs.REGISTRY.set_gauge("hmc.accept_rate",
+                                float(jnp.mean(accepts)))
+        _obs.REGISTRY.set_gauge("hmc.train_iters", it)
     return GPGHMCResult(
         samples=xs,
         accept_rate=float(jnp.mean(accepts)),

@@ -21,6 +21,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import (SHAPES, ModelConfig, batch_specs, build_model,
                           set_activation_rules)
+from repro.obs import compile_watch as _cw
+from repro.obs import cost as _cost
+from repro.obs import trace as _obs
 
 from .sharding import (batch_partition_specs, cache_partition_specs,
                        param_named_shardings, sanitize_spec_tree)
@@ -137,6 +140,9 @@ class GPServeBundle:
     probe: Optional[jnp.ndarray]
     return_std: bool = False
     return_grad_std: bool = False
+    step_fn: Optional[Callable] = None   # the raw (unjitted) step — the
+    # cost model lowers THIS through a fresh jit, never through the
+    # compile-watched entry point (a model lowering is not a serve compile)
     _solver_cache: Any = None        # OrderedDict: revision key -> GramSolver
     # LU factorizations per cached revision are O(cap^4) floats — a
     # long-running server interleaving refit()/extend() with queries would
@@ -146,11 +152,15 @@ class GPServeBundle:
     _SOLVER_CACHE_MAX = 4
 
     def refresh_solver(self):
-        """The variance solver for the CURRENT state revision — factorized
-        once per revision (O(N^2 D + (N^2)^3)) and LRU-cached: every state
-        mutation (extend/evict/refit) replaces the ``GPGData`` pytree, so
-        identity + (noise, signal) is an exact revision key and repeated
-        requests against an unchanged state reuse the LU."""
+        """The variance solver for the CURRENT factor revision — factorized
+        once per revision (O(N^2 D + (N^2)^3)) and LRU-cached.  The key is
+        the state's ``factor_revision`` counter (+ the noise/signal
+        hypers), NOT the identity of the data pytree: a mutation that
+        rebuilds ``GPGData`` without touching the factorization (e.g. a
+        ``resolve()`` against a new RHS) keeps the key and HITS, instead
+        of silently re-factorizing and double-caching an identical LU.
+        ``id(st)`` rides along (with an `is` check; the cached reference
+        pins it) so a swapped-in replacement state can never collide."""
         import collections
 
         from repro.hyper.variance import make_solver
@@ -158,23 +168,32 @@ class GPServeBundle:
         st = self.state
         if self._solver_cache is None:
             self._solver_cache = collections.OrderedDict()
-        # hold the data pytree itself in the key: identity can't be
-        # recycled while cached, so `is`-equality (via id) is exact
-        key = (id(st.data), st.noise, st.signal)
+        key = (id(st), st.factor_revision, st.noise, st.signal)
         hit = self._solver_cache.get(key)
-        if hit is not None and hit[0] is st.data:
+        if hit is not None and hit[0] is st:
             self._solver_cache.move_to_end(key)
+            if _obs.enabled():
+                _obs.REGISTRY.inc("serve.solver_cache.hits")
             return hit[1]
+        if _obs.enabled():
+            _obs.REGISTRY.inc("serve.solver_cache.misses")
         solver = make_solver(st.spec, st.padded_factors, noise=st.noise,
                              signal=st.signal, count=st.data.count)
-        self._solver_cache[key] = (st.data, solver)
+        self._solver_cache[key] = (st, solver)
         while len(self._solver_cache) > self._SOLVER_CACHE_MAX:
             self._solver_cache.popitem(last=False)
+            if _obs.enabled():
+                _obs.REGISTRY.inc("serve.solver_cache.evictions")
         return solver
 
     def query(self, Xq):
         from repro.core.query import PosteriorBatch
 
+        with _obs.span("serve.query"):
+            return self._query(Xq, PosteriorBatch)
+
+    def _query(self, Xq, PosteriorBatch):
+        obs_on = _obs.enabled()
         Xq = jnp.atleast_2d(Xq)
         q, d = Xq.shape
         b = self.microbatch
@@ -201,12 +220,35 @@ class GPServeBundle:
             f = f._replace(c=None)
         Xp = jnp.pad(Xq.astype(f.Xt.dtype), ((0, pad), (0, 0)))
         solver = self.refresh_solver() if want_std else None
+        n_chunks = (q + pad) // b
+        costs = None
+        if obs_on:
+            _obs.REGISTRY.inc("serve.requests")
+            _obs.REGISTRY.inc("serve.points", q)
+            _obs.REGISTRY.set_gauge("serve.queue_depth", n_chunks)
+            if self.step_fn is not None:
+                # modeled bytes/flops of ONE chunk, scaled to the request;
+                # cached per signature so steady-state requests pay nothing
+                first = (f, Z) + ((solver,) if want_std else ()) \
+                    + (Xp[0:b],)
+                if self.probe is not None:
+                    first = first + (self.probe,)
+                costs = _cost.modeled("gp_serve_step", self.step_fn,
+                                      *first, scale=float(n_chunks))
+        import time as _time
+
+        t0 = _time.monotonic()
         chunks = []
         for i in range(0, q + pad, b):
             args = (f, Z) + ((solver,) if want_std else ()) + (Xp[i:i + b],)
             if self.probe is not None:
                 args = args + (self.probe,)
             chunks.append(self.step(*args))
+        if obs_on:
+            jax.block_until_ready(chunks)
+            dt = _time.monotonic() - t0
+            _obs.REGISTRY.observe("serve.request_seconds", dt)
+            _cost.record_measured("gp_serve_step", dt, costs)
         cat = lambda xs: jnp.concatenate(xs)[:q]
         out = PosteriorBatch(
             value=cat([c.value for c in chunks]),
@@ -260,8 +302,18 @@ def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
         state.set_precision(precision)
     fn = make_query_fn(state.spec, with_probe=probe is not None,
                        with_std=return_std, with_grad_std=return_grad_std)
+    if _obs.enabled():
+        # pre-register the serve counters at 0 so a run's final snapshot
+        # exports them even when never tripped (check_telemetry contract)
+        for name in ("serve.solver_cache.hits", "serve.solver_cache.misses",
+                     "serve.solver_cache.evictions", "serve.requests"):
+            _obs.REGISTRY.inc(name, 0)
+    # compile_watch.wrap IS jax.jit when observability is off (bit-
+    # identical serve step); on, every trace is counted per signature and
+    # the "extend/refit never recompile" contract becomes a runtime gate
     return GPServeBundle(
-        state=state, microbatch=int(microbatch), step=jax.jit(fn),
+        state=state, microbatch=int(microbatch),
+        step=_cw.wrap(fn, name="gp_serve_step"), step_fn=fn,
         probe=None if probe is None else jnp.asarray(probe),
         return_std=bool(return_std), return_grad_std=bool(return_grad_std),
     )

@@ -187,6 +187,30 @@ def test_degraded_pivot_falls_back_to_refactor(rng):
     assert bool(jnp.all(jnp.isfinite(st.Z)))
 
 
+def test_degraded_pivot_fallback_counted_by_obs(rng):
+    """The observability counter for the fallback path: healthy extends
+    leave ``state.refactor_fallback`` at 0, the degenerate one increments
+    it EXACTLY once (and the in-jit degenerate tap agrees)."""
+    from repro.obs import trace as obs
+
+    obs.reset()
+    with obs.use_obs(True):
+        X, G = _data(rng, 4)
+        st = GPGState("rbf", D, capacity=6, lam=LAM, noise=NOISE,
+                      deg_thresh=1e-4)
+        for i in range(4):
+            st.extend(X[i], G[i])
+        assert obs.counter_value("state.refactor_fallback") == 0
+        assert obs.counter_value("state.extend_calls") == 4
+        st.extend(X[0] + 1e-9, G[0])
+        assert obs.counter_value("state.refactor_fallback") == 1
+        assert obs.counter_value("state.extend_calls") == 5
+        # the traced-side tap (inside the lax.cond predicate) agrees with
+        # the host-side ground truth
+        assert obs.counter_value("state.degenerate_fallback") == 1
+    obs.reset()
+
+
 # ---------------------------------------------------------------------------
 # batched query serving: factor reuse, zero re-solves
 # ---------------------------------------------------------------------------
