@@ -114,11 +114,13 @@ BENCHES = [
      "DESIGN 2: GP optimizer collective footprint"),
     ("hyper", "benchmarks.bench_hyper",
      "DESIGN 11: structured exact MLL + hyperparameter fit"),
+    ("distributed", "benchmarks.bench_distributed",
+     "DESIGN 14: D-sharded state machine O(N^2)-byte collectives"),
 ]
 
 # Benches whose JSON lands at the repo root for cross-PR tracking; also
 # the set --check regresses against.
-PERF_TRACKED = ("kernels", "iterative", "hyper")
+PERF_TRACKED = ("kernels", "iterative", "hyper", "distributed")
 
 
 def main() -> None:

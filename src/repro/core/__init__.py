@@ -21,6 +21,19 @@ from .mvm import (
     l_op,
     lt_op,
 )
+from .dist_state import (
+    SGPGData,
+    ShardedGPGState,
+    psum_bytes,
+    sgpg_direct_solve,
+    sgpg_evict,
+    sgpg_extend,
+    sgpg_init,
+    sgpg_posterior_mean,
+    sgpg_rebuild,
+    sgpg_refactor,
+    sgpg_resolve,
+)
 from .query import PosteriorBatch, make_query_fn, posterior_batch
 from .solvers import CGResult, cg, gram_cg_solve, gram_cg_solve_multi
 from .state import (
@@ -48,4 +61,7 @@ __all__ = [
     "GPGData", "GPGState", "gpg_evict", "gpg_extend", "gpg_init",
     "gpg_refactor", "gpg_resolve",
     "PosteriorBatch", "make_query_fn", "posterior_batch",
+    "SGPGData", "ShardedGPGState", "psum_bytes", "sgpg_direct_solve",
+    "sgpg_evict", "sgpg_extend", "sgpg_init", "sgpg_posterior_mean",
+    "sgpg_rebuild", "sgpg_refactor", "sgpg_resolve",
 ]

@@ -30,7 +30,7 @@ except AttributeError:  # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from . import backend
-from .gram import GramFactors
+from .gram import FactorBundle, GramFactors
 from .kernels import KernelSpec
 from .mvm import gram_matvec, l_op, lt_op
 
@@ -40,6 +40,28 @@ Array = jnp.ndarray
 # ---------------------------------------------------------------------------
 # Collective-side primitives (called inside shard_map)
 # ---------------------------------------------------------------------------
+
+def ring_psum(x, axis_name: str, size: int):
+    """All-reduce built from ``size - 1`` ppermute ring hops (pytree-safe).
+
+    Numerically a psum (up to summation order), but each hop is an
+    independent point-to-point ``ppermute`` whose result the caller only
+    consumes at the END of its pipeline stage — so XLA's latency-hiding
+    scheduler can overlap the hops with unrelated local compute (the
+    Megatron-style collective/compute overlap; ``core.dist_state.
+    sgpg_posterior_mean_pipelined`` carries the in-flight reduction across
+    a scan step).  Requires a flat one-axis mesh; ``size`` must be the
+    static axis size.
+    """
+    if size == 1:
+        return x
+    perm = [(i, (i + 1) % size) for i in range(size)]
+    acc, cur = x, x
+    for _ in range(size - 1):
+        cur = jax.tree_util.tree_map(
+            lambda t: jax.lax.ppermute(t, axis_name, perm), cur)
+        acc = jax.tree_util.tree_map(jnp.add, acc, cur)
+    return acc
 
 def local_scaled_gram(A: Array, B: Array, lam, axis_names: Sequence[str]) -> Array:
     """psum_d (A*lam) @ B^T for D-sharded A, B: the N^2-byte collective.
@@ -90,15 +112,44 @@ def local_gram_matvec(
     return gram_matvec(f, V, stationary=stationary, gram_xv=M)
 
 
+def local_factor_bundle(
+    spec: KernelSpec, X: Array, G: Array, lam, axis_names: Sequence[str],
+    c: Array | None = None, noise: float = 0.0,
+) -> FactorBundle:
+    """D-sharded ``build_factor_bundle``: ONE fused psum for everything.
+
+    The single ``backend.fused_factor_build`` sweep of the local (N, D_loc)
+    shards emits the gram/norm partials AND the RHS contraction C = G X~^T,
+    so one stacked psum replicates every (N, N) strip a solve needs —
+    where ``local_build_factors`` + ``local_woodbury_solve`` used to issue
+    three separate collectives per solve.  The bundle's ``factors.Xt``
+    stays LOCAL (it only ever feeds local output-assembly streams).
+    """
+    Xt = X if (spec.is_stationary or c is None) else X - c
+    P_, na, nb, C, _ = backend.fused_factor_build(Xt, Xt, G, lam)
+    P_, na, C = jax.lax.psum((P_, na, C), axis_names)
+    if spec.is_stationary:
+        r = jnp.maximum(na[:, None] + na[None, :] - 2.0 * P_, 0.0)
+    else:
+        r = P_
+    f = GramFactors(K1e=spec.k1e(r), K2e=spec.k2e(r), Xt=Xt, lam=lam,
+                    noise=float(noise), c=None if spec.is_stationary else c)
+    return FactorBundle(factors=f, S=P_, C=C)
+
+
 def local_woodbury_solve(
     spec: KernelSpec, f: GramFactors, G: Array, axis_names: Sequence[str],
-    jitter: float = 1e-10,
+    jitter: float = 1e-10, S: Array | None = None, C: Array | None = None,
 ) -> Array:
     """Exact Woodbury solve with D-sharded Xt/G (paper Eq. 6-8, distributed).
 
-    Cross-device traffic: exactly two (N,N) psums (S and the RHS skinny
-    contraction) — the N^2 x N^2 inner system is replicated on every device
-    and solved redundantly (cheaper than sharding an N<=64 solve).
+    Cross-device traffic: two (N,N) psums (S and the RHS skinny
+    contraction) — or ZERO when a prebuilt bundle supplies them: pass
+    ``S``/``C`` from :func:`local_factor_bundle` and the solve reuses the
+    replicated strips (T0 = (K1i G) X~^T re-associates to K1i @ C), so
+    repeated solves against cached factors issue no collectives at all.
+    The N^2 x N^2 inner system is replicated on every device and solved
+    redundantly (cheaper than sharding an N<=64 solve).
     """
     n = f.n
     dtype = G.dtype
@@ -107,9 +158,13 @@ def local_woodbury_solve(
         lam_s = jnp.asarray(f.lam)
         K1 = K1 + (f.noise / lam_s) * jnp.eye(n, dtype=dtype)
     K1i = jnp.linalg.inv(K1 + jitter * jnp.eye(n, dtype=dtype))
-    S = local_scaled_gram(f.Xt, f.Xt, f.lam, axis_names)
-    W0 = backend.kron_precond(K1i, G, 1.0)            # local (N, D_loc)
-    T = local_scaled_gram(W0, f.Xt, 1.0, axis_names)  # skinny + psum
+    if S is None:
+        S = local_scaled_gram(f.Xt, f.Xt, f.lam, axis_names)
+    if C is not None:
+        T = K1i @ C
+    else:
+        W0 = backend.kron_precond(K1i, G, 1.0)            # local (N, D_loc)
+        T = local_scaled_gram(W0, f.Xt, 1.0, axis_names)  # skinny + psum
 
     if spec.is_stationary:
         T = lt_op(T)
@@ -185,10 +240,71 @@ def sharded_gram_matvec(mesh: Mesh, spec: KernelSpec):
     return apply
 
 
-def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
-    """Returns fn(X[global], G[global], lam, c) -> Z[global] (exact solve)."""
+def sharded_factor_bundle(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
+    """Returns fn(X[global], G[global], lam, c) -> FactorBundle.
+
+    The bundle's ``factors.Xt`` comes back D-SHARDED (it only feeds local
+    output streams); K1e/K2e/S/C are replicated.  Pass the result to
+    :func:`sharded_woodbury_solve`'s ``bundle=`` to amortize the ONE
+    build collective across repeated solves.
+    """
     names = tuple(mesh.axis_names)
     dspec = _d_sharding(mesh)
+    rep = P(None, None)
+    out = (rep, rep, dspec, rep, rep)  # K1e, K2e, Xt(local), S, C
+
+    def _arrays(b: FactorBundle):
+        f = b.factors
+        return f.K1e, f.K2e, f.Xt, b.S, b.C
+
+    @partial(
+        _shard_map, mesh=mesh,
+        in_specs=(dspec, dspec, P()),
+        out_specs=out,
+    )
+    def _run_stationary(X, G, lam):
+        return _arrays(local_factor_bundle(spec, X, G, lam, names,
+                                           noise=noise))
+
+    @partial(
+        _shard_map, mesh=mesh,
+        in_specs=(dspec, dspec, P(), dspec),
+        out_specs=out,
+    )
+    def _run_dot(X, G, lam, c):
+        return _arrays(local_factor_bundle(spec, X, G, lam, names, c=c,
+                                           noise=noise))
+
+    def build(X: Array, G: Array, lam=1.0,
+              c: Array | None = None) -> FactorBundle:
+        lam = jnp.asarray(lam)
+        if spec.is_stationary:
+            K1e, K2e, Xt, S, C = _run_stationary(X, G, lam)
+        else:
+            if c is None:
+                c = jnp.zeros((1, X.shape[1]), X.dtype)
+            K1e, K2e, Xt, S, C = _run_dot(X, G, lam, jnp.atleast_2d(c))
+        # Xt comes back pre-centered for dot kernels: c=None by design
+        f = GramFactors(K1e=K1e, K2e=K2e, Xt=Xt, lam=lam,
+                        noise=float(noise), c=None)
+        return FactorBundle(factors=f, S=S, C=C)
+
+    return build
+
+
+def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
+    """Returns fn(X[global], G[global], lam, c, bundle) -> Z[global].
+
+    Without ``bundle``: builds factors and solves in one shard_map (one
+    fused build psum + one RHS psum).  With a ``bundle`` from
+    :func:`sharded_factor_bundle`: the prebuilt local factors and
+    replicated S/C strips are REUSED — the solve issues ZERO collectives,
+    matching the single-device ``woodbury_solve(bundle=...)`` fast path
+    (which this wrapper used to ignore, re-streaming X per solve).
+    """
+    names = tuple(mesh.axis_names)
+    dspec = _d_sharding(mesh)
+    rep = P(None, None)
 
     @partial(
         _shard_map, mesh=mesh,
@@ -196,8 +312,8 @@ def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
         out_specs=dspec,
     )
     def _run_stationary(X, G, lam):
-        f = local_build_factors(spec, X, lam, names, noise=noise)
-        return local_woodbury_solve(spec, f, G, names)
+        b = local_factor_bundle(spec, X, G, lam, names, noise=noise)
+        return local_woodbury_solve(spec, b.factors, G, names, S=b.S, C=b.C)
 
     @partial(
         _shard_map, mesh=mesh,
@@ -205,10 +321,26 @@ def sharded_woodbury_solve(mesh: Mesh, spec: KernelSpec, noise: float = 0.0):
         out_specs=dspec,
     )
     def _run_dot(X, G, lam, c):
-        f = local_build_factors(spec, X, lam, names, c=c, noise=noise)
-        return local_woodbury_solve(spec, f, G, names)
+        b = local_factor_bundle(spec, X, G, lam, names, c=c, noise=noise)
+        return local_woodbury_solve(spec, b.factors, G, names, S=b.S, C=b.C)
 
-    def solve(X: Array, G: Array, lam=1.0, c: Array | None = None) -> Array:
+    @partial(
+        _shard_map, mesh=mesh,
+        in_specs=(rep, rep, dspec, P(), rep, rep, dspec),
+        out_specs=dspec,
+    )
+    def _run_bundle(K1e, K2e, Xt, lam, S, C, G):
+        f = GramFactors(K1e=K1e, K2e=K2e, Xt=Xt, lam=lam,
+                        noise=float(noise), c=None)
+        return local_woodbury_solve(spec, f, G, names, S=S, C=C)
+
+    def solve(X: Array, G: Array, lam=1.0, c: Array | None = None,
+              bundle: FactorBundle | None = None) -> Array:
+        if bundle is not None:
+            f = bundle.factors
+            Xt = f.Xt if f.c is None else f.Xt - f.c  # fold dot centering
+            return _run_bundle(f.K1e, f.K2e, Xt, jnp.asarray(f.lam),
+                               bundle.S, bundle.C, G)
         lam = jnp.asarray(lam)
         if spec.is_stationary:
             return _run_stationary(X, G, lam)

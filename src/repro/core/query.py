@@ -113,9 +113,38 @@ def _mean_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
             f = f._replace(c=None)
         else:
             Xq = Xq.astype(f.Xt.dtype)
+    if not spec.is_stationary and f.c is not None:
+        Xq = Xq - f.c
+        f = f._replace(c=None)
+    strips = _mean_strips(Xq, f, Z)
+    return _mean_assemble(spec, strips, Xq, f, Z)
+
+
+def _mean_strips(Xq: Array, f: GramFactors, Z: Array):
+    """The ONE D-touching reduction of the mean path: a fused factor sweep.
+
+    ``Xq`` must already be in ``f``'s frame (centered for dot kernels,
+    shifted if ``f`` is).  Returns the 5-tuple of (Q, N)/(Q,)/(N,) strips
+    — cross gram P, both norm strips, cross contraction C, row-dot tz.
+    Every element is a plain sum over the D axis, so under D-sharding the
+    local (Q, D_loc) launch's output is psummed ONCE as a stacked tuple
+    and :func:`_mean_assemble` proceeds on the replicated strips
+    (``core/dist_state.py``).
+    """
+    return backend.fused_factor_build(Xq, f.Xt, Z, f.lam, v_scale=f.lam)
+
+
+def _mean_assemble(spec: KernelSpec, strips, Xq: Array, f: GramFactors,
+                   Z: Array):
+    """Strips -> (value, grad): replicated value + the one output stream.
+
+    D-free except the fused grad output stream (``backend.gram_update``)
+    and the stationary ``Xq``-proportional term — both act column-wise on
+    the D axis, so under sharding they run unchanged on the local shard.
+    """
+    lam = f.lam
     if spec.is_stationary:
-        P, naq, nbd, C, tz = backend.fused_factor_build(Xq, f.Xt, Z, lam,
-                                                        v_scale=lam)
+        P, naq, nbd, C, tz = strips
         r = jnp.maximum(naq[:, None] + nbd[None, :] - 2.0 * P, 0.0)
         m = C.T - tz[None, :]
         value = jnp.sum(-2.0 * spec.k1(r) * m, axis=1)
@@ -123,9 +152,7 @@ def _mean_chunk(spec: KernelSpec, Xq: Array, f: GramFactors, Z: Array,
         W = backend.gram_update(spec.k1e(r), -Mt, Z, f.Xt, lam)
         grad = W + (Xq * jnp.sum(Mt, axis=1)[:, None]) * lam
     else:
-        Xqt = Xq if f.c is None else Xq - f.c
-        P, _, _, C, _ = backend.fused_factor_build(Xqt, f.Xt, Z, lam,
-                                                   v_scale=lam)
+        P, _, _, C, _ = strips
         m = C.T
         value = jnp.sum(spec.k1(P) * m, axis=1)
         grad = backend.gram_update(spec.k1e(P), spec.k2e(P) * m, Z, f.Xt, lam)

@@ -13,9 +13,10 @@ the evidence; DESIGN.md sec. 11).
                  Woodbury solver (``GramSolver``), clamped PSD.
 """
 from .fit import (BOUNDS, FULL_MASK, LENGTHSCALE_ONLY, FitResult, fit,
-                  fit_scan)
+                  fit_fn, fit_scan, fit_scan_fn)
 from .mll import (StructureError, assert_no_dense_gram, gram_logdet_quad,
-                  inner_matrix, make_mll_fn, mll, mll_dense)
+                  inner_matrix, make_mll_fn, make_mll_strips_fn, mll,
+                  mll_dense, mll_from_strips, strips_for_mll)
 from .params import HyperParams
 from .variance import (GramSolver, grad_std, grad_var, make_solver,
                        solve_gram, value_std, value_var)
@@ -24,8 +25,9 @@ __all__ = [
     "HyperParams",
     "mll", "mll_dense", "make_mll_fn", "gram_logdet_quad", "inner_matrix",
     "assert_no_dense_gram", "StructureError",
-    "fit", "fit_scan", "FitResult", "BOUNDS", "FULL_MASK",
-    "LENGTHSCALE_ONLY",
+    "mll_from_strips", "strips_for_mll", "make_mll_strips_fn",
+    "fit", "fit_fn", "fit_scan", "fit_scan_fn", "FitResult", "BOUNDS",
+    "FULL_MASK", "LENGTHSCALE_ONLY",
     "GramSolver", "make_solver", "solve_gram",
     "value_var", "value_std", "grad_var", "grad_std",
 ]

@@ -89,25 +89,24 @@ def _adam_update(g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
     return upd, m, v
 
 
-def fit_scan(
-    kernel,
-    X: Array,
-    G: Array,
+def fit_scan_fn(
+    fn,
     init: HyperParams,
     *,
     steps: int = 16,
     lr: float = 0.1,
-    c: Optional[Array] = None,
     mask: Optional[HyperParams] = None,
 ) -> tuple[HyperParams, Array]:
-    """Fixed-step traceable Adam ascent on the MLL; returns (hypers, mll).
+    """Traceable Adam ascent on an arbitrary hypers->mll closure.
 
-    Guards inside the scan: non-finite gradients are zeroed (the step is a
-    no-op instead of a poison), every iterate is clamped into ``BOUNDS``,
-    and the returned hypers are the LAST iterate with a final non-finite
-    fallback to the init.  Safe to call under jit / shard_map.
+    The engine under :func:`fit_scan`; also consumed directly with
+    ``mll.make_mll_strips_fn`` closures, where the (N, N) strips were
+    psummed once and every fit step is collective-free under sharding.
+    Guards: non-finite gradients are zeroed (the step is a no-op instead
+    of a poison), every iterate is clamped into ``BOUNDS``, and the
+    returned hypers are the LAST iterate with a final non-finite fallback
+    to the init.  Safe to call under jit / shard_map.
     """
-    fn = make_mll_fn(kernel, X, G, c=c)
     vg = jax.value_and_grad(fn)
     m0 = FULL_MASK if mask is None else mask
 
@@ -134,6 +133,26 @@ def fit_scan(
     h = jax.tree_util.tree_map(
         lambda a, b: jnp.where(ok, a, b), h, _clip(init))
     return h, jnp.where(ok, final, trace[0] if steps else final)
+
+
+def fit_scan(
+    kernel,
+    X: Array,
+    G: Array,
+    init: HyperParams,
+    *,
+    steps: int = 16,
+    lr: float = 0.1,
+    c: Optional[Array] = None,
+    mask: Optional[HyperParams] = None,
+) -> tuple[HyperParams, Array]:
+    """Fixed-step traceable Adam ascent on the MLL; returns (hypers, mll).
+
+    Thin wrapper: builds the (X, G) evidence closure and runs
+    :func:`fit_scan_fn` (see there for the in-scan guards).
+    """
+    fn = make_mll_fn(kernel, X, G, c=c)
+    return fit_scan_fn(fn, init, steps=steps, lr=lr, mask=mask)
 
 
 def fit(
@@ -165,8 +184,26 @@ def fit(
         # call time when both packages are complete.
         init = HyperParams.from_lam(auto_lengthscale(X), signal=1.0,
                                     noise=1e-8)
-    init = _clip(jax.tree_util.tree_map(jnp.asarray, init))
     fn = make_mll_fn(kernel, X, G, c=c)
+    return fit_fn(fn, init, steps=steps, lr=lr, tol=tol,
+                  patience=patience, mask=mask)
+
+
+def fit_fn(
+    fn,
+    init: HyperParams,
+    *,
+    steps: int = 200,
+    lr: float = 0.08,
+    tol: float = 1e-6,
+    patience: int = 12,
+    mask: Optional[HyperParams] = None,
+) -> FitResult:
+    """Host fit loop over an arbitrary hypers->mll closure (engine of
+    :func:`fit`; also consumed with ``mll.make_mll_strips_fn`` closures by
+    the sharded state's ``refit`` — the strips are psummed once, then the
+    whole fit is replicated host compute with zero collectives)."""
+    init = _clip(jax.tree_util.tree_map(jnp.asarray, init))
     vg = jax.value_and_grad(fn)
     m0 = FULL_MASK if mask is None else mask
 

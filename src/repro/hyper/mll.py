@@ -183,6 +183,110 @@ def make_mll_fn(kernel: str | KernelSpec, X: Array, G: Array, *,
     return fn
 
 
+# ---------------------------------------------------------------------------
+# Strips form: the evidence from (S0, C, GG) alone — the D axis is gone
+# ---------------------------------------------------------------------------
+
+
+def strips_for_mll(X: Array, G: Array, *,
+                   c: Optional[Array] = None) -> tuple[Array, Array, Array]:
+    """The three UNSCALED (N, N) strips the evidence needs: S0, C, GG.
+
+    S0 = X̃ X̃^T (lambda-free!), C = G X̃^T, GG = G G^T.  These are the only
+    objects in the entire MLL + hyper-gradient computation that touch the
+    D axis — under D-sharding they are one fused psum of local partials
+    (``core.dist_state``), and because S0 is stored unscaled, every
+    lambda (lengthscale) dependence re-enters *inside*
+    :func:`mll_from_strips`, keeping ``jax.grad`` w.r.t. the hypers exact
+    with ZERO additional collectives per fit step.
+    """
+    Xt = X if c is None else X - jnp.asarray(c)
+    return Xt @ Xt.T, G @ Xt.T, G @ G.T
+
+
+def mll_from_strips(
+    kernel: str | KernelSpec,
+    S0: Array,
+    C: Array,
+    GG: Array,
+    d: int,
+    hypers: HyperParams,
+    *,
+    count=None,
+) -> Array:
+    """Exact log p(G | X, hypers) from the (N, N) strips — no (N, D) input.
+
+    Identical value (and hyper-gradient) to :func:`mll`: every quantity in
+    ``gram_logdet_quad`` is re-expressed through the strips —
+
+      sw   = (K1i C)^T                       (was lam Xt W^T)
+      quad = sum(K1i * GG)/lam - sum(K1i * (C L(y)^T))   (L = l_op, station.)
+
+    ``d`` is the TRUE input dimension (zero pad columns in X/G contribute
+    zero to the strips, so padded-D callers pass the unpadded d for the
+    per-dimension logdet terms).  ``count`` masks to the first ``count``
+    rows (zero-padded fixed-capacity strips from the incremental state);
+    the identity tail of K1n and the block structure of the inner matrix
+    make the padded algebra exact, as in ``core/state.py``.
+    """
+    spec = _as_spec(kernel)
+    n = S0.shape[0]
+    if count is None:
+        mask = jnp.ones((n,), bool)
+        n_eff = n
+    else:
+        mask = jnp.arange(n) < count
+        n_eff = count
+    mm = mask[:, None] & mask[None, :]
+    lam = jnp.asarray(hypers.lam)
+    d0 = jnp.diagonal(S0)
+    if spec.is_stationary:
+        r = lam * jnp.maximum(d0[:, None] + d0[None, :] - 2.0 * S0, 0.0)
+    else:
+        r = lam * S0
+    K1e = jnp.where(mm, spec.k1e(r), 0.0)
+    K2e = jnp.where(mm, spec.k2e(r), 0.0)
+    noise_eff = jnp.asarray(hypers.noise_eff)
+    K1n = K1e + jnp.diag(jnp.where(mask, noise_eff / lam, 1.0))
+    K1i = jnp.linalg.inv(K1n)
+    S = lam * jnp.where(mm, S0, 0.0)
+    Cm = jnp.where(mm, C, 0.0)
+    GGm = jnp.where(mm, GG, 0.0)
+    f_like = GramFactors(K1e=K1e, K2e=K2e, Xt=S0, lam=lam)
+    A = inner_matrix(spec, f_like, K1i, S)
+
+    _, ld_inner = jnp.linalg.slogdet(A)
+    _, ld_k1n = jnp.linalg.slogdet(K1n)
+    logdet_u = d * ld_k1n + n_eff * d * jnp.log(lam) + ld_inner
+
+    sw = (K1i @ Cm).T                          # lam x~_a . W_b, via C
+    if spec.is_stationary:
+        t = K2e * (sw - jnp.diagonal(sw)[None, :])
+    else:
+        t = K2e * sw
+    y = jnp.linalg.solve(A, t.reshape(-1)).reshape(n, n)
+    yc = l_op(y) if spec.is_stationary else y
+    quad_u = jnp.sum(K1i * GGm) / lam - jnp.sum(K1i * (Cm @ yc.T))
+
+    nd = n_eff * d
+    logdet = nd * hypers.log_signal + logdet_u
+    quad = quad_u / hypers.signal
+    return -0.5 * (quad + logdet + nd * LOG2PI)
+
+
+def make_mll_strips_fn(kernel: str | KernelSpec, S0: Array, C: Array,
+                       GG: Array, d: int, *, count=None):
+    """hypers -> mll closure over fixed strips (replicated fit under
+    sharding: the strips are psummed once, then every fit step is local)."""
+    spec = _as_spec(kernel)
+    S0, C, GG = jnp.asarray(S0), jnp.asarray(C), jnp.asarray(GG)
+
+    def fn(hypers: HyperParams) -> Array:
+        return mll_from_strips(spec, S0, C, GG, d, hypers, count=count)
+
+    return fn
+
+
 def mll_dense(
     kernel: str | KernelSpec,
     X: Array,

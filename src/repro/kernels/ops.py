@@ -17,6 +17,7 @@ bounded instead.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -37,6 +38,31 @@ _LANE = 128
 # buffers and the semaphore/control state of the streaming pipeline.
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 _MAX_PAD_WASTE = 0.125
+
+# How many ways the D axis is split across devices.  Under shard_map the
+# kernels see local (N, D_loc) shapes and this stays 1; under GSPMD (jit +
+# sharding constraints) they see the GLOBAL D, and block sizing must bound
+# pad waste against the per-device slice D/shards — a one-grid-step block
+# equal to global D would be 'shards'-times oversized on every device.
+_DATA_SHARDS = 1
+
+
+def set_data_shards(n: int) -> None:
+    """Declare the D-axis device count for block sizing (GSPMD callers)."""
+    global _DATA_SHARDS
+    _DATA_SHARDS = max(1, int(n))
+
+
+@contextlib.contextmanager
+def use_data_shards(n: int):
+    """Scoped :func:`set_data_shards` (restores the previous value)."""
+    global _DATA_SHARDS
+    prev = _DATA_SHARDS
+    _DATA_SHARDS = max(1, int(n))
+    try:
+        yield
+    finally:
+        _DATA_SHARDS = prev
 
 
 def _interpret_default() -> bool:
@@ -71,6 +97,7 @@ def _pick_block_d(
     resident_bytes: int = 0,
     vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
     max_waste: float = _MAX_PAD_WASTE,
+    shards: int | None = None,
 ) -> int:
     """Choose the D-block size for a lane-streaming kernel.
 
@@ -78,7 +105,16 @@ def _pick_block_d(
     (inputs and outputs together); each is double-buffered. ``resident_bytes``
     is the VMEM taken by whole-array operands (K1e/K2e/scratch) that do not
     scale with the block.
+
+    ``shards`` (default: the :func:`set_data_shards` context) is the D-axis
+    device count under GSPMD: the axis each device actually streams is
+    ceil(d / shards), so both the one-grid-step branch and the pad-waste
+    bound are evaluated against that local slice.  Sizing against the
+    global axis would e.g. hand a D=4096-on-8-devices problem a single
+    4096-wide block — an 8x padded launch on every (N, 512) shard.
     """
+    shards = _DATA_SHARDS if shards is None else max(1, int(shards))
+    d_eff = -(-d // shards)      # per-device slice of the streamed axis
     cap = block_d
     if stream_rows:
         min_stream = _LANE * 8 * stream_rows  # one 128-lane double-buffered block
@@ -90,12 +126,13 @@ def _pick_block_d(
                 f"family — the (N, N) operands must fit on-chip)")
         cap = min(cap, (vmem_budget_bytes - resident_bytes) // (8 * stream_rows))
     cap = max(_LANE, cap // _LANE * _LANE)
-    if d <= cap:
-        # One grid step; round_up(d, LANE) is the minimum possible padding.
-        return max(_LANE, _round_up(d, _LANE))
+    if d_eff <= cap:
+        # One grid step per shard; round_up(d_eff, LANE) is the minimum
+        # possible per-shard padding.
+        return max(_LANE, _round_up(d_eff, _LANE))
     b = cap
     while b >= _LANE:
-        if (_round_up(d, b) - d) / d <= max_waste:
+        if (_round_up(d_eff, b) - d_eff) / d_eff <= max_waste:
             return b
         b -= _LANE
     return _LANE

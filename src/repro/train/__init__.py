@@ -2,11 +2,14 @@ from .loss import lm_loss
 from .sharding import (batch_partition_specs, cache_partition_specs,
                        opt_state_partition_specs, param_named_shardings)
 from .step import TrainState, build_train_step, train_step_fn
-from .serve import build_decode_step, build_prefill_step
+from .serve import (build_decode_step, build_prefill_step,
+                    build_gp_serve_step,
+                    build_sharded_gp_serve_step)
 
 __all__ = [
     "lm_loss", "batch_partition_specs", "cache_partition_specs",
     "opt_state_partition_specs", "param_named_shardings", "TrainState",
     "build_train_step", "train_step_fn", "build_decode_step",
-    "build_prefill_step",
+    "build_prefill_step", "build_gp_serve_step",
+    "build_sharded_gp_serve_step",
 ]

@@ -317,3 +317,92 @@ def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
         probe=None if probe is None else jnp.asarray(probe),
         return_std=bool(return_std), return_grad_std=bool(return_grad_std),
     )
+
+
+# ---------------------------------------------------------------------------
+# D-sharded GP posterior serving (core/dist_state.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedGPServeBundle:
+    """Batched mean-query endpoint over a live ``ShardedGPGState``.
+
+    Each microbatch is ONE fused psum of O(Q N) bytes (independent of D
+    and of device count — DESIGN.md sec. 14); the compiled shard_map
+    program is cached on the state per (microbatch, chunks) and survives
+    extend/evict/refit (count and noise are traced arguments).  Mean-only:
+    probe/std queries need the (N, D)-resident variance solver and stay on
+    the single-device ``GPGState`` path.
+    """
+
+    state: Any                       # ShardedGPGState
+    microbatch: int
+    chunks: Optional[int] = None     # ring-pipelined query path when set
+
+    def query(self, Xq):
+        from repro.core.query import PosteriorBatch
+
+        obs_on = _obs.enabled()
+        st = self.state
+        Xq = jnp.atleast_2d(Xq)
+        q = Xq.shape[0]
+        b = self.microbatch
+        pad = (-q) % b
+        Xp = jnp.pad(jnp.asarray(Xq, jnp.asarray(st.data.base.X).dtype),
+                     ((0, pad), (0, 0)))
+        n_chunks = (q + pad) // b
+        with _obs.span("serve.query.sharded", q=q, shards=st.ndev):
+            costs = None
+            if obs_on:
+                _obs.REGISTRY.inc("serve.requests")
+                _obs.REGISTRY.inc("serve.points", q)
+                _obs.REGISTRY.set_gauge("serve.queue_depth", n_chunks)
+                # roofline entry for the sharded serve step: model ONE
+                # microbatch through a fresh jit of the raw shard_map
+                # program, scaled to the request
+                costs = _cost.modeled(
+                    "gp_serve_step_sharded", st._query_raw(b, self.chunks),
+                    st.data, st._pad_cols(Xp[0:b]), scale=float(n_chunks))
+            import time as _time
+
+            t0 = _time.monotonic()
+            outs = [st.posterior(Xp[i:i + b], chunks=self.chunks)
+                    for i in range(0, q + pad, b)]
+            if obs_on:
+                jax.block_until_ready([o.value for o in outs])
+                dt = _time.monotonic() - t0
+                _obs.REGISTRY.observe("serve.request_seconds", dt)
+                _cost.record_measured("gp_serve_step_sharded", dt, costs)
+        return PosteriorBatch(
+            value=jnp.concatenate([o.value for o in outs])[:q],
+            grad=jnp.concatenate([o.grad for o in outs])[:q],
+        )
+
+
+def build_sharded_gp_serve_step(state, *, microbatch: int | None = None,
+                                chunks: int | None = None,
+                                config=None) -> ShardedGPServeBundle:
+    """Compile a batched mean-query step for a ``ShardedGPGState``.
+
+    The D-sharded analogue of :func:`build_gp_serve_step`: requests are
+    padded to ``microbatch`` multiples and each chunk runs the state's
+    cached shard_map query program (one fused psum of the (Q, N) cross
+    strips per chunk).  ``chunks`` switches to the ring-pipelined
+    (ppermute) variant, overlapping each sub-chunk's reduction with the
+    next one's local factor sweep — flat one-axis meshes only.
+    """
+    from repro.configs.paper_gp import GP_SERVE
+    from repro.core.dist_state import ShardedGPGState
+
+    if not isinstance(state, ShardedGPGState):
+        raise TypeError("build_sharded_gp_serve_step needs a "
+                        "ShardedGPGState (build_gp_serve_step serves the "
+                        "single-device GPGState)")
+    if microbatch is None:
+        microbatch = (config or GP_SERVE).microbatch
+    if _obs.enabled():
+        for name in ("serve.requests",):
+            _obs.REGISTRY.inc(name, 0)
+    return ShardedGPServeBundle(state=state, microbatch=int(microbatch),
+                                chunks=chunks)

@@ -171,3 +171,18 @@ def count_primitive(jaxpr, name: str) -> int:
                 if hasattr(inner, "eqns"):
                     count += count_primitive(inner, name)
     return count
+
+
+def count_psums(closed_jaxpr) -> int:
+    """Number of ``psum`` equations in a traced shard_map program.
+
+    The one-psum-per-phase gate of the D-sharded state machine
+    (``core/dist_state.py``, DESIGN.md sec. 14): a multi-operand
+    ``jax.lax.psum(tuple, ...)`` is ONE fused psum equation, so this count
+    is exactly the number of collective launches a phase issues — extend
+    <= 1, evict == 0, lengthscale refactor == 0, resolve/query == 1.
+    Counts trace-level structure; lax.cond/switch bodies are all counted,
+    so gate the per-phase functions, not a branchy step that traces
+    every alternative.
+    """
+    return count_primitive(closed_jaxpr.jaxpr, "psum")
