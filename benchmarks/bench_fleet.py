@@ -1,0 +1,173 @@
+"""Multi-tenant fleet bench: vmapped state batches vs the per-tenant loop.
+
+Claims gated here (DESIGN.md sec. 15):
+
+  1. CORRECTNESS — a fleet churn trajectory (join / extend past the
+     window / evict / refit / query on heterogeneous tenants) matches the
+     same ops driven per tenant through the plain single-state primitives
+     to <= 1e-5 relative (``fleet_vs_loop_err``).
+  2. LAUNCH EFFICIENCY — the continuous-batching server packs every
+     round of pending tenant ops into ONE vmapped launch per op type:
+     device launches per tenant-op (``ratio_launches_per_op``) stays at
+     ~1/B instead of 1, and the whole churn compiles each op exactly once
+     per signature (``one_compile_per_signature``).
+  3. THROUGHPUT — steady-state extend+query tenant throughput of the
+     batched fleet vs the same jitted ops looped per tenant
+     (``tenants_per_second`` / ``fleet_speedup_x``; machine-dependent,
+     NOT regression-gated).
+
+Emits ``BENCH_fleet.json`` at the repo root (standalone or via
+``benchmarks.run``) so successive PRs can diff the trajectory.
+"""
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_kernel
+from repro.core.fleet import GPFleet, fleet_lane
+from repro.core.state import gpg_evict, gpg_extend, gpg_init
+from repro.obs import compile_watch
+from repro.obs import trace as obs
+from repro.train.serve import GPFleetServer
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D = 8
+WINDOW = 4
+B = 8
+CHURN_STEPS = 10
+
+
+def _churn_err() -> float:
+    """Max relative lane error of a full churn trajectory vs the loop."""
+    spec = get_kernel("rbf")
+    r = np.random.RandomState(0)
+    lams = np.exp(r.uniform(-0.5, 0.5, B))
+    noises = 10.0 ** r.uniform(-7.0, -5.0, B)
+    fl = GPFleet(spec, d=D, window=WINDOW, batch=B)
+    singles = {}
+    for b in range(B):
+        t = f"t{b}"
+        fl.join(t, lam=lams[b], noise=noises[b])
+        singles[t] = gpg_init(spec, D, WINDOW, lam=lams[b])
+    ext = jax.jit(lambda d_, x, g, nz: gpg_extend(spec, d_, x, g, noise=nz))
+    ev = jax.jit(lambda d_, nz: gpg_evict(spec, d_, noise=nz, solve=False))
+    for step in range(CHURN_STEPS):
+        sel = [t for i, t in enumerate(singles) if (step + i) % 3 != 0]
+        xs = {t: (r.randn(D), r.randn(D)) for t in sel}
+        fl.extend(xs)
+        for t, (x, g) in xs.items():
+            nz = jnp.asarray(noises[int(t[1:])])
+            if int(singles[t].count) >= WINDOW:
+                singles[t] = ev(singles[t], nz)
+            singles[t] = ext(singles[t], jnp.asarray(x), jnp.asarray(g), nz)
+    err = 0.0
+    for t, s in singles.items():
+        lane = fleet_lane(fl.fleet, fl.slot_of(t))
+        sc = max(1.0, float(jnp.max(jnp.abs(s.Z))))
+        err = max(err, float(jnp.max(jnp.abs(lane.Z - s.Z))) / sc)
+        assert int(lane.count) == int(s.count)
+    return err
+
+
+def _launches_per_op() -> dict:
+    """Serve a request storm through the continuous-batching loop and
+    count device launches + compiles per tenant-op."""
+    r = np.random.RandomState(1)
+    with obs.use_obs(True):
+        before = obs.snapshot()
+        marks = {w.name for w in compile_watch.all_watches()}
+        srv = GPFleetServer(kernel="rbf", d=D)
+        for b in range(B):
+            srv.connect(f"t{b}", lam=0.5 + 0.1 * b, noise=1e-6)
+        n_ops = 0
+        for step in range(CHURN_STEPS):
+            for b in range(B):
+                t = f"t{b}"
+                srv.submit(t, "extend", (r.randn(D), r.randn(D)))
+                n_ops += 1
+                if step % 2 == 0:
+                    srv.submit(t, "query", r.randn(4, D))
+                    n_ops += 1
+        srv.submit("t0", "refit")
+        n_ops += 1
+        srv.drain()
+        launches = obs.REGISTRY.delta(before)["counters"].get(
+            "fleet.launches", 0.0)
+        watches = [w for w in compile_watch.all_watches()
+                   if w.name not in marks]
+        stable = all(not w.violations() for w in watches)
+        compiles = int(sum(w.n_compiles() for w in watches))
+        sigs = int(sum(w.n_signatures() for w in watches))
+    return {
+        "tenant_ops": n_ops,
+        "launches": int(launches),
+        "ratio_launches_per_op": round(launches / n_ops, 4),
+        "compiles": compiles,
+        "signatures": sigs,
+        "one_compile_per_signature": bool(stable and compiles == sigs),
+    }
+
+
+def _throughput() -> dict:
+    """Steady-state extend throughput: one vmapped launch for B tenants
+    vs the same jitted single-tenant op looped B times."""
+    spec = get_kernel("rbf")
+    r = np.random.RandomState(2)
+    fl = GPFleet(spec, d=D, window=WINDOW, batch=B)
+    for b in range(B):
+        fl.join(f"t{b}", lam=1.0, noise=1e-6)
+    obs_batch = {f"t{b}": (r.randn(D), r.randn(D)) for b in range(B)}
+    fl.extend(obs_batch)                      # warm: compile + window fill
+    for _ in range(WINDOW):
+        fl.extend(obs_batch)
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fl.extend(obs_batch)
+    jax.block_until_ready(fl.fleet.data.Z)
+    dt_fleet = (time.perf_counter() - t0) / reps
+
+    single = gpg_init(spec, D, WINDOW, lam=1.0)
+    ext = jax.jit(lambda d_, x, g: gpg_extend(spec, d_, x, g, noise=1e-6))
+    ev = jax.jit(lambda d_: gpg_evict(spec, d_, noise=1e-6, solve=False))
+    for _ in range(WINDOW + 1):               # warm + fill
+        single = ext(ev(single) if int(single.count) >= WINDOW else single,
+                     jnp.zeros(D), jnp.ones(D))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for b in range(B):                    # B sequential launches
+            single = ext(ev(single), jnp.zeros(D), jnp.ones(D))
+    jax.block_until_ready(single.Z)
+    dt_loop = (time.perf_counter() - t0) / reps
+    return {
+        "tenants_per_second": round(B / dt_fleet, 1),
+        "loop_tenants_per_second": round(B / dt_loop, 1),
+        "fleet_speedup_x": round(dt_loop / dt_fleet, 2),
+        "fleet_step_ms": round(dt_fleet * 1e3, 3),
+    }
+
+
+def run() -> dict:
+    out = {"d": D, "window": WINDOW, "tenants": B}
+    out["fleet_vs_loop_err"] = _churn_err()
+    out.update(_launches_per_op())
+    out.update(_throughput())
+    out["claim_holds"] = bool(
+        out["fleet_vs_loop_err"] <= 1e-5
+        and out["one_compile_per_signature"]
+        and out["ratio_launches_per_op"] < 1.0)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    print(json.dumps(res, indent=1))
+    with open(os.path.join(_ROOT, "BENCH_fleet.json"), "w") as f:
+        json.dump(res, f, indent=1)

@@ -116,11 +116,13 @@ BENCHES = [
      "DESIGN 11: structured exact MLL + hyperparameter fit"),
     ("distributed", "benchmarks.bench_distributed",
      "DESIGN 14: D-sharded state machine O(N^2)-byte collectives"),
+    ("fleet", "benchmarks.bench_fleet",
+     "DESIGN 15: multi-tenant vmapped fleet + continuous batching"),
 ]
 
 # Benches whose JSON lands at the repo root for cross-PR tracking; also
 # the set --check regresses against.
-PERF_TRACKED = ("kernels", "iterative", "hyper", "distributed")
+PERF_TRACKED = ("kernels", "iterative", "hyper", "distributed", "fleet")
 
 
 def main() -> None:

@@ -46,6 +46,30 @@ class GPServeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class GPFleetConfig:
+    """Knobs of the multi-tenant fleet serving path (core/fleet.py +
+    train/serve.py::GPFleetServer).
+
+    ``batch`` is the INITIAL lane count — the fleet doubles on demand, so
+    signatures stay O(log tenants).  ``window`` is the per-tenant sliding
+    window (= state capacity; the paper serves from the last few gradient
+    observations).  ``q_bucket`` pads query requests up to power-of-two
+    buckets starting here, bounding compile signatures of the batched
+    query step.  ``idle_ttl`` server steps without any request evicts a
+    tenant (its lane is zeroed and reusable); ``solver_cache_max`` bounds
+    the per-tenant variance-solver LRU (each entry is an O(cap^4) LU).
+    """
+
+    batch: int = 8
+    window: int = 4
+    q_bucket: int = 16
+    idle_ttl: int = 256
+    solver_cache_max: int = 8
+    refit_steps: int = 16
+    refit_lr: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
 class HMCConfig:
     d: int = 100
     n_samples: int = 2000
@@ -68,3 +92,4 @@ LINALG = LinalgConfig()
 ROSEN = RosenbrockConfig()
 HMC = HMCConfig()
 GP_SERVE = GPServeConfig()
+GP_FLEET = GPFleetConfig()

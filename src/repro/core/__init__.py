@@ -34,6 +34,22 @@ from .dist_state import (
     sgpg_refactor,
     sgpg_resolve,
 )
+from .fleet import (
+    FleetGPGData,
+    GPFleet,
+    fleet_evict,
+    fleet_extend,
+    fleet_init,
+    fleet_join,
+    fleet_lane,
+    fleet_leave,
+    fleet_mll,
+    fleet_posterior,
+    fleet_refactor,
+    fleet_refit,
+    fleet_resolve,
+    fleet_total_mll,
+)
 from .query import PosteriorBatch, make_query_fn, posterior_batch
 from .solvers import CGResult, cg, gram_cg_solve, gram_cg_solve_multi
 from .state import (
@@ -60,6 +76,10 @@ __all__ = [
     "poly2_quadratic_solve", "woodbury_solve",
     "GPGData", "GPGState", "gpg_evict", "gpg_extend", "gpg_init",
     "gpg_refactor", "gpg_resolve",
+    "FleetGPGData", "GPFleet", "fleet_evict", "fleet_extend", "fleet_init",
+    "fleet_join", "fleet_lane", "fleet_leave", "fleet_mll",
+    "fleet_posterior", "fleet_refactor", "fleet_refit", "fleet_resolve",
+    "fleet_total_mll",
     "PosteriorBatch", "make_query_fn", "posterior_batch",
     "SGPGData", "ShardedGPGState", "psum_bytes", "sgpg_direct_solve",
     "sgpg_evict", "sgpg_extend", "sgpg_init", "sgpg_posterior_mean",

@@ -100,12 +100,27 @@ def _row_mask(data: GPGData) -> Array:
     return jnp.arange(data.capacity) < data.count
 
 
-def _diag_shift(lam: Array, noise: float, jitter: float):
+def _static_noise(noise) -> bool:
+    """True when ``noise`` is a host python number (the single-state path).
+
+    The fleet path (``core/fleet.py``) vmaps these functions with the
+    per-tenant noise riding as a TRACED scalar so one compiled program
+    serves heterogeneous tenants; every host-side branch on noise below
+    is gated on this predicate (a tracer always takes the traced form).
+    """
+    return isinstance(noise, (int, float))
+
+
+def _diag_shift(lam: Array, noise, jitter: float):
     """(noise/lam + jitter) — the scalar added to K1e's valid diagonal."""
     lam = jnp.asarray(lam)
-    if noise and lam.ndim != 0:
-        raise ValueError("noise > 0 requires scalar Lambda (as in woodbury)")
-    return (noise / lam if noise else 0.0) + jitter
+    if _static_noise(noise):
+        if noise and lam.ndim != 0:
+            raise ValueError(
+                "noise > 0 requires scalar Lambda (as in woodbury)")
+        return (noise / lam if noise else 0.0) + jitter
+    # traced per-tenant noise (fleet): scalar Lambda by construction
+    return noise / lam + jitter
 
 
 def gpg_init(
@@ -228,8 +243,15 @@ def _solve(spec: KernelSpec, data: GPGData, rhs: Array, z0: Array, *,
     mask = _row_mask(data)[:, None]
     f = GramFactors(K1e=data.K1e, K2e=data.K2e,
                     Xt=jnp.where(mask, data.Xt, 0.0), lam=data.lam,
-                    noise=float(noise), c=data.c)
-    mv = lambda V: gram_matvec(f, V, stationary=spec.is_stationary)
+                    noise=float(noise) if _static_noise(noise) else 0.0,
+                    c=data.c)
+    if _static_noise(noise):
+        mv = lambda V: gram_matvec(f, V, stationary=spec.is_stationary)
+    else:
+        # traced noise rides OUTSIDE the factors (the backend kernels take
+        # static noise); one extra fused axpy per MVM, identical math
+        mv = lambda V: gram_matvec(
+            f, V, stationary=spec.is_stationary) + noise * V
     M_inv = lambda V: cho_solve((data.L, True), V) / data.lam
     res = cg(mv, jnp.where(mask, rhs, 0.0), x0=jnp.where(mask, z0, 0.0),
              tol=tol, maxiter=maxiter, M_inv=M_inv)

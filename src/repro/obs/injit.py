@@ -33,7 +33,23 @@ enabled = _trace.enabled
 
 
 def _fold_one(name: str, kind: str, value) -> None:
-    v = float(value)
+    # Under vmap (the fleet's batched state machine) the callback receives
+    # the whole (B,) lane vector at once: counters fold the lane SUM (the
+    # fleet-wide total), gauges the lane mean, and hists observe per lane
+    # (bounded: a fleet batch is a few dozen lanes, not a data axis).
+    import numpy as np
+
+    v = np.asarray(value)
+    if v.ndim:
+        if kind == "counter":
+            _trace.REGISTRY.inc(name, float(v.sum()))
+        elif kind == "hist":
+            for x in v.ravel():
+                _trace.REGISTRY.observe(name, float(x))
+        else:
+            _trace.REGISTRY.set_gauge(name, float(v.mean()))
+        return
+    v = float(v)
     if kind == "counter":
         _trace.REGISTRY.inc(name, v)
     elif kind == "hist":

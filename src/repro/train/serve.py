@@ -320,6 +320,243 @@ def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant continuous batching (core/fleet.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """One pending tenant op.  ``result`` is set when the request has been
+    packed into a launch (``done`` flips true); queries resolve to a
+    ``PosteriorBatch``, refits to the fitted mll, lifecycle ops to None."""
+
+    tenant: Any
+    op: str                 # 'extend' | 'evict' | 'resolve' | 'refit' | 'query'
+    payload: Any = None
+    done: bool = False
+    result: Any = None
+
+
+class GPFleetServer:
+    """Continuous-batching front end over a :class:`~repro.core.GPFleet`.
+
+    The vLLM-style serving loop for GP posteriors: tenants ``connect`` and
+    ``submit`` ops asynchronously; each ``step()`` packs the queue's
+    head-of-line requests (at most ONE per tenant, preserving per-tenant
+    submission order) into per-op groups and fires ONE vmapped launch per
+    op type present — so a step serving 50 tenants costs the same number
+    of launches as a step serving one.  Query payloads are padded into
+    power-of-two Q buckets (>= ``config.q_bucket``), so the set of
+    compiled signatures is bounded by O(log max_Q) x ops, not by traffic.
+
+    Tenants idle for ``config.idle_ttl`` consecutive steps are evicted
+    (lane zeroed and returned to the free list — ``fleet.idle_evictions``
+    counts them); a later ``connect`` under the same id starts fresh.
+
+    Posterior std queries (``op='query'`` with ``payload=(Xq, True)``)
+    need the per-tenant variance ``GramSolver`` — an O(cap^4) LU that does
+    not batch across tenants — so they are served per tenant through an
+    LRU keyed on ``(slot, factor_revision, noise, signal)``: extend/refit
+    bump the tenant's factor revision and miss; resolve() and pure queries
+    keep it and hit (same contract as ``GPServeBundle.refresh_solver``).
+    """
+
+    def __init__(self, fleet=None, *, kernel="rbf", d=None, config=None,
+                 **fleet_kwargs):
+        import collections
+
+        from repro.configs.paper_gp import GP_FLEET
+        from repro.core.fleet import GPFleet
+
+        self.config = config or GP_FLEET
+        if fleet is None:
+            fleet = GPFleet(kernel, d=d, batch=self.config.batch,
+                            window=self.config.window, **fleet_kwargs)
+        self.fleet = fleet
+        self._queue: collections.deque = collections.deque()
+        # adopt tenants already joined on a caller-supplied fleet
+        self._idle: dict = {t: 0 for t in fleet.tenants}
+        self._solvers: Any = collections.OrderedDict()
+        self.steps = 0
+        if _obs.enabled():
+            for name in ("fleet.serve.requests", "fleet.serve.steps",
+                         "fleet.idle_evictions",
+                         "fleet.solver_cache.hits",
+                         "fleet.solver_cache.misses"):
+                _obs.REGISTRY.inc(name, 0)
+
+    # -- tenant lifecycle --------------------------------------------------
+
+    def connect(self, tenant, **hypers) -> None:
+        self.fleet.join(tenant, **hypers)
+        self._idle[tenant] = 0
+
+    def disconnect(self, tenant) -> None:
+        self._queue = type(self._queue)(
+            r for r in self._queue if r.tenant != tenant)
+        self._idle.pop(tenant, None)
+        slot = self.fleet.slot_of(tenant)
+        self._solvers = type(self._solvers)(
+            (k, v) for k, v in self._solvers.items() if k[0] != slot)
+        self.fleet.leave(tenant)
+
+    @property
+    def tenants(self):
+        return self.fleet.tenants
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, tenant, op: str, payload=None) -> FleetRequest:
+        """Enqueue an op; returns the request (poll ``.done``/``.result``
+        after ``step``/``drain``)."""
+        if tenant not in self._idle:
+            raise KeyError(f"tenant {tenant!r} is not connected")
+        if op not in ("extend", "evict", "resolve", "refit", "query"):
+            raise ValueError(f"unknown fleet op {op!r}")
+        req = FleetRequest(tenant=tenant, op=op, payload=payload)
+        self._queue.append(req)
+        if _obs.enabled():
+            _obs.REGISTRY.inc("fleet.serve.requests")
+        return req
+
+    # -- the packing loop --------------------------------------------------
+
+    def _take_head_of_line(self) -> list:
+        """Pop at most one pending request per tenant, FIFO order — a
+        tenant's ops are never reordered and never co-batched within one
+        step (extend-then-query in one step would race)."""
+        taken, skipped, busy = [], [], set()
+        while self._queue:
+            r = self._queue.popleft()
+            if r.tenant in busy:
+                skipped.append(r)
+            else:
+                busy.add(r.tenant)
+                taken.append(r)
+        self._queue.extend(skipped)
+        return taken
+
+    def step(self) -> list:
+        """Pack + launch one round; returns the completed requests."""
+        cfg = self.config
+        self.steps += 1
+        batch = self._take_head_of_line()
+        with _obs.span("fleet.serve.step", requests=len(batch),
+                       queued=len(self._queue)):
+            by_op: dict = {}
+            for r in batch:
+                by_op.setdefault(r.op, []).append(r)
+            # lifecycle before queries: a step's queries see that step's
+            # extends only for OTHER tenants (self ops are serialized by
+            # head-of-line), so order here is launch-count, not semantics
+            fl = self.fleet
+            if "extend" in by_op:
+                fl.extend({r.tenant: r.payload for r in by_op["extend"]})
+            if "evict" in by_op:
+                fl.evict([r.tenant for r in by_op["evict"]])
+            if "resolve" in by_op:
+                fl.resolve({r.tenant: r.payload for r in by_op["resolve"]})
+            if "refit" in by_op:
+                mlls = fl.refit([r.tenant for r in by_op["refit"]],
+                                steps=cfg.refit_steps, lr=cfg.refit_lr)
+                for r in by_op["refit"]:
+                    r.result = mlls.get(r.tenant)
+            if "query" in by_op:
+                self._serve_queries(by_op["query"])
+            for r in batch:
+                r.done = True
+            # idle bookkeeping + TTL eviction
+            active = {r.tenant for r in batch}
+            for t in list(self._idle):
+                self._idle[t] = 0 if t in active else self._idle[t] + 1
+                if self._idle[t] > cfg.idle_ttl:
+                    self.disconnect(t)
+                    if _obs.enabled():
+                        _obs.REGISTRY.inc("fleet.idle_evictions")
+            if _obs.enabled():
+                _obs.REGISTRY.inc("fleet.serve.steps")
+                _obs.REGISTRY.set_gauge("fleet.serve.queue_depth",
+                                        len(self._queue))
+        return batch
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Step until the queue is empty; returns the number of steps."""
+        n = 0
+        while self._queue and n < max_steps:
+            self.step()
+            n += 1
+        return n
+
+    # -- queries -----------------------------------------------------------
+
+    def _serve_queries(self, reqs: list) -> None:
+        mean_reqs, std_reqs = [], []
+        for r in reqs:
+            xq, want_std = (r.payload if isinstance(r.payload, tuple)
+                            else (r.payload, False))
+            (std_reqs if want_std else mean_reqs).append((r, xq))
+        if mean_reqs:
+            qmax = max(jnp.atleast_2d(jnp.asarray(x)).shape[0]
+                       for _, x in mean_reqs)
+            bucket = max(self.config.q_bucket,
+                         1 << (max(qmax, 1) - 1).bit_length())
+            out = self.fleet.posterior(
+                {r.tenant: x for r, x in mean_reqs}, q_pad=bucket)
+            for r, _ in mean_reqs:
+                r.result = out[r.tenant]
+        for r, xq in std_reqs:
+            r.result = self.query_std(r.tenant, xq)
+
+    def query_std(self, tenant, Xq):
+        """Per-tenant posterior mean + std (the non-batched slow path).
+
+        Served from the tenant's lane view through the factor-revision
+        solver LRU; like the PR 7 sharded path, variance queries are NOT
+        fleet-batched (the GramSolver is a per-tenant O(cap^4) LU with no
+        batched factorization yet — see DESIGN.md sec. 15).
+        """
+        from repro.core.gram import GramFactors
+        from repro.core.query import make_query_fn
+        from repro.hyper.variance import make_solver
+
+        fl = self.fleet
+        slot = fl.slot_of(tenant)
+        lane = fl.state_view(tenant)
+        hyp = fl.hypers_of(tenant)
+        key = (slot, fl.factor_revision[slot], hyp["noise"], hyp["signal"])
+        solver = self._solvers.get(key)
+        if solver is None:
+            if _obs.enabled():
+                _obs.REGISTRY.inc("fleet.solver_cache.misses")
+            f = GramFactors(K1e=lane.K1e, K2e=lane.K2e, Xt=lane.Xt,
+                            lam=lane.lam, noise=0.0, c=None)
+            solver = make_solver(fl.spec, f, noise=hyp["noise"],
+                                 signal=hyp["signal"], count=lane.count)
+            self._solvers[key] = solver
+            while len(self._solvers) > self.config.solver_cache_max:
+                self._solvers.popitem(last=False)
+        else:
+            self._solvers.move_to_end(key)
+            if _obs.enabled():
+                _obs.REGISTRY.inc("fleet.solver_cache.hits")
+        f = GramFactors(K1e=lane.K1e, K2e=lane.K2e, Xt=lane.Xt,
+                        lam=lane.lam, noise=0.0, c=None)
+        qfn = _cw.wrap(make_query_fn(fl.spec, with_std=True),
+                       name="fleet_query_std") if not hasattr(
+                           self, "_std_step") else self._std_step
+        self._std_step = qfn
+        Xq = jnp.atleast_2d(jnp.asarray(Xq, lane.X.dtype))
+        q = Xq.shape[0]
+        bucket = max(self.config.q_bucket, 1 << (max(q, 1) - 1).bit_length())
+        Xp = jnp.pad(Xq, ((0, bucket - q), (0, 0)))
+        out = qfn(f, lane.Z, solver, Xp)
+        from repro.core.query import PosteriorBatch
+
+        return PosteriorBatch(value=out.value[:q], grad=out.grad[:q],
+                              std=out.std[:q])
+
+
+# ---------------------------------------------------------------------------
 # D-sharded GP posterior serving (core/dist_state.py)
 # ---------------------------------------------------------------------------
 

@@ -1,12 +1,59 @@
-"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
-must see 1 device (assignment contract); multi-device tests spawn
-subprocesses or are guarded by device-count skips."""
-import jax
-import pytest
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+(assignment contract); multi-device tests spawn subprocesses or are
+guarded by device-count skips.  ``JAX_PLATFORMS`` defaults to cpu so the
+suite is deterministic on accelerator-carrying hosts (set the env var
+explicitly to test another backend).
+
+Seed discipline: every randomized test draws through :func:`arr` (or its
+``arr`` fixture) from an explicit integer seed, so any failure reproduces
+from the printed seed alone — no ambient RNG state.  The hypothesis
+profiles are registered here and selected via ``HYPOTHESIS_PROFILE``
+(CI's fleet fuzz job runs ``fleet-ci``: ~200 examples, no deadline,
+``print_blob`` so the failing example is replayable from the log).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", True)
+
+try:  # profiles are harmless when hypothesis is absent (tests importorskip)
+    from hypothesis import settings
+
+    settings.register_profile("dev", max_examples=25, deadline=None)
+    settings.register_profile("fleet-ci", max_examples=200, deadline=None,
+                              print_blob=True)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:  # pragma: no cover - image without hypothesis
+    pass
+
+
+def arr(seed: int, shape, scale: float = 1.0):
+    """Deterministic gaussian array: the one seeded entry point for test
+    data (``np.random.RandomState`` is stable across numpy versions)."""
+    import jax.numpy as jnp
+
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape) * scale)
+
+
+@pytest.fixture(scope="session", name="arr")
+def arr_fixture():
+    return arr
 
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def base_seed():
+    """The suite-wide fuzz seed — override with REPRO_TEST_SEED to replay
+    a CI failure locally (the failing test prints the derived seed)."""
+    return int(os.environ.get("REPRO_TEST_SEED", "0"))

@@ -1,0 +1,260 @@
+"""Seed-driven state-machine fuzz core (NOT a test module).
+
+One integer seed deterministically generates a random op interleaving
+(extend / evict / resolve / refit / query) and drives it through the
+incremental machinery, checking after EVERY op against an oracle:
+
+  * :func:`check_single_trajectory` — the single-tenant state
+    (``core/state.py``) against a dense from-scratch solve of the full
+    (ND, ND) system (``core/woodbury.dense_solve``) and a from-scratch
+    factor rebuild for the posterior query (<= 1e-5).
+  * :func:`check_fleet_vs_loop` — the vmapped fleet trajectory
+    (``core/fleet.py``) against the same ops driven per tenant through
+    the plain (un-vmapped) functional primitives (<= 1e-5; in practice
+    ~1e-12 under x64 — vmap lowers to the same scalar programs).
+
+Shared by the always-on deterministic tests (tests/test_fleet.py, a few
+pinned seeds) and the hypothesis fuzz front end
+(tests/test_property_invariants.py, hundreds of drawn seeds in CI's
+``fleet-ci`` profile).  Any failure message carries the generating seed,
+so ``REPRO_TEST_SEED=<seed>`` (or the printed hypothesis blob) replays
+it exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_factors, dense_solve, get_kernel, make_query_fn,
+                        woodbury_solve)
+from repro.core.fleet import (fleet_evict, fleet_extend, fleet_init,
+                              fleet_lane, fleet_posterior, fleet_refit)
+from repro.core.gram import GramFactors
+from repro.core.state import (gpg_evict, gpg_extend, gpg_init, gpg_refactor,
+                              gpg_resolve)
+from repro.hyper import HyperParams
+from repro.hyper.fit import fit_scan_fn
+from repro.hyper.mll import make_mll_strips_fn, strips_for_mll
+
+FUZZ_KERNELS = ["rbf", "rq", "poly2", "expdot"]
+TOL = 1e-5
+
+
+def _factors_of(data, noise=0.0):
+    return GramFactors(K1e=data.K1e, K2e=data.K2e, Xt=data.Xt, lam=data.lam,
+                       noise=float(noise), c=None)
+
+
+# Jitted op caches: hypothesis runs hundreds of examples, so every op goes
+# through jax.jit (XLA's cache makes repeat signatures ~free — and jit IS
+# the deployment path).  Noise rides as a TRACED scalar in the mirror loop,
+# same as in the fleet lanes; the dense-oracle trajectory keeps host-float
+# noise to also cover the static-noise branch of core/state.py.
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_jit(kname: str, window: int, refit_steps: int):
+    spec = get_kernel(kname)
+    return {
+        "extend": jax.jit(lambda fl, X, G, op: fleet_extend(
+            spec, fl, X, G, op, window=window)),
+        "evict": jax.jit(lambda fl, op: fleet_evict(spec, fl, op)),
+        "refit": jax.jit(lambda fl, op: fleet_refit(
+            spec, fl, op, steps=refit_steps)),
+        "query": jax.jit(lambda fl, Xq: fleet_posterior(spec, fl, Xq)),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _single_jit(kname: str, refit_steps: int):
+    spec = get_kernel(kname)
+
+    def refit(data, nz, sg, lr):
+        S0, C, GG = strips_for_mll(data.X, data.G)
+        fn = make_mll_strips_fn(spec, S0, C, GG, data.X.shape[1],
+                                count=data.count)
+        h0 = HyperParams(log_lengthscale2=-jnp.log(data.lam),
+                         log_signal=jnp.log(sg),
+                         log_noise=jnp.log(jnp.maximum(nz, 1e-30)))
+        h, _ = fit_scan_fn(fn, h0, steps=refit_steps, lr=lr)
+        return (gpg_refactor(spec, data, h.lam, noise=h.noise_eff),
+                h.noise, h.signal)
+
+    return {
+        "extend": jax.jit(lambda d_, x, g, nz: gpg_extend(
+            spec, d_, x, g, noise=nz)),
+        "evict_nosolve": jax.jit(lambda d_, nz: gpg_evict(
+            spec, d_, noise=nz, solve=False)),
+        "evict": jax.jit(lambda d_, nz: gpg_evict(spec, d_, noise=nz)),
+        "refit": jax.jit(refit),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Single-tenant state machine vs dense from-scratch oracle
+# ---------------------------------------------------------------------------
+
+
+def gen_single_ops(seed: int, n_ops: int, cap: int) -> list:
+    """The seed IS the trajectory: a reproducible op list with payload
+    sub-seeds (no ambient RNG anywhere)."""
+    rnd = np.random.RandomState(seed)
+    ops, count = [], 0
+    for i in range(n_ops):
+        cands = ["extend"] if count == 0 else (
+            (["extend"] if count < cap else []) +
+            ["evict", "resolve", "query", "query"])
+        op = cands[rnd.randint(len(cands))]
+        ops.append((op, int(rnd.randint(2**31 - 1))))
+        count += {"extend": 1, "evict": -1}.get(op, 0)
+    return ops
+
+
+def check_single_trajectory(kname: str, d: int, cap: int, seed: int,
+                            n_ops: int = 8, noise: float = 1e-6,
+                            lam: float = 0.7) -> None:
+    """Drive one random interleaving; dense-oracle-check after EVERY op."""
+    spec = get_kernel(kname)
+    data = gpg_init(spec, d, cap, lam=lam)
+    qfn = make_query_fn(spec)
+    ops = gen_single_ops(seed, n_ops, cap)
+    rhs_override = None      # a resolve() pins Z to a custom rhs until the
+    # next extend/evict re-solves against G (the default-rhs semantics)
+    for step, (op, sub) in enumerate(ops):
+        r = np.random.RandomState(sub)
+        if op == "extend":
+            data = gpg_extend(spec, data, r.randn(d), r.randn(d),
+                              noise=noise)
+            rhs_override = None
+        elif op == "evict":
+            data = gpg_evict(spec, data, noise=noise)
+            rhs_override = None
+        elif op == "resolve":
+            rhs_override = jnp.asarray(r.randn(cap, d))
+            data = gpg_resolve(spec, data, rhs_override, noise=noise)
+        n = int(data.count)
+        if n == 0:
+            continue
+        ctx = (f"seed={seed} kernel={kname} d={d} cap={cap} step={step} "
+               f"op={op} n={n}")
+        X = data.X[:n]
+        R = (data.G[:n] if rhs_override is None else rhs_override[:n])
+        # jitter=0: the noise term already makes the dense system PD, and
+        # the default 1e-10 ridge visibly perturbs near-singular draws
+        # (kappa ~ 1/noise) — the oracle must solve the SAME system.
+        # Tolerance is relative to the solution scale for the same reason:
+        # |Z| ~ 1/noise on degenerate-gram draws.
+        Z_oracle = dense_solve(spec, X, R, lam=lam, noise=noise, jitter=0.0)
+        scale = max(1.0, float(jnp.max(jnp.abs(Z_oracle))))
+        err = float(jnp.max(jnp.abs(data.Z[:n] - Z_oracle)))
+        assert err <= TOL * scale, \
+            f"Z vs dense oracle err={err:.3e} scale={scale:.1e} [{ctx}]"
+        if op == "query":
+            Xq = jnp.asarray(r.randn(3, d))
+            got = qfn(_factors_of(data), data.Z, Xq)
+            f0 = build_factors(spec, X, lam=lam, noise=noise)
+            want = qfn(f0, woodbury_solve(spec, f0, R), Xq)
+            verr = float(jnp.max(jnp.abs(got.value - want.value)))
+            gerr = float(jnp.max(jnp.abs(got.grad - want.grad)))
+            assert max(verr, gerr) <= TOL * scale, \
+                f"posterior vs rebuilt oracle err={max(verr, gerr):.3e} [{ctx}]"
+
+
+# ---------------------------------------------------------------------------
+# Fleet (vmapped) trajectory vs per-tenant host loop
+# ---------------------------------------------------------------------------
+
+
+def gen_fleet_ops(seed: int, steps: int, batch: int) -> list:
+    """Per step: (op, (B,) lane mask, payload sub-seed)."""
+    rnd = np.random.RandomState(seed)
+    out = []
+    for _ in range(steps):
+        op = ["extend", "extend", "evict", "refit", "query"][rnd.randint(5)]
+        mask = rnd.rand(batch) < 0.7
+        if not mask.any():
+            mask[rnd.randint(batch)] = True
+        out.append((op, mask, int(rnd.randint(2**31 - 1))))
+    return out
+
+
+def check_fleet_vs_loop(kname: str, d: int, window: int, seed: int,
+                        steps: int = 6, batch: int = 3,
+                        refit_steps: int = 4) -> None:
+    """Lockstep-compare a masked fleet trajectory against the same ops
+    driven per tenant through the plain functional primitives."""
+    spec = get_kernel(kname)
+    rnd = np.random.RandomState(seed)
+    lams = np.exp(rnd.uniform(-0.7, 0.7, batch))
+    noises = 10.0 ** rnd.uniform(-8.0, -5.0, batch)
+    fleet = fleet_init(spec, d, window, batch, lam=jnp.asarray(lams),
+                       noise=jnp.asarray(noises), active=True)
+    singles = [gpg_init(spec, d, window, lam=lams[b]) for b in range(batch)]
+    noise_h = list(noises)
+    signal_h = [1.0] * batch
+    qfn = make_query_fn(spec)
+
+    def compare(where: str) -> None:
+        for b in range(batch):
+            lane = fleet_lane(fleet, b)
+            s = singles[b]
+            ctx = (f"seed={seed} kernel={kname} d={d} window={window} "
+                   f"lane={b} at={where}")
+            assert int(lane.count) == int(s.count), \
+                f"count {int(lane.count)} != {int(s.count)} [{ctx}]"
+            for fname in ("Z", "X", "G", "lam", "K1e", "L"):
+                want = getattr(s, fname)
+                # relative on the solution scale: |Z| ~ 1/noise on near-
+                # singular draws, and vmap's batched matmuls legitimately
+                # round differently from the single-lane kernels
+                sc = max(1.0, float(jnp.max(jnp.abs(want))))
+                e = float(jnp.max(jnp.abs(getattr(lane, fname) - want)))
+                assert e <= TOL * sc, \
+                    f"{fname} err={e:.3e} scale={sc:.1e} [{ctx}]"
+
+    fj = _fleet_jit(kname, window, refit_steps)
+    sj = _single_jit(kname, refit_steps)
+    for step, (op, mask, sub) in enumerate(gen_fleet_ops(seed, steps, batch)):
+        r = np.random.RandomState(sub)
+        if op == "extend":
+            X, G = r.randn(batch, d), r.randn(batch, d)
+            fleet = fj["extend"](fleet, jnp.asarray(X), jnp.asarray(G),
+                                 jnp.asarray(mask))
+            for b in np.flatnonzero(mask):
+                nz = jnp.asarray(noise_h[b] / signal_h[b])
+                if int(singles[b].count) >= window:
+                    singles[b] = sj["evict_nosolve"](singles[b], nz)
+                singles[b] = sj["extend"](singles[b], jnp.asarray(X[b]),
+                                          jnp.asarray(G[b]), nz)
+        elif op == "evict":
+            fleet = fj["evict"](fleet, jnp.asarray(mask))
+            for b in np.flatnonzero(mask):
+                if int(singles[b].count) > 0:
+                    singles[b] = sj["evict"](
+                        singles[b],
+                        jnp.asarray(noise_h[b] / signal_h[b]))
+        elif op == "refit":
+            fleet, _ = fj["refit"](fleet, jnp.asarray(mask))
+            for b in np.flatnonzero(mask):
+                if int(singles[b].count) >= 2:
+                    singles[b], nz_f, sg_f = sj["refit"](
+                        singles[b], jnp.asarray(noise_h[b]),
+                        jnp.asarray(signal_h[b]), 0.1)
+                    noise_h[b], signal_h[b] = float(nz_f), float(sg_f)
+        elif op == "query":
+            Xq = r.randn(batch, 3, d)
+            got = fj["query"](fleet, jnp.asarray(Xq))
+            for b in np.flatnonzero(mask):
+                want = qfn(_factors_of(singles[b]), singles[b].Z,
+                           jnp.asarray(Xq[b]))
+                sc = max(1.0, float(jnp.max(jnp.abs(want.value))),
+                         float(jnp.max(jnp.abs(want.grad))))
+                e = max(float(jnp.max(jnp.abs(got.value[b] - want.value))),
+                        float(jnp.max(jnp.abs(got.grad[b] - want.grad))))
+                assert e <= TOL * sc, (
+                    f"posterior err={e:.3e} scale={sc:.1e} [seed={seed} "
+                    f"kernel={kname} lane={b} step={step}]")
+        compare(f"step{step}:{op}")

@@ -1,0 +1,289 @@
+"""Multi-tenant fleet (core/fleet.py + train/serve.py::GPFleetServer):
+deterministic differential trajectories, packing-order bitwise stability,
+the one-compile-per-signature tenant-churn contract, and the padded-
+tenant no-taint invariant (NaN-poisoned inactive lanes)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from fuzz_machine import check_fleet_vs_loop, check_single_trajectory
+from repro.core import get_kernel
+from repro.core.fleet import (GPFleet, fleet_evict, fleet_extend, fleet_init,
+                              fleet_lane, fleet_mll, fleet_posterior,
+                              fleet_refit, fleet_total_mll)
+from repro.obs import compile_watch
+from repro.obs import trace as obs
+from repro.train.serve import GPFleetServer
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    obs.reset()
+    obs.configure(None)
+    compile_watch._WATCHES.clear()
+    yield
+    obs.reset()
+    obs.configure(None)
+    obs.set_enabled(None)
+    compile_watch._WATCHES.clear()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic differential trajectories (the hypothesis front end in
+# test_property_invariants.py draws hundreds more of these in CI;
+# REPRO_TEST_SEED offsets the pinned seeds to replay a reported failure)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kname,seed", [("rbf", 0), ("poly2", 1),
+                                        ("expdot", 2), ("rq", 3)])
+def test_fleet_trajectory_matches_host_loop(kname, seed, base_seed):
+    check_fleet_vs_loop(kname, d=2 + seed % 3, window=3 + seed % 2,
+                        seed=base_seed + seed, steps=6)
+
+
+@pytest.mark.parametrize("kname,seed", [("rbf", 10), ("poly2", 11)])
+def test_state_machine_matches_dense_oracle(kname, seed, base_seed):
+    check_single_trajectory(kname, d=3, cap=4, seed=base_seed + seed,
+                            n_ops=7)
+
+
+# ---------------------------------------------------------------------------
+# Packing-order bitwise stability
+# ---------------------------------------------------------------------------
+
+
+def _drive(order, rng_seed=5):
+    """Same tenant workload, request dicts built in ``order``; returns the
+    fleet arrays + a posterior read."""
+    r = np.random.RandomState(rng_seed)
+    payload = {t: [(r.randn(3), r.randn(3)) for _ in range(4)]
+               for t in "abc"}
+    queries = {t: r.randn(2, 3) for t in "abc"}
+    fl = GPFleet("rbf", d=3, window=4, batch=4)
+    for t in "abc":
+        fl.join(t, lam=0.5 + 0.25 * ord(t) % 3)
+    for i in range(4):
+        fl.extend({t: payload[t][i] for t in order})
+    out = fl.posterior({t: queries[t] for t in order})
+    return fl, out
+
+
+def test_fleet_packing_order_bitwise_stable():
+    """The packed launch is a pure function of (lane payload, lane mask):
+    the order requests were packed in must not change a single bit."""
+    fl1, out1 = _drive("abc")
+    fl2, out2 = _drive("cba")
+    for leaf1, leaf2 in zip(jax.tree_util.tree_leaves(fl1.fleet),
+                            jax.tree_util.tree_leaves(fl2.fleet)):
+        np.testing.assert_array_equal(np.asarray(leaf1), np.asarray(leaf2))
+    for t in "abc":
+        np.testing.assert_array_equal(np.asarray(out1[t].value),
+                                      np.asarray(out2[t].value))
+        np.testing.assert_array_equal(np.asarray(out1[t].grad),
+                                      np.asarray(out2[t].grad))
+
+
+# ---------------------------------------------------------------------------
+# Compile stability across tenant churn (satellite: mirrors the
+# single-state test in test_obs.py at fleet scope)
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_compile_stable_across_tenant_churn():
+    """join -> extend to capacity -> evict -> refit -> leave -> rejoin:
+    exactly ONE compile per (op, signature), zero recompiles — per-tenant
+    count/noise/lam ride as traced arrays, so heterogeneous tenants and
+    full churn share one executable per op."""
+    r = np.random.RandomState(0)
+    with obs.use_obs(True):
+        fl = GPFleet("rbf", d=3, window=3, batch=4)
+        fl.join("a", lam=0.4, noise=1e-7)
+        fl.join("b", lam=1.6)
+        for _ in range(4):            # past the window: auto-evict path too
+            fl.extend({"a": (r.randn(3), r.randn(3)),
+                       "b": (r.randn(3), r.randn(3))})
+        fl.posterior({"a": r.randn(2, 3)})
+        fl.evict(["b"])
+        fl.refit(["a", "b"], steps=4)
+        fl.posterior({"a": r.randn(2, 3), "b": r.randn(2, 3)})
+        fl.leave("b")
+        fl.join("c", lam=0.9, noise=1e-5)   # reuses b's freed lane
+        fl.extend({"c": (r.randn(3), r.randn(3)),
+                   "a": (r.randn(3), r.randn(3))})
+        fl.mll()
+        by_name = {w.name: w for w in compile_watch.all_watches()}
+        for name in ("fleet_join", "fleet_extend", "fleet_evict",
+                     "fleet_refit4", "fleet_posterior", "fleet_leave",
+                     "fleet_mll"):
+            w = by_name[name]
+            assert w.n_signatures() == 1, (name, w.compiles)
+            assert w.n_compiles() == 1, (name, w.compiles)
+        compile_watch.assert_all_stable()
+
+
+def test_fleet_server_steps_are_compile_stable():
+    """The continuous-batching loop on top: interleaved submit/step churn
+    with heterogeneous tenants never recompiles a fleet op."""
+    r = np.random.RandomState(1)
+    with obs.use_obs(True):
+        srv = GPFleetServer(kernel="rbf", d=3)
+        srv.connect("a", lam=0.5, noise=1e-6)
+        srv.connect("b", lam=2.0)
+        for _ in range(3):
+            srv.submit("a", "extend", (r.randn(3), r.randn(3)))
+            srv.submit("b", "extend", (r.randn(3), r.randn(3)))
+            srv.submit("a", "query", r.randn(2, 3))
+        srv.submit("b", "refit")
+        srv.drain()
+        srv.disconnect("b")
+        srv.connect("c")
+        srv.submit("c", "extend", (r.randn(3), r.randn(3)))
+        srv.submit("c", "query", r.randn(2, 3))
+        srv.drain()
+        compile_watch.assert_all_stable()
+        snap = obs.REGISTRY.snapshot()["counters"]
+        assert snap["fleet.serve.requests"] == 12.0
+        assert snap["fleet.launches"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Padded-tenant taint (satellite): inactive/padded lanes contribute
+# EXACTLY zero — NaN poison is the strongest detector (any cross-lane
+# contraction or unmasked reduction would propagate it)
+# ---------------------------------------------------------------------------
+
+
+def _poison_inactive(fleet):
+    """NaN every float leaf of the INACTIVE lanes."""
+    act = np.asarray(fleet.active)
+
+    def poison(leaf):
+        leaf = jnp.asarray(leaf)
+        if not jnp.issubdtype(leaf.dtype, jnp.floating) or leaf.ndim == 0:
+            return leaf
+        sel = act.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(sel, leaf, jnp.nan)
+    return fleet._replace(
+        data=jax.tree_util.tree_map(poison, fleet.data),
+        noise=jnp.where(fleet.active, fleet.noise, jnp.nan),
+        signal=jnp.where(fleet.active, fleet.signal, jnp.nan))
+
+
+def test_padded_tenants_contribute_exactly_zero():
+    """Uneven B (2 of 4 lanes active), uneven per-tenant N: NaN-poisoned
+    inactive lanes must not perturb one bit of the active lanes' extend/
+    evict/refit/posterior, and masked MLL sums must exclude them."""
+    spec = get_kernel("rbf")
+    r = np.random.RandomState(2)
+    d, window, B = 3, 4, 4
+    active = jnp.asarray([True, False, True, False])
+    fleet = fleet_init(spec, d, window, B, lam=0.8, noise=1e-6,
+                       active=True)._replace(active=active)
+    # uneven N: lane 0 gets 3 observations, lane 2 gets 1
+    for k in range(3):
+        mask = jnp.asarray([True, False, k == 0, False])
+        fleet = fleet_extend(spec, fleet, r.randn(B, d), r.randn(B, d),
+                             mask, window=window)
+    clean = fleet
+    dirty = _poison_inactive(fleet)
+
+    X, G = r.randn(B, d), r.randn(B, d)
+    Xq = r.randn(B, 2, d)
+    for name, op in [
+        ("extend", lambda f: fleet_extend(spec, f, X, G, window=window)),
+        ("evict", lambda f: fleet_evict(spec, f)),
+        ("refit", lambda f: fleet_refit(spec, f, steps=3)[0]),
+    ]:
+        got = op(dirty)
+        want = op(clean)
+        for b in (0, 2):
+            for l_got, l_want in zip(
+                    jax.tree_util.tree_leaves(fleet_lane(got, b)),
+                    jax.tree_util.tree_leaves(fleet_lane(want, b))):
+                np.testing.assert_array_equal(
+                    np.asarray(l_got), np.asarray(l_want),
+                    err_msg=f"lane taint through {name}")
+    post_d = fleet_posterior(spec, dirty, Xq)
+    post_c = fleet_posterior(spec, clean, Xq)
+    for b in (0, 2):
+        np.testing.assert_array_equal(np.asarray(post_d.value[b]),
+                                      np.asarray(post_c.value[b]))
+        np.testing.assert_array_equal(np.asarray(post_d.grad[b]),
+                                      np.asarray(post_c.grad[b]))
+
+    # masked evidence: the fleet total is the sum over ACTIVE lanes only,
+    # finite even with NaN lanes in the batch
+    per = fleet_mll(spec, clean)
+    total = fleet_total_mll(spec, dirty)
+    assert bool(jnp.isfinite(total))
+    np.testing.assert_allclose(float(total),
+                               float(per[0] + per[2]), rtol=1e-12)
+
+
+def test_fleet_leave_zeroes_the_lane():
+    """A freed lane is a pristine empty state — no residual bits that a
+    later join or a fleet reduction could read."""
+    fl = GPFleet("rbf", d=2, window=3, batch=2)
+    r = np.random.RandomState(3)
+    fl.join("t", lam=0.3, noise=1e-5)
+    fl.extend({"t": (r.randn(2), r.randn(2))})
+    slot = fl.slot_of("t")
+    fl.leave("t")
+    lane = fleet_lane(fl.fleet, slot)
+    assert int(lane.count) == 0
+    assert not bool(fl.fleet.active[slot])
+    assert float(jnp.abs(lane.X).sum()) == 0.0
+    assert float(jnp.abs(lane.Z).sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(lane.L),
+                                  np.eye(fl.capacity))
+
+
+# ---------------------------------------------------------------------------
+# Server semantics
+# ---------------------------------------------------------------------------
+
+
+def test_server_head_of_line_order_and_results():
+    """A tenant's ops run in submission order across steps; one step never
+    co-batches two ops of the same tenant."""
+    r = np.random.RandomState(4)
+    srv = GPFleetServer(kernel="rbf", d=2)
+    srv.connect("t", lam=0.6)
+    r1 = srv.submit("t", "extend", (r.randn(2), r.randn(2)))
+    r2 = srv.submit("t", "extend", (r.randn(2), r.randn(2)))
+    r3 = srv.submit("t", "query", r.randn(1, 2))
+    done = srv.step()
+    assert [x.done for x in (r1, r2, r3)] == [True, False, False]
+    assert len(done) == 1
+    srv.drain()
+    assert r2.done and r3.done
+    assert srv.fleet.n("t") == 2
+    assert r3.result.value.shape == (1,)
+    # the query ran AFTER both extends: it must match a fresh query now
+    again = srv.submit("t", "query", r3.payload)
+    srv.drain()
+    np.testing.assert_array_equal(np.asarray(r3.result.value),
+                                  np.asarray(again.result.value))
+
+
+def test_server_idle_ttl_evicts_and_std_query_cache():
+    from repro.configs.paper_gp import GPFleetConfig
+
+    r = np.random.RandomState(5)
+    srv = GPFleetServer(kernel="rbf", d=2,
+                        config=GPFleetConfig(idle_ttl=2))
+    srv.connect("busy", noise=1e-6)
+    srv.connect("idle", noise=1e-6)
+    for _ in range(4):
+        srv.submit("busy", "extend", (r.randn(2), r.randn(2)))
+        srv.step()
+    assert srv.tenants == ["busy"]          # 'idle' TTL-evicted
+    # std query path: solver LRU keyed on factor revision
+    q = srv.submit("busy", "query", (r.randn(2, 2), True))
+    srv.drain()
+    assert q.result.std is not None and q.result.std.shape == (2,)
+    assert bool(jnp.all(q.result.std >= -1e-12))

@@ -1,4 +1,14 @@
-"""Hypothesis property tests on the system's mathematical invariants."""
+"""Hypothesis property tests on the system's mathematical invariants.
+
+The ``test_fuzz_*`` state-machine tests are the randomized differential
+suite: hypothesis draws a kernel/shape/seed, the seed deterministically
+generates an op interleaving (tests/fuzz_machine.py), and every op is
+checked against a dense from-scratch oracle and against the vmapped fleet
+path.  On failure hypothesis shrinks and prints the falsifying
+(kname, d, ..., seed) example — that tuple alone replays the trajectory
+(``print_blob`` is on in the CI ``fleet-ci`` profile).  Example counts
+come from the profile registered in conftest.py (dev: 25, fleet-ci: 200).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,17 +17,15 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed in this image")
 from hypothesis import given, settings, strategies as st
 
+from conftest import arr as _arr
+from fuzz_machine import (FUZZ_KERNELS, check_fleet_vs_loop,
+                          check_single_trajectory)
 from repro.core import (build_factors, dense_gram, get_kernel, gram_matvec,
                         l_op, lt_op, woodbury_solve)
 from repro.utils.flat import flatten_pytree, make_flat_spec, unflatten_pytree
 from repro.utils.hlo import collective_breakdown
 
-KERNEL_NAMES = ["rbf", "rq", "poly2", "expdot"]
-
-
-def _arr(seed, shape, scale=1.0):
-    return jnp.asarray(
-        np.random.RandomState(seed).randn(*shape) * scale)
+KERNEL_NAMES = FUZZ_KERNELS
 
 
 @settings(max_examples=25, deadline=None)
@@ -99,6 +107,28 @@ ENTRY %main (p: f32[{n},{m}]) -> f32[{n},{m}] {{
     got = collective_breakdown(hlo)
     assert got["all-reduce"] == n * m * 4
     assert got["all-gather"] == n * m * 2 * 2
+
+
+# ---------------------------------------------------------------------------
+# State-machine fuzzers (no explicit @settings: the conftest profile
+# governs the example count — CI's fleet job runs these at ~200 examples)
+# ---------------------------------------------------------------------------
+
+
+@given(kname=st.sampled_from(FUZZ_KERNELS), d=st.integers(2, 6),
+       cap=st.integers(2, 4), seed=st.integers(0, 2**31 - 1))
+def test_fuzz_state_machine_vs_dense_oracle(kname, d, cap, seed):
+    """Random extend/evict/resolve/query interleavings on the incremental
+    state, dense-oracle-checked after EVERY op (<= 1e-5 rel)."""
+    check_single_trajectory(kname, d, cap, seed, n_ops=7)
+
+
+@given(kname=st.sampled_from(FUZZ_KERNELS), d=st.integers(2, 5),
+       window=st.integers(2, 4), seed=st.integers(0, 2**31 - 1))
+def test_fuzz_fleet_matches_host_loop(kname, d, window, seed):
+    """The vmapped fleet trajectory == the same random op interleaving
+    driven per tenant through the plain primitives (<= 1e-5 rel)."""
+    check_fleet_vs_loop(kname, d, window, seed, steps=5)
 
 
 @settings(max_examples=15, deadline=None)
