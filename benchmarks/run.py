@@ -118,11 +118,14 @@ BENCHES = [
      "DESIGN 14: D-sharded state machine O(N^2)-byte collectives"),
     ("fleet", "benchmarks.bench_fleet",
      "DESIGN 15: multi-tenant vmapped fleet + continuous batching"),
+    ("regime", "benchmarks.bench_regime",
+     "DESIGN 16: regime crossover, Krylov posterior + SLQ past N<D"),
 ]
 
 # Benches whose JSON lands at the repo root for cross-PR tracking; also
 # the set --check regresses against.
-PERF_TRACKED = ("kernels", "iterative", "hyper", "distributed", "fleet")
+PERF_TRACKED = ("kernels", "iterative", "hyper", "distributed", "fleet",
+                "regime")
 
 
 def main() -> None:

@@ -39,10 +39,18 @@ class GPServeConfig:
     HBM bytes — which IS the wall clock of these memory-bound sweeps —
     while every contraction still accumulates in f32 and all factors/
     solves stay f32 (precision policy table, DESIGN.md sec. 12).
+
+    ``tol``/``maxiter`` are the served state's CG solve knobs (the
+    warm-started re-solve each ``extend`` runs): ``maxiter=None`` lets
+    the state pick — condition-scaled via the attached health monitor's
+    proxy when one is sampling, else the ``10*capacity + 50`` ceiling
+    (``core.state._default_maxiter``).
     """
 
     microbatch: int = 64
     precision: str = "f32"       # 'f32' | 'bf16' stream storage
+    tol: float = 1e-10           # CG residual tolerance of state solves
+    maxiter: int | None = None   # CG budget; None = condition-scaled/auto
 
 
 @dataclasses.dataclass(frozen=True)

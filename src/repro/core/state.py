@@ -262,8 +262,33 @@ def _solve(spec: KernelSpec, data: GPGData, rhs: Array, z0: Array, *,
                          resnorm=jnp.asarray(res.resnorm, data.resnorm.dtype))
 
 
-def _default_maxiter(data: GPGData, maxiter: Optional[int]) -> int:
-    return int(maxiter) if maxiter is not None else 10 * data.capacity + 50
+def _default_maxiter(data: GPGData, maxiter: Optional[int], *,
+                     cond: Optional[float] = None,
+                     tol: float = 1e-10) -> int:
+    """Iteration budget for the warm-started CG re-solve.
+
+    An explicit ``maxiter`` always wins.  Otherwise the budget is the
+    classic CG bound  iters ~ sqrt(kappa) * log(2/tol) / 2  evaluated at
+    the health monitor's condition proxy (``obs.health.condition_proxy``
+    — a free lower bound on cond(K1n), the operator the preconditioner
+    has to equalize), clamped between a warm-start floor and the legacy
+    ``10 * capacity + 50`` ceiling so a wild proxy can neither starve nor
+    blow up the solve.  Without a condition sample (no monitor attached,
+    or jitted consumers where ``maxiter`` must stay static) the ceiling
+    is the budget — exactly the pre-regime behavior.
+    """
+    if maxiter is not None:
+        return int(maxiter)
+    cap = data.capacity
+    ceiling = 10 * cap + 50
+    if cond is None:
+        return ceiling
+    import math
+
+    if not math.isfinite(cond) or cond <= 1.0:
+        return ceiling
+    need = 0.5 * math.sqrt(cond) * math.log(2.0 / max(float(tol), 1e-300))
+    return int(min(ceiling, max(cap // 2 + 16, math.ceil(need))))
 
 
 # ---------------------------------------------------------------------------
@@ -460,6 +485,7 @@ class GPGState:
         maxiter: int | None = None,
         dtype=None,
         precision: str | None = None,
+        policy=None,
     ):
         if d is None:
             raise TypeError("GPGState needs the input dimension d")
@@ -482,6 +508,19 @@ class GPGState:
         cap = self.window if self.window else int(capacity)
         self.data = gpg_init(self.spec, int(d), cap, lam=lam, c=c,
                              dtype=dtype)
+        # Regime policy (repro.regime): which solve/evidence path the
+        # state's size warrants, and what a full window does — 'evict'
+        # (the PR-3 default), 'compress' (exact gradient reduction onto
+        # the observed subspace), 'iterate' (grow past the window and let
+        # the iterative regime absorb it), or 'auto'.  Deferred import:
+        # repro.regime imports core submodules at load time.
+        from repro.regime.policy import resolve_policy
+
+        self.policy = resolve_policy(policy, window=self.window)
+        self._last_regime: str | None = None
+        self._reduction = None      # set when 'compress' has fired
+        self._raw_X = None          # original-frame copies (compress only)
+        self._raw_G = None
         # Monotonic revision counters (repro.obs): ``revision`` bumps on
         # EVERY data mutation, ``factor_revision`` only when the factor
         # strips / Cholesky / lam / count change — it is the exact cache
@@ -536,32 +575,203 @@ class GPGState:
         self._health = HealthMonitor() if monitor is None else monitor
         return self
 
+    # -- regime selection (repro.regime) ------------------------------------
+
+    @property
+    def regime(self) -> str:
+        """'exact' | 'iterative' — the solve/evidence path the policy's
+        cost model picks for the CURRENT (n, d)."""
+        return self.policy.regime_for(self.n, self.d)
+
+    def _publish_regime(self) -> None:
+        """Export regime gauges; emit a switch event on a boundary cross."""
+        cur = self.regime
+        self.policy.publish(self.n, self.d, cur, prev=self._last_regime)
+        self._last_regime = cur
+
+    def _cond_hint(self) -> Optional[float]:
+        """Condition proxy for the maxiter budget, from the attached
+        health monitor's last sample, bucketed to powers of 4 so the
+        derived static maxiter only takes a handful of distinct values."""
+        if self._health is None:
+            return None
+        last = getattr(self._health, "last", None)
+        if not last:
+            return None
+        cond = last.get("cond_k1n")
+        if cond is None or cond <= 1.0:
+            return None
+        import math
+
+        if not math.isfinite(cond):
+            return cond
+        return 4.0 ** math.ceil(math.log(cond, 4.0))
+
+    def _maxiter_eff(self) -> Optional[int]:
+        """The per-solve iteration budget (None = legacy ceiling) —
+        condition-scaled when a health monitor has sampled the state."""
+        if self.maxiter is not None:
+            return int(self.maxiter)
+        cond = self._cond_hint()
+        if cond is None:
+            return None
+        return _default_maxiter(self.data, None, cond=cond, tol=self.tol)
+
+    def _capacity_action(self) -> str:
+        """Resolve what a full window does, feeding the policy the data's
+        affine rank only when compression is actually on the table.
+        Non-scalar Lambda never compresses: the exact-reduction theorem
+        (regime/reduction.py) is an isotropic-metric statement."""
+        rank = None
+        if self.policy.capacity in ("compress", "auto") \
+                and self._reduction is None \
+                and jnp.asarray(self.data.lam).ndim == 0:
+            from repro.regime.reduction import affine_rank
+
+            base = None if self.spec.is_stationary else \
+                (self.data.c if self.data.c is not None else 0.0 * self.X[0])
+            rank = affine_rank(self.X, base=base)
+        return self.policy.capacity_action(self.n, self.d, rank)
+
+    def _rebuild_reduced(self, Xr: Array, Gr: Array) -> None:
+        """Replace ``data`` with a freshly-conditioned state over the
+        reduced observations (one O(N^2 k + N^3) refactor)."""
+        n = Xr.shape[0]
+        cap = max(self.data.capacity, n + 1)
+        data = gpg_init(self.spec, Xr.shape[1], cap, lam=self.data.lam,
+                        c=None, dtype=self.data.X.dtype)
+        pad = cap - n
+        data = data._replace(
+            X=jnp.pad(jnp.asarray(Xr, data.X.dtype), ((0, pad), (0, 0))),
+            G=jnp.pad(jnp.asarray(Gr, data.X.dtype), ((0, pad), (0, 0))),
+            count=jnp.asarray(n, jnp.int32))
+        self.data = gpg_refactor(self.spec, data, noise=self._noise_eff,
+                                 jitter=self.jitter, tol=self.tol,
+                                 maxiter=self.maxiter)
+        self._stream_cache = None
+
+    def _compress(self) -> None:
+        """Exact gradient reduction of the stored window onto its affine
+        span (``regime/reduction.py``): the D axis collapses to the data's
+        rank k, and the window cap is re-expressed at the reduced per-row
+        flops — the state gains O(D/k) rows of headroom instead of
+        evicting.  In-span posterior queries are EXACTLY unchanged; the
+        dropped orthogonal gradient mass is published as
+        ``regime.compress_residual``."""
+        from repro.regime.reduction import reduce_gradients
+
+        X, G = self.X, self.G
+        red = reduce_gradients(self.spec, X, G, c=self.data.c)
+        d_full, k, n = self.d, red.rank, self.n
+        if self.window:
+            self.window = max(self.window + 1,
+                              int(self.window * d_full / max(k, 1)))
+        # raw copies in the original frame: what basis growth rebuilds from
+        self._raw_X = [row for row in X]
+        self._raw_G = [row for row in G]
+        self._reduction = red
+        self._rebuild_reduced(red.Xr, red.Gr)
+        if _obs.enabled():
+            _obs.REGISTRY.inc("regime.compressions")
+            _obs.REGISTRY.set_gauge("regime.compress_rank", float(k))
+            _obs.REGISTRY.set_gauge("regime.compress_residual",
+                                    float(red.residual))
+            _obs.emit({"type": "regime", "event": "compress", "n": n,
+                       "d": d_full, "rank": k,
+                       "residual": float(red.residual)})
+
+    def _grow_basis(self, x: Array) -> None:
+        """Append the out-of-span direction of ``x`` to the reduction
+        basis and rebuild the reduced state from the raw copies — rare
+        (once per genuinely new direction), after which the grown span
+        covers the newcomer exactly."""
+        from repro.regime.reduction import Reduction
+
+        red = self._reduction
+        xc = jnp.asarray(x, red.base.dtype) - red.base
+        resid = xc - red.basis @ (red.basis.T @ xc)
+        w = resid / jnp.maximum(jnp.linalg.norm(resid), _TINY)
+        basis = jnp.concatenate([red.basis, w[:, None]], axis=1)
+        Xraw = jnp.stack(self._raw_X)
+        Graw = jnp.stack(self._raw_G)
+        Xr = (Xraw - red.base) @ basis
+        Gr = Graw @ basis
+        residual = jnp.linalg.norm(Graw - Gr @ basis.T)
+        self._reduction = Reduction(basis=basis, base=red.base, Xr=Xr,
+                                    Gr=Gr, residual=residual)
+        self._rebuild_reduced(Xr, Gr)
+        if _obs.enabled():
+            _obs.REGISTRY.inc("regime.basis_growths")
+            _obs.REGISTRY.set_gauge("regime.compress_rank",
+                                    float(basis.shape[1]))
+
+    def _project_in(self, x: Array) -> Array:
+        """Map an incoming D-dim input into the reduced frame, growing
+        the basis first when x leaves the observed span."""
+        from repro.regime.reduction import project_points
+
+        x = jnp.asarray(x)
+        y, out = project_points(self._reduction, x[None])
+        rn = float(out[0])
+        if _obs.enabled():
+            _obs.REGISTRY.set_gauge("regime.out_of_span", rn)
+        scale = max(float(jnp.linalg.norm(x - self._reduction.base)), 1.0)
+        if rn > 1e-7 * scale:
+            self._grow_basis(x)
+            y, _ = project_points(self._reduction, x[None])
+        return y[0]
+
     def extend(self, x: Array, g: Array, *, solve: bool = True) -> "GPGState":
-        """Append one observation; auto-evict (window) / auto-grow (no window)."""
+        """Append one observation.  A full window applies the policy's
+        capacity action ({evict, compress, iterate}); a full capacity
+        without a window zero-pad-grows, as ever."""
         obs_on = _obs.enabled()
         with _obs.span("state.extend"):
             # the in-jit tap counts degenerate pivots as they happen; the
             # host-side counter below is the device-synced ground truth
-            # (the auto-evict above never refactors, so any n_refactor
-            # delta across this call IS the degenerate-pivot fallback)
+            # (the capacity actions above never border-refactor, so any
+            # n_refactor delta across gpg_extend IS the degenerate-pivot
+            # fallback)
             before = int(self.data.n_refactor) if obs_on else 0
+            x = jnp.asarray(x)
+            g = jnp.asarray(g)
             if self.window and self.n >= self.window:
-                self.data = gpg_evict(self.spec, self.data,
-                                      noise=self._noise_eff, solve=False)
-            elif self.n >= self.data.capacity:
+                action = self._capacity_action()
+                if action == "compress":
+                    self._compress()
+                elif action == "iterate":
+                    # lift the window cap: growth is absorbed by the
+                    # iterative regime from here on
+                    self.window = None
+                else:
+                    self.data = gpg_evict(self.spec, self.data,
+                                          noise=self._noise_eff, solve=False)
+                    if self._raw_X is not None:
+                        self._raw_X.pop(0)
+                        self._raw_G.pop(0)
+            if self.n >= self.data.capacity:
                 self._grow()
-            self.data = gpg_extend(
-                self.spec, self.data, x, g, noise=self._noise_eff,
-                jitter=self.jitter, deg_thresh=self.deg_thresh, tol=self.tol,
-                maxiter=self.maxiter, solve=solve)
+            if self._reduction is not None:
+                xr = self._project_in(x)      # may grow the basis
+                gr = g @ self._reduction.basis
+                self._raw_X.append(x)
+                self._raw_G.append(g)
+                x, g = xr, gr
+            before_refac = int(self.data.n_refactor) if obs_on else before
+            with _obs.span(f"state.solve.{self.regime}"):
+                self.data = gpg_extend(
+                    self.spec, self.data, x, g, noise=self._noise_eff,
+                    jitter=self.jitter, deg_thresh=self.deg_thresh,
+                    tol=self.tol, maxiter=self._maxiter_eff(), solve=solve)
             if obs_on:
                 _obs.REGISTRY.inc("state.extend_calls")
-                fallbacks = int(self.data.n_refactor) - before
+                fallbacks = int(self.data.n_refactor) - before_refac
                 if fallbacks:
                     _obs.REGISTRY.inc("state.refactor_fallback", fallbacks)
                 _obs.REGISTRY.set_gauge("state.n", self.n)
                 if self._health is not None:
                     self._health.tick(self)
+            self._publish_regime()
         self._bump()
         return self
 
@@ -573,6 +783,9 @@ class GPGState:
                                       noise=self._noise_eff, tol=self.tol,
                                       maxiter=self.maxiter,
                                       solve=(i == k - 1))
+                if self._raw_X is not None and self._raw_X:
+                    self._raw_X.pop(0)
+                    self._raw_G.pop(0)
             if _obs.enabled():
                 _obs.REGISTRY.inc("state.evict_calls")
                 _obs.REGISTRY.set_gauge("state.n", self.n)
@@ -645,31 +858,71 @@ class GPGState:
             lengthscale2=1.0 / lam, signal=self.signal,
             noise=max(self.noise, 1e-30))
 
-    def mll(self):
-        """Exact log marginal likelihood of the CURRENT window at the
-        current hypers (structured — never the (ND, ND) Gram)."""
-        from repro.hyper import mll as _mll
+    def _evidence_method(self, method: str) -> str:
+        """Normalize an evidence ``method`` knob: 'auto' follows the
+        regime policy (SLQ past the crossover — the exact determinant-
+        lemma inner matrix is (N^2, N^2))."""
+        if method == "auto":
+            return "slq" if self.regime == "iterative" else "exact"
+        if method not in ("exact", "slq"):
+            raise ValueError(
+                f"method must be 'auto', 'exact' or 'slq': {method!r}")
+        return method
 
+    def mll(self, *, method: str = "auto", **slq_kw):
+        """Log marginal likelihood of the CURRENT window at the current
+        hypers.  ``method='exact'`` is the structured determinant-lemma
+        path (never the (ND, ND) Gram); ``'slq'`` the stochastic Lanczos
+        quadrature estimator (``regime/slq.py``) whose cost stays
+        O(P m N^2 D) past the crossover; ``'auto'`` follows the regime.
+        ``slq_kw`` (key/probes/lanczos_iters/cg_tol/cg_maxiter) pass
+        through to :func:`repro.regime.slq.slq_mll`."""
         if self.n < 1:
             raise ValueError("mll() needs at least one observation")
+        if self._evidence_method(method) == "slq":
+            from repro.regime.slq import slq_mll
+
+            return slq_mll(self.spec, self.X, self.G, self.hypers,
+                           c=self.data.c, **slq_kw)
+        from repro.hyper import mll as _mll
+
         return _mll(self.spec, self.X, self.G, self.hypers, c=self.data.c)
 
     def refit(self, *, mask=None, steps: int = 150, lr: float = 0.08,
-              **fit_kw):
+              method: str = "auto", **fit_kw):
         """Refit the hypers by MLL ascent on the current window, then do the
         one legitimate full refactorization with the fitted lengthscale.
 
-        Updates ``noise``/``signal``/``lam`` in place and re-solves; returns
-        the ``repro.hyper.FitResult`` (``.improvement`` = MLL gain over the
-        current hypers, which seed the fit).
+        ``method`` picks the evidence estimator the ascent runs on (see
+        :meth:`mll`); 'auto' uses SLQ + Hutchinson hyper-gradients past
+        the regime crossover, where the exact evidence is unaffordable.
+        SLQ knobs (key/probes/lanczos_iters/cg_tol/cg_maxiter) ride in
+        ``fit_kw``.  Updates ``noise``/``signal``/``lam`` in place and
+        re-solves; returns the ``repro.hyper.FitResult`` (``.improvement``
+        = MLL gain over the current hypers, which seed the fit).
         """
-        from repro.hyper import fit as _fit
-
         if self.n < 2:
             raise ValueError("refit() needs at least two observations")
-        with _obs.span("state.refit"):
-            res = _fit(self.spec, self.X, self.G, init=self.hypers,
-                       c=self.data.c, mask=mask, steps=steps, lr=lr, **fit_kw)
+        method = self._evidence_method(method)
+        with _obs.span("state.refit", method=method):
+            if method == "slq":
+                from repro.hyper import fit_fn as _fit_fn
+                from repro.regime.slq import make_slq_mll_fn
+
+                slq_kw = {k: fit_kw.pop(k)
+                          for k in ("key", "probes", "lanczos_iters",
+                                    "cg_tol", "cg_maxiter")
+                          if k in fit_kw}
+                fn = make_slq_mll_fn(self.spec, self.X, self.G,
+                                     c=self.data.c, **slq_kw)
+                res = _fit_fn(fn, self.hypers, steps=steps, lr=lr,
+                              mask=mask, **fit_kw)
+            else:
+                from repro.hyper import fit as _fit
+
+                res = _fit(self.spec, self.X, self.G, init=self.hypers,
+                           c=self.data.c, mask=mask, steps=steps, lr=lr,
+                           **fit_kw)
             self.noise = float(res.hypers.noise)
             self.signal = float(res.hypers.signal)
             self.refactor(lam=res.hypers.lam)
@@ -794,7 +1047,45 @@ class GPGState:
         ``return_std``/``return_grad_std`` add posterior stds via ONE
         structured factorization of the noisy Gram (``repro.hyper.
         variance``).  See :func:`repro.core.query.posterior_batch`.
+
+        On a compressed state (the 'compress' capacity action) queries are
+        projected into the reduced frame and gradient outputs lifted back
+        to R^D — exact for in-span queries (regime/reduction.py theorem);
+        the out-of-span query mass is published as a gauge.
         """
+        if self._reduction is not None:
+            return self._posterior_reduced(
+                Xq, probe=probe, microbatch=microbatch,
+                return_std=return_std, return_grad_std=return_grad_std)
+        return self._posterior_raw(Xq, probe=probe, microbatch=microbatch,
+                                   return_std=return_std,
+                                   return_grad_std=return_grad_std)
+
+    def _posterior_reduced(self, Xq, *, probe, microbatch, return_std,
+                           return_grad_std):
+        from repro.regime.reduction import lift_gradients, project_points
+
+        if return_grad_std:
+            raise NotImplementedError(
+                "grad_std on a compressed state: per-coordinate gradient "
+                "stds do not rotate through the reduction basis without "
+                "the full gradient covariance")
+        red = self._reduction
+        Yq, out = project_points(red, jnp.atleast_2d(Xq))
+        if _obs.enabled() and out.size:
+            _obs.REGISTRY.set_gauge("regime.query_out_of_span",
+                                    float(jnp.max(out)))
+        probe_r = None if probe is None else jnp.asarray(probe) @ red.basis
+        pb = self._posterior_raw(Yq, probe=probe_r, microbatch=microbatch,
+                                 return_std=return_std,
+                                 return_grad_std=False)
+        return pb._replace(
+            grad=lift_gradients(red, pb.grad),
+            hess_v=(None if pb.hess_v is None
+                    else lift_gradients(red, pb.hess_v)))
+
+    def _posterior_raw(self, Xq: Array, *, probe, microbatch, return_std,
+                       return_grad_std):
         from .query import posterior_batch
 
         solver = None

@@ -320,17 +320,10 @@ class StructureError(AssertionError):
 
 
 def _jaxpr_axis_sizes(jaxpr) -> list[int]:
-    dims: list[int] = []
-    for eqn in jaxpr.eqns:
-        for v in list(eqn.invars) + list(eqn.outvars):
-            shape = getattr(getattr(v, "aval", None), "shape", ())
-            dims.extend(int(s) for s in shape if isinstance(s, int))
-        for val in eqn.params.values():
-            for sub in (val if isinstance(val, (tuple, list)) else (val,)):
-                inner = getattr(sub, "jaxpr", sub)
-                if hasattr(inner, "eqns"):
-                    dims.extend(_jaxpr_axis_sizes(inner))
-    return dims
+    # shared census with the iterative-regime gate (regime/krylov.py)
+    from repro.utils.hlo import jaxpr_axis_sizes
+
+    return jaxpr_axis_sizes(jaxpr)
 
 
 def assert_no_dense_gram(

@@ -114,6 +114,9 @@ class HealthMonitor:
         self.cadence = max(int(cadence), 1)
         self.drift = bool(drift)
         self.ticks = 0
+        #: most recent probe dict — ``GPGState`` reads ``last["cond_k1n"]``
+        #: to condition-scale its CG iteration budget (``_default_maxiter``)
+        self.last: Optional[dict] = None
 
     def tick(self, state) -> Optional[dict]:
         if not _trace.enabled():
@@ -137,4 +140,5 @@ class HealthMonitor:
             out["bf16_drift_rel"] = dr
             _trace.REGISTRY.set_gauge("health.bf16_drift_rel", dr)
         _trace.emit({"type": "health", **out})
+        self.last = out
         return out

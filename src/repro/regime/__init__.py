@@ -1,0 +1,77 @@
+"""repro.regime — regime-aware large-N solving (DESIGN.md sec. 16).
+
+The paper's exact decomposition is an N < D (low-data) story: past that
+ceiling the (N^2, N^2) inner matrix of the Woodbury/determinant-lemma
+path dominates everything.  This package is the escape:
+
+  policy.py     — analytic flop-model crossover between the exact and
+                  iterative paths + the window-capacity action policy
+                  ({evict, compress, iterate}); emits ``regime.*`` obs.
+  krylov.py     — matrix-free block-CG/Lanczos solves through the fused
+                  Gram MVM, warm-started and Cholesky-preconditioned;
+                  jaxpr-level structural proof of matrix-freeness.
+  slq.py        — stochastic Lanczos quadrature evidence + Hutchinson
+                  hyper-gradients (the MLL fit past the ceiling).
+  reduction.py  — exact gradient reduction onto the observed subspace
+                  (compression instead of eviction when the data's
+                  affine rank allows it).
+
+``solve`` below is the one-call regime dispatcher for batch solves;
+the incremental ``core.state.GPGState`` wires the same policy through
+its streaming extend/evict/refit loop.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from .krylov import (KrylovResult, assert_streaming_structure,
+                     lanczos_tridiag, posterior_solve)
+from .policy import CostModel, RegimePolicy, resolve_policy
+from .reduction import (Reduction, affine_rank, lift_gradients, lift_points,
+                        project_points, reduce_gradients, subspace_basis)
+from .slq import (DEFAULT_LANCZOS_ITERS, DEFAULT_PROBES, make_slq_mll_fn,
+                  slq_logdet_mv, slq_mll)
+
+__all__ = [
+    "CostModel", "RegimePolicy", "resolve_policy", "solve",
+    "KrylovResult", "posterior_solve", "lanczos_tridiag",
+    "assert_streaming_structure",
+    "slq_mll", "make_slq_mll_fn", "slq_logdet_mv",
+    "DEFAULT_PROBES", "DEFAULT_LANCZOS_ITERS",
+    "Reduction", "reduce_gradients", "affine_rank", "subspace_basis",
+    "project_points", "lift_gradients", "lift_points",
+]
+
+
+def solve(
+    spec,
+    f,
+    G,
+    *,
+    policy: Union[None, str, "RegimePolicy"] = None,
+    z0=None,
+    L=None,
+    tol: float = 1e-8,
+    maxiter: Optional[int] = None,
+    jitter: float = 1e-10,
+):
+    """Solve (grad K grad') vec(Z) = vec(G) on whichever path the policy
+    picks for this (N, D); returns (Z, info).
+
+    ``info`` carries {"regime", "iters", "resnorm"} (iters/resnorm are
+    None on the exact path — it is direct).  The factors' own ``noise``
+    rides through both paths identically.
+    """
+    n, d = f.Xt.shape
+    pol = resolve_policy(policy)
+    regime = pol.regime_for(n, d)
+    pol.publish(n, d, regime)
+    if regime == "exact":
+        from repro.core.woodbury import woodbury_solve
+
+        Z = woodbury_solve(spec, f, G, jitter=jitter)
+        return Z, {"regime": "exact", "iters": None, "resnorm": None}
+    res = posterior_solve(spec, f, G, z0=z0, L=L, tol=tol, maxiter=maxiter,
+                          jitter=jitter)
+    return res.Z, {"regime": "iterative", "iters": res.iters,
+                   "resnorm": res.resnorm}

@@ -1,0 +1,222 @@
+"""Matrix-free Krylov solves on the gradient Gram — the iterative regime.
+
+Past the crossover (``regime/policy.py``) the (N^2, N^2) inner matrix of
+the exact Woodbury path is the bottleneck; this module is the replacement
+solve layer.  Everything is driven through the existing fused Gram MVM
+megakernel (``core/mvm.py::gram_matvec`` — ONE ``backend.fused_gram_mvm``
+launch per operator application on the pallas backend):
+
+  * :func:`posterior_solve`  — preconditioned CG for the representers
+    ``(grad K grad' + noise I) vec(Z) = vec(G)``, warm-started from a
+    cached solution and preconditioned by the last exact Cholesky factor
+    of K1n when the caller has one (the incremental state always does),
+    falling back to the free Kronecker preconditioner otherwise.  Block
+    (stacked-RHS) right-hand sides ride the multi-RHS fused MVM.
+  * :func:`lanczos_tridiag`  — fixed-step Lanczos with full two-pass
+    reorthogonalization; the engine under ``regime/slq.py``'s stochastic
+    quadrature.
+  * :func:`assert_streaming_structure` — the N > D mirror image of
+    ``hyper.mll.assert_no_dense_gram``: traces a solve and proves at the
+    jaxpr level that no intermediate materializes the (ND, ND) Gram, the
+    (N^2, N^2) inner matrix, or any other dense N^2-axis object.
+
+Shapes never flatten to (ND,): vectors stay (N, D) arrays end to end
+(inner products via per-element contractions), which is what makes the
+structural bound below tight.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_solve
+
+from repro.core.gram import GramFactors
+from repro.core.mvm import gram_matvec, gram_matvec_multi
+from repro.core.solvers import CGResult, cg, _kron_precond_fn
+from repro.obs import injit as _obs_tap
+
+Array = jnp.ndarray
+
+_TINY = 1e-30
+
+
+class KrylovResult(NamedTuple):
+    """A posterior solve from the iterative regime."""
+
+    Z: Array          # representers, same shape as the RHS
+    iters: Array      # CG iterations actually taken
+    resnorm: Array    # final residual norm
+
+
+def _gram_mv(spec, f: GramFactors, noise) -> Callable[[Array], Array]:
+    """vec(V) -> (grad K grad' + noise I) vec(V), one fused launch.
+
+    ``noise`` already folded into ``f.noise`` is the common case (the
+    factors carry the effective noise); an explicit traced ``noise`` rides
+    outside as one axpy, mirroring ``core.state._solve``.
+    """
+    if noise is None:
+        return lambda V: gram_matvec(f, V, stationary=spec.is_stationary)
+    return lambda V: (gram_matvec(f, V, stationary=spec.is_stationary)
+                      + noise * V)
+
+
+def posterior_solve(
+    spec,
+    f: GramFactors,
+    rhs: Array,
+    *,
+    z0: Optional[Array] = None,
+    L: Optional[Array] = None,
+    noise=None,
+    tol: float = 1e-8,
+    maxiter: Optional[int] = None,
+    jitter: float = 1e-10,
+) -> KrylovResult:
+    """Matrix-free preconditioned CG for the representers.
+
+    ``L`` is the lower Cholesky of K1n = K1e + (noise_eff/lam) I — the
+    incremental state maintains it in O(N^2) per extend, and here it is
+    the preconditioner ``B^{-1} vec(V) = cho_solve(L, V)/lam`` (two
+    triangular sweeps per iteration; the paper's free Kronecker factor
+    applied through the cached factorization).  Without ``L`` the dense
+    Kronecker preconditioner of ``core.solvers`` is built once (O(N^3)).
+
+    ``rhs`` may be (N, D) or a stacked (R, N, D) block — the block solve
+    runs ONE multi-RHS fused MVM per iteration for all R systems.
+    Warm start ``z0`` defaults to zeros.  Per-iteration work is
+    O(N^2 D + N^2); nothing here carries an axis larger than max(N, D)
+    (proven by :func:`assert_streaming_structure`).
+    """
+    rhs = jnp.asarray(rhs)
+    n, d = rhs.shape[-2:]
+    if maxiter is None:
+        maxiter = 10 * n + 50
+    if rhs.ndim == 3:
+        mv = (lambda V: gram_matvec_multi(f, V,
+                                          stationary=spec.is_stationary))
+        if noise is not None:
+            base = mv
+            mv = lambda V: base(V) + noise * V
+    else:
+        mv = _gram_mv(spec, f, noise)
+    if L is not None:
+        lam = jnp.asarray(f.lam)
+        one = lambda V: cho_solve((L, True), V) / lam
+        M_inv = one if rhs.ndim == 2 else (lambda V: jax.vmap(one)(V))
+    else:
+        M_inv = _kron_precond_fn(f, n, rhs.dtype, jitter)
+    res: CGResult = cg(mv, rhs, x0=z0, tol=tol, maxiter=int(maxiter),
+                       M_inv=M_inv)
+    _obs_tap.tap("regime.cg_iters", res.iters, kind="hist")
+    _obs_tap.tap("regime.cg_resnorm", res.resnorm)
+    return KrylovResult(Z=res.x, iters=res.iters, resnorm=res.resnorm)
+
+
+# ---------------------------------------------------------------------------
+# Lanczos tridiagonalization (the SLQ engine)
+# ---------------------------------------------------------------------------
+
+
+def lanczos_tridiag(
+    mv: Callable[[Array], Array],
+    v0: Array,
+    m: int,
+) -> tuple[Array, Array, Array]:
+    """m-step Lanczos on the SPD operator ``mv``; returns (alpha, beta, |v0|).
+
+    ``alpha`` (m,) and ``beta`` (m-1,) are the tridiagonal coefficients of
+    T_m = Q^T A Q for the Krylov basis grown from ``v0``.  Full two-pass
+    reorthogonalization against the stored basis keeps the Ritz values
+    honest at the f32/f64 precision the caller runs at — the basis is
+    (m+1, N, D), so memory is m small multiples of the data itself and no
+    axis ever exceeds max(m+1, N, D).  Iterates stay in the operand's
+    natural (N, D) shape (never flattened to ND).
+    """
+    v0 = jnp.asarray(v0)
+    nrm = jnp.sqrt(jnp.sum(v0 * v0))
+    q0 = v0 / jnp.maximum(nrm, _TINY)
+    Q = jnp.zeros((m + 1,) + v0.shape, v0.dtype).at[0].set(q0)
+
+    def body(carry, i):
+        Q, beta_prev = carry
+        q = Q[i]
+        w = mv(q) - beta_prev * Q[jnp.maximum(i - 1, 0)] * (i > 0)
+        alpha = jnp.sum(q * w)
+        w = w - alpha * q
+        # two passes of classical Gram-Schmidt against the whole stored
+        # basis (rows > i are zero, so the extra projections are no-ops)
+        for _ in range(2):
+            coef = jnp.sum(Q * w, axis=tuple(range(1, w.ndim + 1)))
+            w = w - jnp.tensordot(coef, Q, axes=(0, 0))
+        beta = jnp.sqrt(jnp.sum(w * w))
+        q_next = w / jnp.maximum(beta, _TINY)
+        Q = Q.at[i + 1].set(q_next)
+        return (Q, beta), (alpha, beta)
+
+    (_, _), (alphas, betas) = jax.lax.scan(body, (Q, jnp.zeros((), v0.dtype)),
+                                           jnp.arange(m))
+    return alphas, betas[:-1], nrm
+
+
+# ---------------------------------------------------------------------------
+# Structural gate: the iterative path is matrix-free, provably
+# ---------------------------------------------------------------------------
+
+
+def assert_streaming_structure(
+    fn: Callable,
+    *args,
+    n: int,
+    d: int,
+    stack: int = 1,
+) -> tuple[int, int]:
+    """Trace ``fn(*args)`` and prove it never materializes a dense object.
+
+    Two bounds over every jaxpr variable (recursing into scan/cond/jit
+    sub-jaxprs):
+
+      * no single axis exceeds N*D — the (N^2, N^2) inner matrix carries
+        an N^2 axis, which is > ND exactly in the N > D regime this gate
+        serves (mirror image of ``assert_no_dense_gram``'s N < D
+        requirement);
+      * no variable exceeds ``max(stack, ceil(N/D) + 1) * N * D`` total
+        elements — the (ND, ND) Gram has (ND)^2 elements, astronomically
+        past the bound, while every legitimate object is a small stack of
+        (N, D) operands or an (N, N) strip: callers pass ``stack`` >=
+        their deepest stack (m+2 for an m-step Lanczos basis, the probe
+        count for SLQ; the default 1 fits a bare CG solve).
+
+    Raises ``hyper.mll.StructureError`` on violation, ``ValueError`` when
+    N <= D (the axis bound would not separate the inner matrix from the
+    Gram).  Returns (max_axis, max_size) actually seen.
+    """
+    from repro.hyper.mll import StructureError
+    from repro.utils.hlo import jaxpr_axis_sizes, jaxpr_var_sizes
+
+    n, d = int(n), int(d)
+    nd = n * d
+    if n <= d:
+        raise ValueError(
+            f"streaming structural check needs N > D to be meaningful "
+            f"(N={n}, D={d}: the forbidden N^2={n * n} inner axis must "
+            f"exceed ND={nd})")
+    closed = jax.make_jaxpr(fn)(*args)
+    dims = jaxpr_axis_sizes(closed.jaxpr)
+    sizes = jaxpr_var_sizes(closed.jaxpr)
+    max_axis = max(dims) if dims else 0
+    max_size = max(sizes) if sizes else 0
+    if max_axis > nd:
+        raise StructureError(
+            f"iterative-regime trace materialized an axis of size "
+            f"{max_axis} > N*D={nd} — the matrix-free path must never "
+            f"build the (N^2, N^2) inner operator")
+    budget = max(int(stack), (n + d - 1) // d + 1, 1) * nd
+    if max_size > budget:
+        raise StructureError(
+            f"iterative-regime trace materialized a variable of "
+            f"{max_size} elements > {budget} (stack={stack} x ND={nd}) — "
+            f"a dense Gram-sized object slipped into the jaxpr")
+    return max_axis, max_size

@@ -1,0 +1,228 @@
+"""Analytic cost-model regime selection: exact vs. iterative solve paths.
+
+The paper's exact decomposition (Sec. 3-4) routes every batch solve and
+the evidence through the (N^2, N^2) determinant-lemma inner matrix:
+
+    exact      O( c_sweep N^2 D  +  c_build N^4  +  c_factor N^6 )
+
+(the fused strip sweeps, materializing the inner operator from the
+strips, and its dense LU).  The matrix-free alternative iterates the
+fused Gram MVM (``core/mvm.py``) with the free Kronecker preconditioner:
+
+    iterative  O( iters * c_mvm N^2 D  +  c_chol N^3 )
+
+Both are *deterministic flop polynomials in (N, D)* — no measurement
+needed — so the crossover point N* where the iterative path becomes
+cheaper is a pure function of D and the planned iteration count.  That is
+the regime boundary: :class:`RegimePolicy` picks ``"exact"`` below it and
+``"iterative"`` at/above it, per state revision, and
+``tools/check_telemetry.py --expect-regime-switch-at N*`` asserts the
+live ``regime.switch`` events agree with the model exactly.
+
+The same policy object owns the *capacity action* — what a windowed
+``GPGState`` does when the window is full.  Window eviction (PR 3) is
+demoted from the only escape hatch to one policy among
+
+    'evict'     drop the oldest observation (the PR-3 sliding window)
+    'compress'  exact gradient reduction into the observed affine span
+                (``regime/reduction.py``) — lossless for in-span queries
+    'iterate'   stop enforcing the window; let N grow past the ceiling
+                and let the regime crossover absorb the cost
+
+with ``'auto'`` choosing: compress when the data's affine rank says the
+D axis is collapsible, otherwise iterate when the iterative path can
+absorb the growth, otherwise evict.
+
+Everything here is host-side python over static ints — policies never
+enter a jaxpr, so regime decisions can never cause a recompile by
+themselves (the solve-path shapes are what matter, and those are
+capacity-keyed, not regime-keyed; asserted in tests/test_regime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import NamedTuple, Optional, Union
+
+from repro.obs import trace as _obs
+
+
+class CostModel(NamedTuple):
+    """Flop-polynomial coefficients of the two solve paths.
+
+    The defaults are operation counts read off the implementations, not
+    tuned constants: one fused factor sweep touches each of the N^2 strip
+    entries with O(D) work (``backend.fused_factor_build``); the inner
+    operator is N^4 strip products (``hyper.mll.inner_matrix``); its LU
+    is the classic 2/3 (N^2)^3; one fused Gram MVM is ~6 flops per
+    (N, N, D) triple (two skinny matmuls + the Kronecker axpy); the
+    preconditioner's two triangular sweeps cost ~2 N^2 D per iteration.
+    """
+
+    sweep: float = 2.0       # exact: strip build, per N^2 D
+    build: float = 4.0       # exact: inner-operator materialize, per N^4
+    factor: float = 2.0 / 3.0  # exact: dense LU of (N^2, N^2), per N^6
+    mvm: float = 6.0         # iterative: fused Gram MVM, per N^2 D per iter
+    precond: float = 2.0     # iterative: Kronecker precond, per N^2 D per iter
+    chol: float = 1.0 / 3.0  # iterative: one N x N Cholesky, per N^3
+
+    def exact_flops(self, n: int, d: int) -> float:
+        n, d = float(n), float(d)
+        return (self.sweep * n * n * d + self.build * n ** 4
+                + self.factor * n ** 6)
+
+    def iterative_flops(self, n: int, d: int, iters: int) -> float:
+        n, d = float(n), float(d)
+        return (float(iters) * (self.mvm + self.precond) * n * n * d
+                + self.chol * n ** 3)
+
+    def iterative_hbm_bytes(self, n: int, d: int, iters: int,
+                            itemsize: int = 4) -> int:
+        """Modeled HBM traffic of one iterative solve: per iteration the
+        fused MVM streams 5 (N, D) operands plus the two (N, N) strips
+        (DESIGN.md sec. 4.3), and the preconditioner reads L (N, N) and
+        streams V in/out (2 ND)."""
+        per_iter = (5 * n * d + 2 * n * n) + (n * n + 2 * n * d)
+        return int(iters) * int(per_iter) * int(itemsize)
+
+
+@lru_cache(maxsize=256)
+def _crossover_n(cost: CostModel, d: int, iters: int, n_max: int) -> int:
+    """Smallest N where the iterative path is modeled cheaper than exact.
+
+    The difference exact - iterative is a polynomial whose N^6 term
+    eventually dominates, so a single upward scan finds the first (and
+    by monotonicity-at-scale, permanent) crossing; ``n_max`` bounds the
+    scan and is returned when the exact path never loses (tiny D with
+    huge planned iteration counts).
+    """
+    for n in range(1, int(n_max) + 1):
+        if cost.iterative_flops(n, d, iters) < cost.exact_flops(n, d):
+            return n
+    return int(n_max)
+
+
+_CAPACITY_ACTIONS = ("evict", "compress", "iterate", "auto")
+_MODES = ("auto", "exact", "iterative")
+
+
+@dataclasses.dataclass(frozen=True)
+class RegimePolicy:
+    """Which solve path, and what to do when a window fills.
+
+    ``mode``            'auto' (cost-model crossover) or a forced regime.
+    ``capacity``        'evict' | 'compress' | 'iterate' | 'auto'.
+    ``planned_iters``   the iteration budget the cost model charges the
+                        iterative path with (NOT a solver limit — solver
+                        limits live on ``GPGState.tol/maxiter``).  Static
+                        so the crossover is deterministic and auditable.
+    ``compress_margin`` 'compress' fires only when the affine rank of the
+                        stored data is <= margin * min(n, d) — compression
+                        must actually shrink the problem to be worth a
+                        refactor.
+    ``n_max``           crossover-scan ceiling (the crossover for any
+                        realistic (D, iters) is far below it).
+    """
+
+    mode: str = "auto"
+    capacity: str = "evict"
+    cost: CostModel = CostModel()
+    planned_iters: int = 32
+    compress_margin: float = 0.75
+    n_max: int = 4096
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}: {self.mode!r}")
+        if self.capacity not in _CAPACITY_ACTIONS:
+            raise ValueError(
+                f"capacity must be one of {_CAPACITY_ACTIONS}: "
+                f"{self.capacity!r}")
+
+    # -- the crossover ------------------------------------------------------
+
+    def crossover_n(self, d: int) -> int:
+        """The modeled regime boundary N*(D): exact below, iterative at/
+        above.  Deterministic (pure flop model) — this exact value is what
+        telemetry asserts the live switch events fire at."""
+        return _crossover_n(self.cost, int(d), int(self.planned_iters),
+                            self.n_max)
+
+    def regime_for(self, n: int, d: int) -> str:
+        """'exact' | 'iterative' for a state holding n observations."""
+        if self.mode != "auto":
+            return self.mode
+        return "iterative" if int(n) >= self.crossover_n(d) else "exact"
+
+    # -- capacity action ----------------------------------------------------
+
+    def capacity_action(self, n: int, d: int,
+                        rank: Optional[int] = None) -> str:
+        """Resolve what a full window should do ('evict' | 'compress' |
+        'iterate').  ``rank`` is the affine rank of the stored data when
+        the caller has it (``regime.reduction.affine_rank``); without it,
+        'auto' never compresses (rather than guessing)."""
+        act = self.capacity
+        if act != "auto":
+            if act == "compress" and not self._compressible(n, d, rank):
+                return "evict"      # nothing to fold away: degrade safely
+            return act
+        if self._compressible(n, d, rank):
+            return "compress"
+        # growth is absorbable when the iterative path's marginal cost at
+        # n+1 beats the exact path's (i.e. we are at/past the crossover,
+        # where appending is cheaper than the information loss of evicting)
+        if int(n) + 1 >= self.crossover_n(d):
+            return "iterate"
+        return "evict"
+
+    def _compressible(self, n: int, d: int, rank: Optional[int]) -> bool:
+        if rank is None:
+            return False
+        return int(rank) <= self.compress_margin * min(int(n), int(d))
+
+    # -- observability ------------------------------------------------------
+
+    def publish(self, n: int, d: int, regime: str, *,
+                prev: Optional[str] = None) -> None:
+        """Export ``regime.*`` gauges (and a switch event when ``prev``
+        differs).  Host-side, obs-gated — free when observability is off."""
+        if not _obs.enabled():
+            return
+        xover = self.crossover_n(d) if self.mode == "auto" else -1
+        _obs.REGISTRY.set_gauge("regime.active",
+                                1.0 if regime == "iterative" else 0.0)
+        _obs.REGISTRY.set_gauge("regime.crossover_n", float(xover))
+        if prev is not None and prev != regime:
+            _obs.REGISTRY.inc("regime.switches")
+            _obs.emit({"type": "regime", "event": "switch", "n": int(n),
+                       "d": int(d), "from": prev, "to": regime,
+                       "crossover_n": int(xover)})
+
+
+def resolve_policy(
+    policy: Union[None, str, RegimePolicy],
+    *,
+    window: Optional[int] = None,
+) -> RegimePolicy:
+    """Normalize the ``GPGState(policy=...)`` knob.
+
+    ``None`` keeps the PR-3 behavior (windowed states evict; unwindowed
+    states grow). A string names either a capacity action ('evict' /
+    'compress' / 'iterate' / 'auto') or a forced regime ('exact' /
+    'iterative'); a :class:`RegimePolicy` passes through untouched.
+    """
+    if isinstance(policy, RegimePolicy):
+        return policy
+    if policy is None:
+        return RegimePolicy(capacity="evict" if window else "iterate")
+    if isinstance(policy, str):
+        if policy in _CAPACITY_ACTIONS:
+            return RegimePolicy(capacity=policy)
+        if policy in ("exact", "iterative"):
+            return RegimePolicy(mode=policy,
+                                capacity="evict" if window else "iterate")
+        raise ValueError(
+            f"unknown policy {policy!r}: expected one of "
+            f"{_CAPACITY_ACTIONS + ('exact', 'iterative')} or a RegimePolicy")
+    raise TypeError(f"policy must be None, str or RegimePolicy: {policy!r}")

@@ -1,0 +1,172 @@
+"""Exact gradient reduction: fold full gradients into directional ones.
+
+The compression escape hatch of the capacity policy (Seung & Katzfuss,
+"Scalable Derivative Gaussian Processes via Exact Gradient Reduction",
+PAPERS.md): when the observed inputs occupy a low-dimensional affine
+subspace of R^D — always true with N <= D+1 observations, and typical of
+optimizer trajectories — the gradient GP factorizes exactly across that
+subspace and its orthogonal complement, so full D-vector gradient
+observations can be *folded into k directional derivatives each* without
+changing any in-span prediction.
+
+The theorem this module implements (isotropic Lambda = lam I; both kernel
+families of ``core/kernels.py``):
+
+  Let B be an orthonormal basis (D, k) of span{x_i - b} (stationary
+  kernels; b any base point — differences are all that enter r) or
+  span{x_i - c} (dot kernels; c the kernel center).  Rotate each gradient
+  observation into B (+) B_perp.  Then
+
+    * cov( d_u f(x_i), f(x_j) )        = 0      for u in B_perp
+    * cov( d_u f(x_i), d_v f(x_j) )    = 0      for u in B_perp, v in B
+
+  because every covariance term carries either u^T v or (x_i - x_j)^T u
+  (stationary) / x~_j^T u (dot), all zero.  The orthogonal components
+  {B_perp^T g_i} are therefore prior-independent of the in-span data AND
+  of every in-span predictand, so dropping them leaves the posterior of
+  f(q) and of B-span directional derivatives at any in-span query q
+  EXACTLY unchanged.  (Out-of-span gradient components at q lose their
+  posterior coupling to the dropped block — the one quantity compression
+  forfeits; its magnitude is exactly the ``residual`` this module
+  reports.)
+
+  Moreover the reduced problem is *the same model in k dimensions*: with
+  y_i = B^T (x_i - b), the projected pairwise geometry is preserved
+  (differences/centered coordinates lie in span(B)), the projected
+  iid noise stays iid, and the k-dimensional gradient-GP Gram of
+  (y_i, B^T g_i) equals the in-span block of the original Gram.  So the
+  compressed state is just a ``GPGState`` over (N, k) — every solver,
+  kernel, bench and serving path applies unchanged at O(N^2 k) instead
+  of O(N^2 D) per sweep.
+
+Host-side linear algebra (one SVD of the (N, D) inputs per compression);
+nothing here enters a jaxpr.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class Reduction(NamedTuple):
+    """An exact-gradient-reduction of (X, G) onto the observed subspace.
+
+    basis:    (D, k) orthonormal columns spanning the data subspace.
+    base:     (D,) the subtraction point (first observation for stationary
+              kernels, the kernel center for dot kernels).
+    Xr, Gr:   (N, k) reduced inputs / directional-derivative observations.
+    residual: Frobenius norm of the dropped orthogonal gradient mass
+              |G - Gr B^T|_F — the exactly-quantified information loss
+              for OUT-of-span gradient predictands (zero for everything
+              the theorem covers).
+    """
+
+    basis: Array
+    base: Array
+    Xr: Array
+    Gr: Array
+    residual: Array
+
+    @property
+    def rank(self) -> int:
+        return self.basis.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.basis.shape[0]
+
+
+def subspace_basis(X: Array, *, base: Optional[Array] = None,
+                   tol: float = 1e-8) -> tuple[Array, Array]:
+    """Orthonormal basis of span{x_i - base} via one SVD; returns (B, base).
+
+    ``base=None`` uses the first row (the stationary-kernel choice — only
+    differences matter, and x_0 keeps the span affine-correct).  Rank is
+    cut at ``tol * s_max`` — directions the data only explores at
+    roundoff level are noise, not geometry.
+    """
+    X = jnp.atleast_2d(X)
+    if base is None:
+        base = X[0]
+    base = jnp.asarray(base, X.dtype)
+    Xc = X - base
+    _, s, vt = jnp.linalg.svd(Xc, full_matrices=False)
+    smax = s[0] if s.shape[0] else jnp.asarray(0.0, X.dtype)
+    k = int(jnp.sum(s > tol * jnp.maximum(smax, 1e-30)))
+    k = max(k, 1)
+    return vt[:k].T, base
+
+
+def affine_rank(X: Array, *, base: Optional[Array] = None,
+                tol: float = 1e-8) -> int:
+    """Numerical rank of the observed subspace — what the capacity policy
+    feeds ``RegimePolicy.capacity_action`` to decide compressibility."""
+    B, _ = subspace_basis(X, base=base, tol=tol)
+    return B.shape[1]
+
+
+def reduce_gradients(
+    spec,
+    X: Array,
+    G: Array,
+    *,
+    c: Optional[Array] = None,
+    extra_points: Optional[Array] = None,
+    tol: float = 1e-8,
+) -> Reduction:
+    """Build the exact reduction of (X, G) for kernel ``spec``.
+
+    ``c`` is the dot-kernel center (the base point must be the center for
+    dot kernels: their r depends on absolute centered coordinates, not
+    differences).  ``extra_points`` fold expected query locations into the
+    span so upcoming queries stay exactly covered (e.g. an optimizer's
+    current iterate).
+    """
+    X = jnp.atleast_2d(X)
+    G = jnp.asarray(G)
+    if spec.is_stationary:
+        base = None
+    else:
+        base = (jnp.zeros((X.shape[1],), X.dtype) if c is None
+                else jnp.asarray(c, X.dtype))
+    span_of = X if extra_points is None else jnp.concatenate(
+        [X, jnp.atleast_2d(extra_points)], axis=0)
+    B, base = subspace_basis(span_of, base=base, tol=tol)
+    Xr = (X - base) @ B
+    Gr = G @ B
+    residual = jnp.linalg.norm(G - Gr @ B.T)
+    return Reduction(basis=B, base=base, Xr=Xr, Gr=Gr, residual=residual)
+
+
+def project_points(red: Reduction, Xq: Array) -> tuple[Array, Array]:
+    """Project queries into the reduced frame; returns (Yq, out_of_span).
+
+    ``out_of_span`` is the per-query norm of the component outside the
+    basis — zero is the exactness condition; nonzero queries are served
+    from the nearest in-span point (value error bounded by the kernel's
+    smoothness over that distance, reported so callers/telemetry can see
+    it rather than silently absorbing it).
+    """
+    Xq = jnp.atleast_2d(Xq)
+    Yc = Xq - red.base
+    Yq = Yc @ red.basis
+    out = jnp.linalg.norm(Yc - Yq @ red.basis.T, axis=1)
+    return Yq, out
+
+
+def lift_gradients(red: Reduction, Gr: Array) -> Array:
+    """Map reduced-frame gradients (Q, k) back to R^D as (Q, D).
+
+    The orthogonal components are the prior mean (zero): exactly the
+    posterior the compressed model defines.  In-span components are the
+    full model's exact posterior (the theorem above).
+    """
+    return jnp.asarray(Gr) @ red.basis.T
+
+
+def lift_points(red: Reduction, Yq: Array) -> Array:
+    """Inverse of :func:`project_points` for in-span points."""
+    return jnp.asarray(Yq) @ red.basis.T + red.base

@@ -1,0 +1,224 @@
+"""Stochastic Lanczos quadrature evidence — MLL past the exact ceiling.
+
+The exact structured MLL (``hyper/mll.py``) pays O((N^2)^3) for the
+determinant-lemma inner matrix; past the regime crossover that is the
+bottleneck.  This module replaces it with the classic SLQ estimator
+(Ubaru, Chen & Saad 2017) driven entirely through the fused Gram MVM:
+
+    logdet K'  ~  (1/P) sum_p  |v_p|^2  e_1^T log(T_p) e_1,
+
+where K' = grad K grad' + noise_eff I is the UNSCALED noisy Gram,
+v_p are Rademacher probes (shape (N, D) — never flattened), and T_p is
+the m-step Lanczos tridiagonalization of K' started at v_p
+(``regime/krylov.py::lanczos_tridiag``).  The signal variance re-enters
+through the same scaling identity as the exact path:
+
+    logdet K = ND log s^2 + logdet K',      quad = quad' / s^2,
+
+with quad' = vec(G)^T K'^{-1} vec(G) from one preconditioned CG solve.
+Cost: P Lanczos runs of m fused MVMs each + one CG solve — O(P m N^2 D)
+versus the exact path's O(N^6), and O(m N D) memory.
+
+Hyper-gradients do NOT differentiate through Lanczos (unstable and
+pointless).  :func:`make_slq_mll_fn` wires a ``jax.custom_vjp`` whose
+backward pass is the Hutchinson trace estimator sharing the forward
+pass's probes and solves:
+
+    d mll / d theta = -1/2 ( -alpha^T dK alpha + tr(K^{-1} dK) ),
+    tr(K^{-1} dK)  ~  (1/P) sum_p u_p^T dK v_p,   u_p = K^{-1} v_p,
+
+implemented as the exact gradient of the surrogate
+``-1/2 (-alpha^T K(theta) alpha + (1/P) sum_p u_p^T K(theta) v_p)`` with
+alpha and u_p held constant — the standard estimator of GPyTorch-style
+iterative GP inference, here on the structured (never materialized) Gram.
+Probes are FIXED by the caller's PRNG key, so the estimator is
+deterministic given (key, P, m) and smooth across fit steps.
+
+Everything runs under the jnp backend (reverse-mode differentiability;
+the pallas kernels are forward-only), mirroring ``hyper.mll.mll``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend
+from repro.core.gram import build_factors
+from repro.core.kernels import KernelSpec, get_kernel
+from repro.core.mvm import gram_matvec
+from repro.core.solvers import cg
+from repro.hyper.params import LOG2PI, HyperParams
+from repro.obs import injit as _obs_tap
+
+Array = jnp.ndarray
+
+#: Defaults chosen so the N=96, D=32 bench lands well inside the 1%-of-
+#: oracle gate (BENCH_regime.json); bump for smaller noise floors.
+DEFAULT_PROBES = 8
+DEFAULT_LANCZOS_ITERS = 48
+
+
+def _as_spec(kernel) -> KernelSpec:
+    return get_kernel(kernel) if isinstance(kernel, str) else kernel
+
+
+def rademacher_probes(key, shape, dtype) -> Array:
+    """+-1 probe block of ``shape`` — E[v v^T] = I, the Hutchinson choice
+    with minimal variance among +-1 distributions."""
+    return jnp.asarray(
+        jax.random.rademacher(key, shape, dtype=jnp.int8), dtype)
+
+
+def slq_logdet_mv(mv, probes: Array, lanczos_iters: int) -> Array:
+    """SLQ logdet of the SPD operator ``mv`` from a (P, ...) probe stack.
+
+    Per probe: m Lanczos steps (full reorthogonalization), an (m, m)
+    symmetric tridiagonal eigendecomposition, and the Gauss-quadrature
+    weights |W[0, :]|^2 — the first-row eigenvector mass — against
+    log(eigenvalues).  Eigenvalues are clamped at a tiny floor: K' is
+    SPD by construction (noise_eff > 0), so a nonpositive Ritz value is
+    roundoff, not signal.
+    """
+    from .krylov import lanczos_tridiag
+
+    m = int(lanczos_iters)
+
+    def one(v):
+        alpha, beta, nrm = lanczos_tridiag(mv, v, m)
+        T = (jnp.diag(alpha) + jnp.diag(beta, 1) + jnp.diag(beta, -1))
+        theta, W = jnp.linalg.eigh(T)
+        weights = W[0, :] ** 2
+        return nrm * nrm * jnp.sum(
+            weights * jnp.log(jnp.maximum(theta, 1e-30)))
+
+    ests = jax.vmap(one)(probes)
+    _obs_tap.tap("slq.probes", probes.shape[0], kind="counter")
+    _obs_tap.tap("slq.lanczos_iters", m, kind="hist")
+    return jnp.mean(ests)
+
+
+def _unscaled_mv(spec, X, lam, noise_eff, c):
+    """W -> (grad K grad'(lam) + noise_eff I) W through the fused MVM."""
+    f = build_factors(spec, X, lam=lam, c=c)
+    return (lambda W: gram_matvec(f, W, stationary=spec.is_stationary)
+            + noise_eff * W), f
+
+
+def _kron_precond(f, noise_eff, n, dtype):
+    """The free Kronecker preconditioner of the unscaled noisy system."""
+    K1 = f.K1e + (noise_eff / jnp.asarray(f.lam) + 1e-12) * jnp.eye(
+        n, dtype=dtype)
+    K1i = jnp.linalg.inv(K1)
+    return lambda V: backend.kron_precond(K1i, V, f.lam)
+
+
+def make_slq_mll_fn(
+    kernel,
+    X: Array,
+    G: Array,
+    *,
+    key=None,
+    probes: int = DEFAULT_PROBES,
+    lanczos_iters: int = DEFAULT_LANCZOS_ITERS,
+    cg_tol: float = 1e-10,
+    cg_maxiter: Optional[int] = None,
+    c: Optional[Array] = None,
+):
+    """hypers -> SLQ mll closure with Hutchinson hyper-gradients.
+
+    Drop-in for ``hyper.mll.make_mll_fn`` where the exact inner matrix is
+    unaffordable: ``jax.grad`` of the returned closure is the Hutchinson
+    gradient estimator described in the module docstring, safe under jit
+    and inside ``hyper.fit.fit_fn`` / ``fit_scan_fn``.  The probe block is
+    drawn ONCE from ``key`` (default: key 0) and reused by every call —
+    deterministic, and what keeps the fit trajectory smooth.
+    """
+    spec = _as_spec(kernel)
+    X = jnp.asarray(X)
+    G = jnp.asarray(G)
+    n, d = X.shape
+    nd = n * d
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    V = rademacher_probes(key, (int(probes), n, d), X.dtype)
+    maxiter = int(cg_maxiter) if cg_maxiter is not None else 10 * n + 50
+
+    def _solves(h: HyperParams):
+        """Forward-pass work: SLQ logdet + the CG solves both passes share.
+
+        Runs on stop-gradient hypers — the value is exact in them, and the
+        backward pass differentiates the surrogate instead.
+        """
+        lam = jax.lax.stop_gradient(h.lam)
+        ne = jax.lax.stop_gradient(h.noise_eff)
+        with backend.use_backend("jnp"):
+            mv, f = _unscaled_mv(spec, X, lam, ne, c)
+            M_inv = _kron_precond(f, ne, n, X.dtype)
+            ld_u = slq_logdet_mv(mv, V, lanczos_iters)
+            alpha_u = cg(mv, G, tol=cg_tol, maxiter=maxiter, M_inv=M_inv).x
+            U_u = jax.vmap(
+                lambda b: cg(mv, b, tol=cg_tol, maxiter=maxiter,
+                             M_inv=M_inv).x)(V)
+        return ld_u, alpha_u, U_u
+
+    def _value(h: HyperParams, ld_u, alpha_u):
+        quad = jnp.sum(G * alpha_u) / h.signal
+        logdet = nd * h.log_signal + ld_u
+        return -0.5 * (quad + logdet + nd * LOG2PI)
+
+    @jax.custom_vjp
+    def mll_slq(h: HyperParams):
+        ld_u, alpha_u, _ = _solves(h)
+        return _value(h, ld_u, alpha_u)
+
+    def fwd(h):
+        ld_u, alpha_u, U_u = _solves(h)
+        return _value(h, ld_u, alpha_u), (h, alpha_u, U_u)
+
+    def bwd(res, ct):
+        h, alpha_u, U_u = res
+        # constants of the surrogate: alpha = K^{-1} g and u_p = K^{-1} v_p
+        # in the SCALED system K = s^2 K' (so /signal), gradients stopped
+        sig = jax.lax.stop_gradient(h.signal)
+        alpha = jax.lax.stop_gradient(alpha_u) / sig
+        U = jax.lax.stop_gradient(U_u) / sig
+
+        def surrogate(hh: HyperParams):
+            with backend.use_backend("jnp"):
+                f = build_factors(spec, X, lam=hh.lam, c=c)
+                mv = lambda W: (
+                    hh.signal
+                    * gram_matvec(f, W, stationary=spec.is_stationary)
+                    + hh.noise * W)
+                t_quad = -jnp.sum(alpha * mv(alpha))
+                t_tr = jnp.mean(jax.vmap(
+                    lambda u, v: jnp.sum(u * mv(v)))(U, V))
+            return -0.5 * (t_quad + t_tr)
+
+        g = jax.grad(surrogate)(res[0])
+        return (jax.tree_util.tree_map(lambda x: ct * x, g),)
+
+    mll_slq.defvjp(fwd, bwd)
+    return mll_slq
+
+
+def slq_mll(
+    kernel,
+    X: Array,
+    G: Array,
+    hypers: HyperParams,
+    *,
+    key=None,
+    probes: int = DEFAULT_PROBES,
+    lanczos_iters: int = DEFAULT_LANCZOS_ITERS,
+    cg_tol: float = 1e-10,
+    cg_maxiter: Optional[int] = None,
+    c: Optional[Array] = None,
+) -> Array:
+    """One-shot SLQ evidence value (see :func:`make_slq_mll_fn`)."""
+    fn = make_slq_mll_fn(kernel, X, G, key=key, probes=probes,
+                         lanczos_iters=lanczos_iters, cg_tol=cg_tol,
+                         cg_maxiter=cg_maxiter, c=c)
+    return fn(hypers)

@@ -286,7 +286,10 @@ def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
     defaults for ``microbatch`` and ``precision``; an explicit
     ``precision`` (or config) of 'bf16' switches the STATE's stream
     storage to bf16 — the per-revision bf16 copies live on the state, so
-    every consumer of ``state.stream_factors`` shares them.
+    every consumer of ``state.stream_factors`` shares them.  When a
+    config is passed, its ``tol``/``maxiter`` solve knobs are applied to
+    the state too (they shape the extend-time CG re-solves this bundle's
+    queries are served from).
     """
     from repro.configs.paper_gp import GP_SERVE
     from repro.core.query import make_query_fn
@@ -295,6 +298,9 @@ def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
         precision = config.precision
     if microbatch is None:
         microbatch = (config or GP_SERVE).microbatch
+    if config is not None:
+        state.tol = float(config.tol)
+        state.maxiter = config.maxiter
     if precision is not None:
         # precision lives on the STATE (shared by every bundle/consumer);
         # an explicit request here re-points all of them — see

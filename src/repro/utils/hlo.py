@@ -186,3 +186,48 @@ def count_psums(closed_jaxpr) -> int:
     every alternative.
     """
     return count_primitive(closed_jaxpr.jaxpr, "psum")
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr shape census: axis/size bounds for structural never-dense gates
+# ---------------------------------------------------------------------------
+
+
+def jaxpr_axis_sizes(jaxpr) -> list:
+    """Every integer axis size appearing on any var of ``jaxpr`` (recursing
+    into sub-jaxprs).  The census behind the structural never-dense gates:
+    ``hyper.mll.assert_no_dense_gram`` (exact regime, N < D) and
+    ``regime.krylov.assert_streaming_structure`` (iterative regime, N > D).
+    """
+    dims: list = []
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            shape = getattr(getattr(v, "aval", None), "shape", ())
+            dims.extend(int(s) for s in shape if isinstance(s, int))
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (tuple, list)) else (val,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    dims.extend(jaxpr_axis_sizes(inner))
+    return dims
+
+
+def jaxpr_var_sizes(jaxpr) -> list:
+    """Total element count of every var of ``jaxpr`` (recursing into
+    sub-jaxprs).  Catches square dense objects whose individual axes are
+    individually legal — an (ND, ND) matrix has axis ND (same as a mere
+    vec flattening) but ND^2 elements."""
+    import math as _math
+
+    sizes: list = []
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            shape = getattr(getattr(v, "aval", None), "shape", ())
+            if all(isinstance(s, int) for s in shape):
+                sizes.append(int(_math.prod(shape)) if shape else 1)
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (tuple, list)) else (val,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    sizes.extend(jaxpr_var_sizes(inner))
+    return sizes

@@ -164,6 +164,94 @@ def check_single_trajectory(kname: str, d: int, cap: int, seed: int,
 
 
 # ---------------------------------------------------------------------------
+# Regime-crossover trajectory (host GPGState) vs dense from-scratch oracle
+# ---------------------------------------------------------------------------
+
+
+def gen_regime_ops(seed: int, n_ops: int) -> list:
+    """Extend-biased op tape for the crossover fuzz (payload sub-seeds)."""
+    rnd = np.random.RandomState(seed)
+    return [(["extend", "extend", "extend", "query", "evict",
+              "refit"][rnd.randint(6)], int(rnd.randint(2**31 - 1)))
+            for _ in range(n_ops)]
+
+
+def check_regime_trajectory(kname: str, d: int, seed: int, n_ops: int = 6,
+                            noise: float = 1e-6, lam: float = 0.7,
+                            policy: str = "auto") -> None:
+    """Stream a policy-driven ``GPGState`` across the exact->iterative
+    crossover — fill past BOTH the N >= D ceiling and the cost-model
+    boundary, then a random extend/evict/refit/query tail — checking Z
+    and posterior queries against dense from-scratch oracles after EVERY
+    op, in BOTH regimes.  The window sits AT the crossover, so the
+    capacity action ('iterate' under 'auto' for full-rank draws — the
+    window lift) fires mid-trajectory too."""
+    from repro.core.state import GPGState
+    from repro.regime.policy import resolve_policy
+
+    spec = get_kernel(kname)
+    xover = resolve_policy(policy).crossover_n(d)
+    window = max(d + 1, xover)
+    st = GPGState(kname, d=d, window=window, lam=lam, noise=noise,
+                  policy=policy)
+    qfn = make_query_fn(spec)
+    regimes_seen = set()
+    rnd = np.random.RandomState(seed)
+    fill = max(d + 2, window + 2)
+    tape = [("extend", int(rnd.randint(2**31 - 1))) for _ in range(fill)]
+    tape += gen_regime_ops(seed + 1, n_ops)
+
+    def oracle_check(step: int, op: str, sub: int) -> None:
+        n = st.n
+        if n == 0:
+            return
+        regimes_seen.add(st.regime)
+        ctx = (f"seed={seed} kernel={kname} d={d} step={step} op={op} "
+               f"n={n} regime={st.regime}")
+        lam_now = st.data.lam
+        Z_oracle = dense_solve(spec, st.X, st.G, lam=lam_now,
+                               noise=st._noise_eff, jitter=0.0)
+        scale = max(1.0, float(jnp.max(jnp.abs(Z_oracle))))
+        err = float(jnp.max(jnp.abs(st.Z - Z_oracle)))
+        assert err <= TOL * scale, \
+            f"Z vs dense oracle err={err:.3e} scale={scale:.1e} [{ctx}]"
+        if op == "query":
+            r = np.random.RandomState(sub)
+            Xq = jnp.asarray(r.randn(3, d))
+            got = st.posterior(Xq)
+            # the query oracle contracts the DENSE-solve representers
+            # (already certified above) through a from-scratch factor
+            # rebuild — at n > d a woodbury re-solve would add its own
+            # near-singular error on top of the quantity under test
+            f0 = build_factors(spec, st.X, lam=lam_now,
+                               noise=st._noise_eff)
+            want = qfn(f0, Z_oracle, Xq)
+            qerr = max(float(jnp.max(jnp.abs(got.value - want.value))),
+                       float(jnp.max(jnp.abs(got.grad - want.grad))))
+            assert qerr <= TOL * scale, \
+                f"posterior vs rebuilt oracle err={qerr:.3e} [{ctx}]"
+
+    for step, (op, sub) in enumerate(tape):
+        r = np.random.RandomState(sub)
+        if op == "extend":
+            st.extend(r.randn(d), r.randn(d))
+        elif op == "evict":
+            if st.n > 1:
+                st.evict()
+        elif op == "refit":
+            if st.n >= 2:
+                # exact evidence keeps the oracle tight in both regimes;
+                # the SLQ estimator path has its own gates
+                # (tests/test_regime.py, BENCH_regime.json)
+                st.refit(steps=2, method="exact")
+        oracle_check(step, op, sub)
+
+    assert regimes_seen == {"exact", "iterative"}, (
+        f"trajectory never crossed: saw {regimes_seen} "
+        f"(seed={seed} kernel={kname} d={d} crossover={xover})")
+
+
+# ---------------------------------------------------------------------------
 # Fleet (vmapped) trajectory vs per-tenant host loop
 # ---------------------------------------------------------------------------
 

@@ -19,7 +19,7 @@ from hypothesis import given, settings, strategies as st
 
 from conftest import arr as _arr
 from fuzz_machine import (FUZZ_KERNELS, check_fleet_vs_loop,
-                          check_single_trajectory)
+                          check_regime_trajectory, check_single_trajectory)
 from repro.core import (build_factors, dense_gram, get_kernel, gram_matvec,
                         l_op, lt_op, woodbury_solve)
 from repro.utils.flat import flatten_pytree, make_flat_spec, unflatten_pytree
@@ -129,6 +129,18 @@ def test_fuzz_fleet_matches_host_loop(kname, d, window, seed):
     """The vmapped fleet trajectory == the same random op interleaving
     driven per tenant through the plain primitives (<= 1e-5 rel)."""
     check_fleet_vs_loop(kname, d, window, seed, steps=5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(kname=st.sampled_from(FUZZ_KERNELS), d=st.integers(3, 5),
+       seed=st.integers(0, 2**31 - 1))
+def test_fuzz_regime_crossover_vs_dense_oracle(kname, d, seed):
+    """Policy-driven trajectories streamed across the exact->iterative
+    crossover (fill past N >= D and the cost-model boundary, then random
+    extend/evict/refit/query), dense-oracle-checked after EVERY op in
+    BOTH regimes (<= 1e-5 rel; regime dispatch must be invisible to the
+    posterior)."""
+    check_regime_trajectory(kname, d, seed)
 
 
 @settings(max_examples=15, deadline=None)

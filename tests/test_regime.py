@@ -1,0 +1,352 @@
+"""repro.regime: cost-model crossover policy, matrix-free Krylov posterior,
+SLQ evidence + Hutchinson hyper-gradients, exact gradient reduction, and
+the GPGState wiring (capacity actions, evidence dispatch, telemetry,
+compile stability across the regime switch)."""
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.core import build_factors, dense_solve, get_kernel
+from repro.core.gram import dense_gram
+from repro.core.state import GPGState, _default_maxiter, gpg_init
+from repro.hyper import HyperParams, mll, mll_dense
+from repro.hyper.mll import StructureError
+from repro.obs import compile_watch
+from repro.obs import trace as obs
+from repro.regime import (RegimePolicy, assert_streaming_structure,
+                          lanczos_tridiag, lift_gradients, posterior_solve,
+                          project_points, reduce_gradients, resolve_policy,
+                          slq_mll, solve)
+from repro.regime.slq import make_slq_mll_fn
+from repro.train.serve import build_gp_serve_step
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.reset()
+    obs.configure(None)
+    compile_watch._WATCHES.clear()
+    yield
+    obs.reset()
+    obs.configure(None)
+    obs.set_enabled(None)
+    compile_watch._WATCHES.clear()
+
+
+def _data(n, d, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, d)), jnp.asarray(rng.randn(n, d))
+
+
+# ---------------------------------------------------------------------------
+# policy: the analytic crossover + capacity actions
+# ---------------------------------------------------------------------------
+
+def test_crossover_is_deterministic_and_bounded():
+    pol = RegimePolicy()
+    for d in (2, 8, 32, 128):
+        x = pol.crossover_n(d)
+        assert 1 < x < pol.n_max
+        assert x == pol.crossover_n(d)          # pure function of (cost, d)
+        # the boundary is exactly where the flop polynomials cross
+        assert pol.cost.iterative_flops(x, d, pol.planned_iters) \
+            < pol.cost.exact_flops(x, d)
+        assert pol.cost.iterative_flops(x - 1, d, pol.planned_iters) \
+            >= pol.cost.exact_flops(x - 1, d)
+
+
+def test_regime_for_modes():
+    pol = RegimePolicy()
+    x = pol.crossover_n(16)
+    assert pol.regime_for(x - 1, 16) == "exact"
+    assert pol.regime_for(x, 16) == "iterative"
+    assert RegimePolicy(mode="exact").regime_for(10**6, 2) == "exact"
+    assert RegimePolicy(mode="iterative").regime_for(1, 10**6) == "iterative"
+
+
+def test_capacity_action_semantics():
+    pol = RegimePolicy(capacity="auto")
+    x = pol.crossover_n(16)
+    # compressible rank -> compress; unknown rank never auto-compresses
+    assert pol.capacity_action(20, 16, rank=4) == "compress"
+    assert pol.capacity_action(x, 16, rank=None) == "iterate"
+    assert pol.capacity_action(2, 16, rank=None) == "evict"
+    # explicit compress degrades to evict when the data is incompressible
+    assert RegimePolicy(capacity="compress").capacity_action(
+        20, 16, rank=16) == "evict"
+    assert RegimePolicy(capacity="compress").capacity_action(
+        20, 16, rank=3) == "compress"
+
+
+def test_resolve_policy_knob():
+    assert resolve_policy(None, window=8).capacity == "evict"
+    assert resolve_policy(None, window=None).capacity == "iterate"
+    assert resolve_policy("compress").capacity == "compress"
+    assert resolve_policy("iterative").mode == "iterative"
+    pol = RegimePolicy(planned_iters=64)
+    assert resolve_policy(pol) is pol
+    with pytest.raises(ValueError):
+        resolve_policy("bogus")
+    with pytest.raises(TypeError):
+        resolve_policy(3.14)
+
+
+# ---------------------------------------------------------------------------
+# krylov: matrix-free posterior at N > D
+# ---------------------------------------------------------------------------
+
+def test_posterior_solve_matches_dense_oracle_past_ceiling():
+    n, d = 24, 8          # N > D: past the paper's exact-regime ceiling
+    X, G = _data(n, d)
+    spec = get_kernel("rbf")
+    f = build_factors(spec, X, lam=1.0 / d, noise=1e-6)
+    res = posterior_solve(spec, f, G, tol=1e-10)
+    Zo = dense_solve(spec, X, G, lam=1.0 / d, noise=1e-6, jitter=0.0)
+    rel = float(jnp.linalg.norm(res.Z - Zo) / jnp.linalg.norm(Zo))
+    assert rel <= 1e-4, rel
+    assert int(res.iters) < 10 * n + 50
+
+
+def test_posterior_solve_warm_start_and_precond_help():
+    n, d = 24, 8
+    X, G = _data(n, d, seed=1)
+    spec = get_kernel("rbf")
+    f = build_factors(spec, X, lam=1.0 / d, noise=1e-6)
+    cold = posterior_solve(spec, f, G, tol=1e-10)
+    warm = posterior_solve(spec, f, G, z0=cold.Z, tol=1e-10)
+    assert int(warm.iters) <= int(cold.iters)
+    # Cholesky preconditioning from cached exact factors
+    K1n = f.K1e + (1e-6 / f.lam + 1e-10) * jnp.eye(n)
+    L = jnp.linalg.cholesky(K1n)
+    pre = posterior_solve(spec, f, G, L=L, tol=1e-10)
+    Zo = dense_solve(spec, X, G, lam=1.0 / d, noise=1e-6, jitter=0.0)
+    assert float(jnp.linalg.norm(pre.Z - Zo) / jnp.linalg.norm(Zo)) <= 1e-4
+
+
+def test_lanczos_tridiag_reconstructs_spectrum():
+    rng = np.random.RandomState(3)
+    m = 12
+    A = rng.randn(m, m)
+    A = jnp.asarray(A @ A.T + m * np.eye(m))
+    alpha, beta, nrm = lanczos_tridiag(lambda v: A @ v,
+                                       jnp.asarray(rng.randn(m)), m)
+    T = jnp.diag(alpha) + jnp.diag(beta, 1) + jnp.diag(beta, -1)
+    want = np.sort(np.linalg.eigvalsh(np.asarray(A)))
+    got = np.sort(np.linalg.eigvalsh(np.asarray(T)))
+    # full-dimensional Lanczos with reorthogonalization: exact spectrum
+    assert np.max(np.abs(got - want) / want) < 1e-8
+
+
+def test_streaming_structure_gate_catches_dense_gram():
+    n, d = 24, 8
+    X, G = _data(n, d)
+    spec = get_kernel("rbf")
+    f = build_factors(spec, X, lam=1.0 / d, noise=1e-6)
+    # the real path passes...
+    assert_streaming_structure(
+        lambda g: posterior_solve(spec, f, g, tol=1e-10).Z, G, n=n, d=d)
+    # ...a dense (ND, ND) materialization is structurally rejected
+    with pytest.raises(StructureError):
+        assert_streaming_structure(
+            lambda g: jnp.linalg.solve(
+                dense_gram(spec, X, lam=1.0 / d, noise=1e-6),
+                g.reshape(-1)).reshape(n, d),
+            G, n=n, d=d)
+
+
+def test_regime_dispatching_solve():
+    spec = get_kernel("rbf")
+    for n, d, want in ((4, 16, "exact"), (24, 8, "iterative")):
+        X, G = _data(n, d)
+        f = build_factors(spec, X, lam=0.1, noise=1e-6)
+        Z, info = solve(spec, f, G)
+        assert info["regime"] == want
+        Zo = dense_solve(spec, X, G, lam=0.1, noise=1e-6, jitter=0.0)
+        assert float(jnp.linalg.norm(Z - Zo) / jnp.linalg.norm(Zo)) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# slq: evidence + hyper-gradients past the ceiling
+# ---------------------------------------------------------------------------
+
+def test_slq_mll_within_one_percent_of_slogdet_oracle():
+    n, d = 24, 8
+    X, G = _data(n, d, seed=5)
+    spec = get_kernel("rbf")
+    h = HyperParams.create(lengthscale2=float(d), signal=1.2, noise=1e-4)
+    got = float(slq_mll(spec, X, G, h, probes=16))
+    want = float(mll_dense(spec, X, G, h))
+    assert abs(got - want) / abs(want) <= 0.01
+    # deterministic given the key: the probe block is fixed
+    assert float(slq_mll(spec, X, G, h, probes=16)) == got
+
+
+def test_slq_hyper_gradients_track_dense_autodiff():
+    n, d = 20, 6
+    X, G = _data(n, d, seed=6)
+    spec = get_kernel("rbf")
+    h = HyperParams.create(lengthscale2=float(d), signal=1.1, noise=1e-3)
+    fn = make_slq_mll_fn(spec, X, G, probes=16)
+    g_slq = jax.grad(fn)(h)
+    g_dense = jax.grad(lambda hh: mll_dense(spec, X, G, hh))(h)
+    for field in ("log_lengthscale2", "log_signal", "log_noise"):
+        a = float(getattr(g_slq, field))
+        b = float(getattr(g_dense, field))
+        # Hutchinson trace noise: direction + magnitude, not bit equality
+        assert abs(a - b) <= 0.05 * max(abs(b), 1.0), (field, a, b)
+
+
+# ---------------------------------------------------------------------------
+# reduction: exact gradient compression
+# ---------------------------------------------------------------------------
+
+def test_reduction_exactness_for_in_span_queries():
+    rng = np.random.RandomState(7)
+    d, k, n = 16, 3, 10
+    B = rng.randn(k, d)
+    X = jnp.asarray(rng.randn(n, k) @ B)
+    G = jnp.asarray(rng.randn(n, k) @ B)       # in-span gradients
+    spec = get_kernel("rbf")
+    red = reduce_gradients(spec, X, G)
+    assert red.rank == k
+    assert float(red.residual) < 1e-8          # nothing dropped: lossless
+    Xq = jnp.asarray(rng.randn(4, k) @ B)
+    Yq, out = project_points(red, Xq)
+    assert float(jnp.max(out)) < 1e-8
+    # reduced-model solve == full-model solve on the projected queries
+    Zr = dense_solve(spec, red.Xr, red.Gr, lam=0.2, noise=1e-6)
+    Zf = dense_solve(spec, X, G, lam=0.2, noise=1e-6)
+    assert np.allclose(np.asarray(lift_gradients(red, Zr)), np.asarray(Zf),
+                       atol=1e-6)
+
+
+def test_state_compress_equals_uncompressed_posterior():
+    rng = np.random.RandomState(8)
+    d, k = 12, 2
+    B = rng.randn(k, d)
+    pts = [(rng.randn(k) @ B, rng.randn(k) @ B) for _ in range(9)]
+    st_c = GPGState("rbf", d=d, window=5, lam=0.3, noise=1e-6,
+                    policy="compress")
+    st_e = GPGState("rbf", d=d, capacity=16, lam=0.3, noise=1e-6)
+    for x, g in pts:
+        st_c.extend(x, g)
+        st_e.extend(x, g)
+    assert st_c._reduction is not None and st_c._reduction.rank == k
+    assert st_c.d == k                     # the D axis actually collapsed
+    assert st_c.n == len(pts)              # ...and nothing was evicted
+    Xq = jnp.asarray(rng.randn(5, k) @ B)
+    pc, pe = st_c.posterior(Xq), st_e.posterior(Xq)
+    assert np.allclose(np.asarray(pc.value), np.asarray(pe.value),
+                       atol=1e-6)
+    assert np.allclose(np.asarray(pc.grad), np.asarray(pe.grad), atol=1e-6)
+    # an out-of-span arrival grows the basis instead of corrupting state
+    st_c.extend(rng.randn(d), rng.randn(d))
+    assert st_c._reduction.rank == k + 1
+    assert st_c.n == len(pts) + 1
+
+
+def test_state_iterate_policy_lifts_window():
+    rng = np.random.RandomState(9)
+    st = GPGState("rbf", d=4, window=3, lam=0.5, noise=1e-6,
+                  policy="iterate")
+    for _ in range(8):
+        st.extend(rng.randn(4), rng.randn(4))
+    assert st.window is None and st.n == 8     # grew past the old window
+    Zo = dense_solve(st.spec, st.X, st.G, lam=0.5, noise=1e-6, jitter=0.0)
+    sc = max(1.0, float(jnp.max(jnp.abs(Zo))))
+    assert float(jnp.max(jnp.abs(st.Z - Zo))) <= 1e-5 * sc
+
+
+def test_state_evidence_dispatch():
+    rng = np.random.RandomState(10)
+    st = GPGState("rbf", d=4, capacity=32, lam=0.5, noise=1e-4, signal=1.1)
+    for _ in range(20):
+        st.extend(rng.randn(4), rng.randn(4))
+    assert st.regime == "iterative"
+    exact = float(st.mll(method="exact"))
+    auto = float(st.mll())                     # auto -> slq here
+    oracle = float(mll_dense(st.spec, st.X, st.G, st.hypers))
+    assert abs(exact - oracle) / abs(oracle) < 1e-6
+    assert abs(auto - oracle) / abs(oracle) < 0.02
+    with pytest.raises(ValueError):
+        st.mll(method="cholesky")
+    # SLQ refit runs and does not corrupt the solve
+    st.refit(steps=3, method="slq", probes=4, lanczos_iters=16)
+    Zo = dense_solve(st.spec, st.X, st.G, lam=st.data.lam,
+                     noise=st._noise_eff, jitter=0.0)
+    sc = max(1.0, float(jnp.max(jnp.abs(Zo))))
+    assert float(jnp.max(jnp.abs(st.Z - Zo))) <= 1e-5 * sc
+
+
+def test_condition_scaled_maxiter():
+    data = gpg_init(get_kernel("rbf"), 4, 8)
+    ceiling = 10 * 8 + 50
+    assert _default_maxiter(data, None) == ceiling
+    assert _default_maxiter(data, 7) == 7               # explicit wins
+    assert _default_maxiter(data, None, cond=1.0) == ceiling
+    assert _default_maxiter(data, None, cond=float("inf")) == ceiling
+    mid = _default_maxiter(data, None, cond=16.0, tol=1e-10)
+    assert 8 // 2 + 16 <= mid < ceiling
+    # monotone in the condition proxy, clamped at the legacy ceiling
+    assert _default_maxiter(data, None, cond=64.0) >= mid
+    assert _default_maxiter(data, None, cond=1e30) == ceiling
+
+
+def test_serve_config_applies_solver_knobs():
+    from repro.configs.paper_gp import GPServeConfig
+
+    st = GPGState("rbf", d=4, capacity=8)
+    cfg = GPServeConfig(microbatch=4, tol=1e-8, maxiter=33)
+    bundle = build_gp_serve_step(st, config=cfg)
+    assert bundle.microbatch == 4
+    assert st.tol == 1e-8 and st.maxiter == 33
+    assert st._maxiter_eff() == 33
+
+
+# ---------------------------------------------------------------------------
+# telemetry: the switch event fires exactly at the modeled crossover,
+# and crossing it never recompiles the serve step
+# ---------------------------------------------------------------------------
+
+def test_regime_switch_telemetry_and_compile_stability(tmp_path):
+    from tools.check_telemetry import check
+
+    log = tmp_path / "regime.jsonl"
+    obs.configure(str(log))
+    rng = np.random.RandomState(11)
+    d = 6
+    with obs.use_obs(True):
+        st = GPGState("rbf", d=d, capacity=16, lam=0.5, noise=1e-8,
+                      policy="iterate")
+        xover = st.policy.crossover_n(d)
+        bundle = build_gp_serve_step(st, microbatch=4)
+        Xq = jnp.asarray(rng.randn(4, d))
+        for _ in range(xover + 3):
+            st.extend(rng.randn(d), rng.randn(d))
+            bundle.query(Xq)
+        snap = obs.snapshot()
+        obs.flush()
+    assert snap["gauges"]["regime.active"] == 1.0
+    assert snap["gauges"]["regime.crossover_n"] == float(xover)
+    assert snap["counters"]["regime.switches"] == 1
+    # one serve signature across the switch: zero recompiles
+    watch = next(w for w in compile_watch.all_watches()
+                 if w.name == "gp_serve_step")
+    assert len(watch.compiles) == 1
+    assert all(c == 1 for c in watch.compiles.values())
+    # the JSONL gate agrees with the model...
+    assert check(str(log), expect_regime_switch_at=xover) == []
+    # ...and flags an off-model switch claim
+    bad = check(str(log), expect_regime_switch_at=xover + 1)
+    assert any("off-model" in f for f in bad)
+    events = [json.loads(l) for l in log.read_text().splitlines() if l]
+    sw = [e for e in events if e.get("type") == "regime"
+          and e.get("event") == "switch"]
+    assert len(sw) == 1 and sw[0]["n"] == xover and sw[0]["to"] == "iterative"

@@ -5,6 +5,7 @@ with ``REPRO_OBS=on REPRO_OBS_JSONL=<log>``), then gates on this script:
 
     python tools/check_telemetry.py <log.jsonl> [--allow-recompile]
                                     [--require-span NAME ...]
+                                    [--expect-regime-switch-at N]
 
 Checks (each failure is one line on stderr; exit 1 on any):
 
@@ -19,7 +20,12 @@ Checks (each failure is one line on stderr; exit 1 on any):
     serve-step compiles) plus at least one ``cost.*`` modeled gauge;
   * the snapshot counters are self-consistent with the event stream
     (``state.extend_calls`` == number of ``state.extend`` span events;
-    ``serve.requests`` == number of ``serve.query`` span events).
+    ``serve.requests`` == number of ``serve.query`` span events);
+  * with ``--expect-regime-switch-at N``: the run's FIRST
+    ``{"type": "regime", "event": "switch", ..., "to": "iterative"}``
+    event fired at exactly n == N — the analytic crossover of the
+    regime cost model (``repro.regime.policy``) agreeing with the live
+    stream is what makes the flop model auditable, not advisory.
 
 The log must come from ONE process run (the sink appends; point each run
 at a fresh file, as CI does).
@@ -42,7 +48,8 @@ REQUIRED_COUNTERS = (
 
 
 def check(path: str, *, required_spans=DEFAULT_REQUIRED_SPANS,
-          allow_recompile: bool = False) -> list[str]:
+          allow_recompile: bool = False,
+          expect_regime_switch_at: int | None = None) -> list[str]:
     """Validate one telemetry log; return a list of failure strings."""
     failures: list[str] = []
     events: list[dict] = []
@@ -84,6 +91,24 @@ def check(path: str, *, required_spans=DEFAULT_REQUIRED_SPANS,
                 f"recompile-sentinel violation: watch={e.get('watch')} "
                 f"traced a seen signature again (nth={e.get('nth')})")
 
+    if expect_regime_switch_at is not None:
+        switches = [e for e in events
+                    if e.get("type") == "regime"
+                    and e.get("event") == "switch"
+                    and e.get("to") == "iterative"]
+        if not switches:
+            failures.append(
+                "no regime switch to 'iterative' recorded (expected one "
+                f"at n={expect_regime_switch_at})")
+        else:
+            first = switches[0]
+            if int(first.get("n", -1)) != int(expect_regime_switch_at):
+                failures.append(
+                    "regime switch fired off-model: first exact->iterative "
+                    f"at n={first.get('n')} but the cost model says "
+                    f"n={expect_regime_switch_at} "
+                    f"(crossover_n={first.get('crossover_n')})")
+
     snaps = [e for e in events if e.get("type") == "snapshot"]
     if not snaps:
         failures.append("no final registry snapshot (trace.flush() missing)")
@@ -119,11 +144,17 @@ def main(argv=None) -> int:
                     metavar="NAME",
                     help="span name that must appear (repeatable; default: "
                          + ", ".join(DEFAULT_REQUIRED_SPANS) + ")")
+    ap.add_argument("--expect-regime-switch-at", type=int, default=None,
+                    metavar="N",
+                    help="assert the first exact->iterative regime switch "
+                         "event fired at exactly this n (the modeled "
+                         "crossover)")
     args = ap.parse_args(argv)
     required = tuple(args.require_span) if args.require_span \
         else DEFAULT_REQUIRED_SPANS
     failures = check(args.log, required_spans=required,
-                     allow_recompile=args.allow_recompile)
+                     allow_recompile=args.allow_recompile,
+                     expect_regime_switch_at=args.expect_regime_switch_at)
     if failures:
         for f in failures:
             print(f"TELEMETRY FAIL: {f}", file=sys.stderr)
