@@ -120,12 +120,14 @@ BENCHES = [
      "DESIGN 15: multi-tenant vmapped fleet + continuous batching"),
     ("regime", "benchmarks.bench_regime",
      "DESIGN 16: regime crossover, Krylov posterior + SLQ past N<D"),
+    ("resilience", "benchmarks.bench_resilience",
+     "DESIGN 17: bitwise snapshot/journal recovery + zero-cost guardrails"),
 ]
 
 # Benches whose JSON lands at the repo root for cross-PR tracking; also
 # the set --check regresses against.
 PERF_TRACKED = ("kernels", "iterative", "hyper", "distributed", "fleet",
-                "regime")
+                "regime", "resilience")
 
 
 def main() -> None:

@@ -29,7 +29,15 @@ mean is defined up to an additive constant, so the incumbent is scored in
 the SAME batch and the constant cancels.  ``--mean-only`` falls back to
 pure posterior-mean exploitation (the pre-uncertainty behavior).
 
+``--chaos`` runs the same loop under a seeded ``ChaosInjector``:
+observation payloads are randomly NaN-corrupted (the admission guardrail
+rejects them and the loop retries with the clean gradient) and the live
+Cholesky is randomly poisoned (the post-extend watchdog heals it on the
+jitter ladder).  The loop must still converge — and with ``REPRO_OBS=on``
+the log passes ``tools/check_telemetry.py --expect-recovery``.
+
 Run:   PYTHONPATH=src python examples/streaming_bo.py [--smoke] [--mean-only]
+                                                      [--chaos]
 """
 import sys
 import time
@@ -44,6 +52,7 @@ from repro.core import GPGState
 from repro.train.serve import build_gp_serve_step
 
 SMOKE = "--smoke" in sys.argv
+CHAOS = "--chaos" in sys.argv
 USE_STD = "--mean-only" not in sys.argv   # EI needs return_std on the step
 D = 64 if SMOKE else 500          # search-space dimension
 ROUNDS = 6 if SMOKE else 30       # BO iterations
@@ -80,6 +89,25 @@ x0 = 2.0 * jax.random.normal(key, (D,))
 st = GPGState("rbf", d=D, window=WINDOW, lam=1.0 / D, noise=1e-9)
 serve = build_gp_serve_step(st, microbatch=Q + 1, return_std=USE_STD)
 
+if CHAOS:
+    from repro.resilience import ChaosInjector, guardrails
+    from repro.resilience.errors import NonFiniteObservationError
+
+    chaos = ChaosInjector(seed=7, rates={"nan_payload": 0.3,
+                                         "degenerate_factor": 0.2})
+
+
+def observe(x, g):
+    """Stream one gradient observation, optionally under chaos."""
+    if CHAOS and chaos.draw("nan_payload"):
+        try:                          # the admission guardrail rejects it
+            st.extend(x, chaos.corrupt_payload(g))
+        except NonFiniteObservationError:
+            guardrails.record_recovery("nan_payload")
+    if CHAOS and st.n >= 1 and chaos.poison_factor(st):
+        pass                          # the extend below heals it in-line
+    st.extend(x, g)
+
 best_x = x0
 best_f, best_g = fg(x0)
 best_f = float(best_f)
@@ -93,7 +121,7 @@ for it in range(ROUNDS):
     #    stalled round would fill the sliding window with duplicates and
     #    degenerate the bordered factorization
     if incumbent_fresh:
-        st.extend(best_x, best_g)
+        observe(best_x, best_g)
         incumbent_fresh = False
 
     # 2. candidates along the (jittered) gradient ray at Q step sizes,
@@ -121,7 +149,7 @@ for it in range(ROUNDS):
         incumbent_fresh = True
         alpha = min(alpha * 1.5, 10.0)         # grow the trust region
     else:
-        st.extend(pick, gx)                    # failed pick still informs
+        observe(pick, gx)                      # failed pick still informs
         alpha = max(alpha * 0.5, 1e-5)
     if it % 5 == 0 or SMOKE:
         s = st.stats

@@ -1,5 +1,7 @@
-from .store import (CheckpointManager, latest_step, restore_checkpoint,
-                    save_checkpoint)
+from .store import (CheckpointCorruptionError, CheckpointManager,
+                    latest_step, manifest_index, restore_checkpoint,
+                    restore_latest, save_checkpoint)
 
-__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+__all__ = ["CheckpointCorruptionError", "CheckpointManager", "latest_step",
+           "manifest_index", "restore_checkpoint", "restore_latest",
            "save_checkpoint"]

@@ -36,6 +36,16 @@ Array = Any
 _SEP = "/"
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A committed checkpoint's leaf files do not match its manifest
+    (truncated ``.npy``, size/dtype mismatch, missing file).
+
+    Defined here rather than in ``repro.resilience.errors`` because this
+    layer *detects* the corruption and the resilience package imports the
+    checkpoint store (re-exported there for the one-stop taxonomy).
+    """
+
+
 def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -135,7 +145,31 @@ def restore_checkpoint(root: str, step: int, abstract_tree: Any, *,
         manifest = json.load(f)
     named = {}
     for name, meta in manifest["index"].items():
-        named[name] = np.load(os.path.join(d, meta["file"]))
+        fpath = os.path.join(d, meta["file"])
+        # corrupted-leaf detection: a committed manifest is necessary but
+        # not sufficient — the leaf bytes can still rot (torn write after
+        # rename on non-atomic filesystems, bit flips, truncation).  Any
+        # mismatch against the manifest's own index is typed corruption so
+        # callers (restore_latest) can skip to an older committed step.
+        try:
+            arr = np.load(fpath)
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step}: leaf {name!r} ({meta['file']}) "
+                f"unreadable: {e}") from e
+        if tuple(arr.shape) != tuple(meta["shape"]):
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step}: leaf {name!r} has shape "
+                f"{tuple(arr.shape)} but manifest says "
+                f"{tuple(meta['shape'])}")
+        # non-native dtypes (bf16/f8) are stored as f32 (see save); only
+        # flag a file whose dtype matches NEITHER the manifest nor f32
+        if (str(arr.dtype) != meta["dtype"]
+                and arr.dtype != np.float32):
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step}: leaf {name!r} has dtype "
+                f"{arr.dtype} but manifest says {meta['dtype']}")
+        named[name] = arr
     # shape guard: a checkpoint from a different model config must fail
     # loudly, not load garbage into mismatched leaves
     flat, _ = jax.tree_util.tree_flatten_with_path(abstract_tree)
@@ -162,6 +196,46 @@ def restore_checkpoint(root: str, step: int, abstract_tree: Any, *,
     else:
         tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
     return tree, manifest["extras"]
+
+
+def manifest_index(root: str, step: int) -> dict:
+    """The manifest's leaf index {name: {file, shape, dtype}} for a step
+    (lets callers build an abstract tree without knowing the pytree)."""
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        return json.load(f)["index"]
+
+
+def restore_latest(root: str, abstract_tree: Any, *,
+                   shardings: Any = None) -> tuple[int, Any, dict]:
+    """Restore the newest committed checkpoint that passes corruption
+    checks, walking backwards past corrupted steps.
+
+    Returns (step, tree, extras).  Each skipped step increments the
+    ``resilience.checkpoint_fallbacks`` counter and emits a JSONL event
+    so chaos runs can gate that corruption was detected AND survived.
+    Raises CheckpointCorruptionError only when every committed step is
+    corrupt; FileNotFoundError when there are none at all.
+    """
+    steps = _committed_steps(root)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints under {root!r}")
+    last_err: Optional[Exception] = None
+    for step in reversed(steps):
+        try:
+            tree, extras = restore_checkpoint(root, step, abstract_tree,
+                                              shardings=shardings)
+            return step, tree, extras
+        except CheckpointCorruptionError as e:
+            last_err = e
+            from repro.obs import trace as _trace  # deferred: no cycles
+            _trace.REGISTRY.inc("resilience.checkpoint_fallbacks")
+            _trace.emit({"type": "resilience",
+                         "action": "checkpoint_fallback",
+                         "skipped_step": step, "error": str(e)})
+    raise CheckpointCorruptionError(
+        f"every committed checkpoint under {root!r} is corrupt "
+        f"(steps {steps})") from last_err
 
 
 class CheckpointManager:
@@ -201,3 +275,9 @@ class CheckpointManager:
         self.wait()
         return restore_checkpoint(self.root, step, abstract_tree,
                                   shardings=shardings)
+
+    def restore_latest(self, abstract_tree: Any, shardings: Any = None):
+        """Newest committed checkpoint that passes corruption checks;
+        returns (step, tree, extras)."""
+        self.wait()
+        return restore_latest(self.root, abstract_tree, shardings=shardings)

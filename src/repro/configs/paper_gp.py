@@ -75,6 +75,16 @@ class GPFleetConfig:
     solver_cache_max: int = 8
     refit_steps: int = 16
     refit_lr: float = 0.1
+    # -- resilience knobs (DESIGN.md sec. 17) --------------------------
+    # max_queue: submissions past this depth are load-shed with a typed
+    # ShedResponse; deadline_steps: server steps a request may wait
+    # before expiring; max_retries: bounded requeues after an injected
+    # kill; quarantine_threshold: consecutive faults before a tenant's
+    # lane is masked off.
+    max_queue: int = 1024
+    deadline_steps: int = 64
+    max_retries: int = 2
+    quarantine_threshold: int = 3
 
 
 @dataclasses.dataclass(frozen=True)

@@ -717,6 +717,9 @@ class ShardedGPGState:
 
     def extend(self, x: Array, g: Array) -> "ShardedGPGState":
         """Append one observation (auto-evicts at the window bound)."""
+        from repro.resilience import guardrails as _guard
+
+        _guard.check_finite(x, g, what="observation")
         with _obs.span("distributed.extend", d=self.d_orig,
                        shards=self.ndev):
             if self.window and self.n >= self.window:
@@ -792,6 +795,75 @@ class ShardedGPGState:
                                        jnp.asarray(st._noise_eff))
         st._gauge("rebuild")
         return st
+
+    # -- snapshot/restore (repro.resilience.snapshot) ----------------------
+
+    _SNAP_D = ("X", "G", "Xt", "Z")             # leaves with a D axis
+    _SNAP_R = ("K1e", "K2e", "L", "lam", "count", "n_refactor", "n_solve",
+               "cg_iters", "resnorm")           # replicated leaves
+
+    def snapshot_arrays(self) -> dict:
+        """Host-gathered leaves, D-axes TRIMMED to ``d_orig`` — the
+        mesh-independent logical state (pad columns are exactly zero by
+        the module contract, so nothing is lost)."""
+        import numpy as np
+
+        b = self.data.base
+        k = self.d_orig
+        out = {f: np.asarray(jax.device_get(getattr(b, f)))[:, :k]
+               for f in self._SNAP_D}
+        out.update({f: np.asarray(jax.device_get(getattr(b, f)))
+                    for f in self._SNAP_R})
+        for f in ("S0", "C", "GG"):
+            out[f] = np.asarray(jax.device_get(getattr(self.data, f)))
+        if b.c is not None:
+            out["c"] = np.asarray(jax.device_get(b.c))[:k]
+        return out
+
+    def load_snapshot_arrays(self, named: dict) -> "ShardedGPGState":
+        """Install snapshot leaves VERBATIM, re-padded for THIS mesh and
+        device_put with the phase programs' shardings.
+
+        Restoring factors directly (instead of re-running ``rebuild``)
+        is what preserves bit-identity: the live factors were built
+        incrementally (bordered updates), and a from-scratch rebuild
+        would round differently.  Same-mesh restores are bitwise; a
+        different mesh re-pads with zero columns, which are exactly
+        inert going forward.
+        """
+        import numpy as np
+        from jax.sharding import NamedSharding
+
+        dspec = self._data_spec()
+        dt = self.data.base.X.dtype
+
+        def putD(name, spec):
+            a = np.asarray(named[name])
+            a = np.pad(a, ((0, 0), (0, self.d_pad - a.shape[1])))
+            return jax.device_put(jnp.asarray(a, dt),
+                                  NamedSharding(self.mesh, spec))
+
+        def putR(name, leaf, spec):
+            a = jnp.asarray(np.asarray(named[name]), leaf.dtype)
+            return jax.device_put(a, NamedSharding(self.mesh, spec))
+
+        b = self.data.base
+        kw = {f: putD(f, getattr(dspec.base, f)) for f in self._SNAP_D}
+        kw.update({f: putR(f, getattr(b, f), getattr(dspec.base, f))
+                   for f in self._SNAP_R})
+        if b.c is not None and "c" in named:
+            c = np.asarray(named["c"])
+            c = np.pad(c, (0, self.d_pad - c.shape[0]))
+            kw["c"] = jax.device_put(jnp.asarray(c, dt),
+                                     NamedSharding(self.mesh, dspec.base.c))
+        base = b._replace(**kw)
+        self.data = self.data._replace(
+            base=base,
+            S0=putR("S0", self.data.S0, dspec.S0),
+            C=putR("C", self.data.C, dspec.C),
+            GG=putR("GG", self.data.GG, dspec.GG))
+        self.revision += 1
+        return self
 
     # -- model selection off the maintained strips -------------------------
 

@@ -583,6 +583,16 @@ class GPFleet:
             _obs.REGISTRY.inc("fleet.leaves")
             _obs.REGISTRY.set_gauge("fleet.active_tenants", len(self._slots))
 
+    def quarantine(self, tenant) -> None:
+        """Isolate a poisoned tenant: flip its active mask off and free
+        the lane (a ``leave``, NOT a repack — the other lanes' bits and
+        the compile signature are untouched)."""
+        self.leave(tenant)
+        if _obs.enabled():
+            _obs.REGISTRY.inc("fleet.quarantines")
+            _obs.REGISTRY.inc("resilience.quarantined")
+        _obs.emit({"type": "quarantine", "tenant": str(tenant)})
+
     # -- compile-watched launches ------------------------------------------
 
     def _launch(self, name: str, make_fn, *args):
@@ -617,8 +627,12 @@ class GPFleet:
         window)."""
         import numpy as np
 
+        from repro.resilience import guardrails as _guard
+
         if not obs:
             return self
+        for t, (x, g) in obs.items():
+            _guard.check_finite(x, g, what="observation", tenant=t)
         if not self.window:
             for t in obs:
                 if self.n(t) >= self.capacity:

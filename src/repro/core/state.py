@@ -45,6 +45,10 @@ from jax.scipy.linalg import cho_solve, solve_triangular
 
 from repro.obs import injit as _obs_tap
 from repro.obs import trace as _obs
+# host-side guardrails + typed errors (repro.resilience imports nothing
+# from repro.core at module level, so this is cycle-free)
+from repro.resilience import guardrails as _guard
+from repro.resilience.errors import UnsupportedQueryError
 
 from . import backend
 from .gram import GramFactors
@@ -726,6 +730,10 @@ class GPGState:
         capacity action ({evict, compress, iterate}); a full capacity
         without a window zero-pad-grows, as ever."""
         obs_on = _obs.enabled()
+        # admission guardrail: a NaN/inf observation raises a typed error
+        # HERE, before any factor strip sees it (host-side: the jitted
+        # extend program is byte-identical with guardrails on or off)
+        _guard.check_finite(x, g, what="observation")
         with _obs.span("state.extend"):
             # the in-jit tap counts degenerate pivots as they happen; the
             # host-side counter below is the device-synced ground truth
@@ -773,6 +781,12 @@ class GPGState:
                     self._health.tick(self)
             self._publish_regime()
         self._bump()
+        # post-mutation watchdog: one scalar read of the fresh pivot +
+        # solve residual; non-finite factors climb the jitter ladder
+        # (repro.resilience.guardrails) — triggers on NON-finite only,
+        # so healthy-trajectory bits are untouched
+        if _guard.enabled():
+            _guard.after_mutation(self)
         return self
 
     def evict(self, k: int = 1) -> "GPGState":
@@ -1066,7 +1080,10 @@ class GPGState:
         from repro.regime.reduction import lift_gradients, project_points
 
         if return_grad_std:
-            raise NotImplementedError(
+            # typed (and a NotImplementedError subclass for legacy
+            # callers): serve loops catch this and degrade to mean-only
+            # instead of killing the request loop
+            raise UnsupportedQueryError(
                 "grad_std on a compressed state: per-coordinate gradient "
                 "stds do not rotate through the reduction basis without "
                 "the full gradient covariance")

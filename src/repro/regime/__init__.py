@@ -73,5 +73,25 @@ def solve(
         return Z, {"regime": "exact", "iters": None, "resnorm": None}
     res = posterior_solve(spec, f, G, z0=z0, L=L, tol=tol, maxiter=maxiter,
                           jitter=jitter)
-    return res.Z, {"regime": "iterative", "iters": res.iters,
-                   "resnorm": res.resnorm}
+    info = {"regime": "iterative", "iters": res.iters,
+            "resnorm": res.resnorm, "fallback": False}
+    from repro.resilience import guardrails as _guard
+
+    if _guard.enabled():
+        # CG-divergence watchdog: a non-finite (or wildly regressed)
+        # residual means the Krylov iteration has been poisoned (bad warm
+        # start, degenerate preconditioner); the exact Woodbury path is
+        # always available as a correct-if-slower fallback.
+        import jax.numpy as jnp
+
+        rhs_norm = float(jnp.linalg.norm(jnp.asarray(G, jnp.float64)))
+        if _guard.cg_diverged(float(res.resnorm), rhs_norm):
+            from repro.core.woodbury import woodbury_solve
+            from repro.obs import trace as _trace
+
+            _trace.REGISTRY.inc("resilience.cg_fallback")
+            _guard.record_recovery("cg_divergence", n=n, d=d)
+            Z = woodbury_solve(spec, f, G, jitter=jitter)
+            return Z, {"regime": "exact", "iters": None, "resnorm": None,
+                       "fallback": True}
+    return res.Z, info

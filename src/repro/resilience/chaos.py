@@ -1,0 +1,117 @@
+"""Deterministic, seed-replayable chaos injection for the serve path.
+
+``ChaosInjector`` extends ``runtime.recovery.FailureInjector`` (fixed
+``fail_at`` steps still work) with a seeded fault stream over the serve
+fault classes:
+
+  nan_payload        corrupt an observation payload with NaN (the
+                     admission guardrail must reject it)
+  kill_step          raise SimulatedFailure inside a serve step (the
+                     bounded-retry machinery must absorb it)
+  degenerate_factor  overwrite a live Cholesky with NaN (the jitter
+                     ladder must refactor it back)
+  cg_divergence      poison an iterative solve's warm start (the CG
+                     watchdog must fall back to the exact solver)
+  crash              kill the process state mid-trajectory (snapshot +
+                     journal replay must restore it bit-identically)
+  drop_device        declare a mesh device lost (the sharded state must
+                     be rebuilt from its snapshot on a fresh mesh)
+  straggler          mark a tenant slow (its requests must expire via
+                     the deadline sweep, not stall the fleet)
+
+Determinism contract: the fault stream is a pure function of ``seed``
+and the sequence of ``draw()`` calls — replaying the same trajectory
+with the same seed injects the same faults at the same points, which is
+what makes chaos failures reproducible from a one-line seed, exactly
+like the fuzz machine's op tapes.
+
+Accounting contract: every injection bumps ``resilience.faults_injected``
+(+ per-kind) here; every handler bumps ``resilience.faults_recovered``
+(+ per-kind) via ``guardrails.record_recovery`` — the chaos CI gate
+(``check_telemetry --expect-recovery``) asserts the totals match and
+that recovery triggered zero recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.obs import trace as _trace
+from repro.runtime.recovery import FailureInjector, SimulatedFailure
+
+FAULT_KINDS = ("nan_payload", "kill_step", "degenerate_factor",
+               "cg_divergence", "crash", "drop_device", "straggler")
+
+
+@dataclasses.dataclass
+class ChaosInjector(FailureInjector):
+    """Seeded fault stream for chaos drills (see module docstring)."""
+
+    seed: int = 0
+    rates: dict = dataclasses.field(default_factory=dict)
+    max_faults: Optional[int] = None
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed)
+        self.injected: dict = {k: 0 for k in FAULT_KINDS}
+
+    # -- bookkeeping -----------------------------------------------------
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def record(self, kind: str, **attrs) -> None:
+        """Count one injected fault (handlers pair this with
+        ``guardrails.record_recovery``)."""
+        self.injected[kind] = self.injected.get(kind, 0) + 1
+        _trace.REGISTRY.inc("resilience.faults_injected")
+        _trace.REGISTRY.inc(f"resilience.injected.{kind}")
+        _trace.emit({"type": "chaos", "kind": kind, **attrs})
+
+    def draw(self, kind: str) -> bool:
+        """One deterministic Bernoulli draw for ``kind``; counts the
+        fault when it fires.  Always advances the RNG (so enabling a
+        fault class does not shift the others' streams)."""
+        u = self._rng.rand()
+        if self.max_faults is not None and \
+                self.total_injected >= self.max_faults:
+            return False
+        if u < self.rates.get(kind, 0.0):
+            self.record(kind)
+            return True
+        return False
+
+    # -- fault actions ---------------------------------------------------
+
+    def corrupt_payload(self, x):
+        """Deterministically NaN one coordinate of a payload copy."""
+        arr = np.array(x, dtype=np.float64, copy=True)
+        idx = int(self._rng.randint(arr.size)) if arr.size else 0
+        arr.reshape(-1)[idx] = np.nan
+        return arr
+
+    def maybe_kill(self) -> None:
+        """Raise SimulatedFailure on a ``kill_step`` draw."""
+        if self.draw("kill_step"):
+            raise SimulatedFailure("chaos: killed serve step")
+
+    def poison_factor(self, state) -> bool:
+        """Overwrite the state's live Cholesky with NaN on a draw (the
+        degenerate-factor fault class); returns True when it fired."""
+        import jax.numpy as jnp
+
+        if not self.draw("degenerate_factor"):
+            return False
+        bad = jnp.full_like(state.data.L, jnp.nan)
+        state.data = state.data._replace(L=bad)
+        return True
+
+    def poison_warm_start(self, shape, dtype=None):
+        """A NaN warm start for an iterative solve (cg_divergence)."""
+        import jax.numpy as jnp
+
+        self.record("cg_divergence")
+        return jnp.full(shape, jnp.nan, dtype or jnp.float64)

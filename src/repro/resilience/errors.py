@@ -1,0 +1,93 @@
+"""Typed failure taxonomy for the resilience subsystem (DESIGN.md sec. 17).
+
+Every failure the serving stack can recover from gets its own exception
+class so serve loops can branch on *type*, not on string matching:
+
+  ResilienceError                      — base of the whole taxonomy
+    NonFiniteObservationError          — NaN/inf payload rejected at
+                                         admission, BEFORE it touches a
+                                         factor strip
+    UnsupportedQueryError              — the query is well-posed but this
+                                         state flavor cannot answer it
+                                         (e.g. grad_std through a
+                                         reduction frame); also subclasses
+                                         NotImplementedError so legacy
+                                         callers keep working
+    DeadlineExceededError              — per-request deadline expired in
+                                         the serve queue
+    QueueOverloadError                 — request shed at admission
+                                         (queue-depth limit)
+    RetryExhaustedError                — a retryable failure survived the
+                                         bounded-retry budget
+    TenantQuarantinedError             — the tenant's lane was masked
+                                         inert after repeated failures
+    JournalCorruptionError             — op-journal digest mismatch or
+                                         undecodable entry on replay
+
+``CheckpointCorruptionError`` is defined in ``repro.checkpoint.store``
+(the layer that detects it — importing this package from there would be
+a cycle) and re-exported here so the taxonomy has one import surface.
+
+``ShedResponse`` is the *typed shed value*: load-shedding is an expected
+serving outcome, not an exception, so shed requests complete immediately
+with a ``ShedResponse`` result instead of raising into the caller.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.checkpoint.store import CheckpointCorruptionError
+
+
+class ResilienceError(RuntimeError):
+    """Base class for every typed failure the serving stack can handle."""
+
+
+class NonFiniteObservationError(ResilienceError, ValueError):
+    """A NaN/inf observation was rejected before touching any factor."""
+
+
+class UnsupportedQueryError(ResilienceError, NotImplementedError):
+    """This state flavor cannot answer the query (degrade, don't die)."""
+
+
+class DeadlineExceededError(ResilienceError):
+    """The request's deadline expired while it waited in the serve queue."""
+
+
+class QueueOverloadError(ResilienceError):
+    """The serve queue is at its depth limit; the request was shed."""
+
+
+class RetryExhaustedError(ResilienceError):
+    """A retryable failure persisted past the bounded-retry budget."""
+
+
+class TenantQuarantinedError(ResilienceError):
+    """The tenant was quarantined (lane masked inert) after repeated
+    failures; pending and future requests fail with this type."""
+
+
+class JournalCorruptionError(ResilienceError):
+    """An op-journal entry failed its digest check (or cannot decode)."""
+
+
+class ShedResponse(NamedTuple):
+    """Typed result attached to a request shed at admission."""
+
+    reason: str
+    queue_depth: int
+
+
+__all__ = [
+    "ResilienceError",
+    "NonFiniteObservationError",
+    "UnsupportedQueryError",
+    "DeadlineExceededError",
+    "QueueOverloadError",
+    "RetryExhaustedError",
+    "TenantQuarantinedError",
+    "JournalCorruptionError",
+    "CheckpointCorruptionError",
+    "ShedResponse",
+]

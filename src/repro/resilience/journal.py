@@ -1,0 +1,233 @@
+"""Append-only op journal: bit-exact replay of mutations since a snapshot.
+
+The recovery contract (DESIGN.md sec. 17.1): a serving process snapshots
+its state every so often and journals every mutating op in between.  On
+restore, the snapshot puts the state back bit-for-bit (f64/f32/int leaves
+round-trip ``.npy`` exactly) and replaying the journaled ops through the
+SAME jitted executables reproduces the uninterrupted bits — JSON floats
+round-trip IEEE doubles exactly, and f32 payloads survive the f64 detour
+unchanged.  ``tests/fuzz_machine.check_recovery_*`` asserts exactly this
+against the dense differential oracle.
+
+Entry format (one JSON object per line, fsync-free append — a torn tail
+line is detected at read time and dropped, which is safe because the op
+it described never committed a snapshot over it):
+
+  {"op": "extend", "tenant": null, "seed": 123,          # optional seed
+   "payload": {"x": [...], "g": [...]},                  # exact values
+   "dtype": {"x": "float64", ...},
+   "digest": {"x": "<sha256>", ...}}                     # replay check
+  {"op": "snapshot", "step": 7}                          # snapshot marker
+
+Fleet entries carry ``tenants`` + per-tenant payload dicts and replay as
+one grouped launch — bitwise equivalent to any other grouping, because
+the vmapped fleet ops compute every lane on every launch and masked
+lanes keep their old bits exactly.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.obs import trace as _trace
+from repro.resilience.errors import JournalCorruptionError
+
+
+def _digest(arr: np.ndarray) -> str:
+    a = np.ascontiguousarray(np.asarray(arr, dtype=np.float64))
+    return hashlib.sha256(a.tobytes()).hexdigest()
+
+
+def _encode(payload: dict) -> tuple[dict, dict, dict]:
+    vals, dtypes, digests = {}, {}, {}
+    for k, v in payload.items():
+        if v is None:
+            continue
+        arr = np.asarray(v)
+        dtypes[k] = str(arr.dtype)
+        f64 = np.asarray(arr, dtype=np.float64)
+        vals[k] = f64.tolist()
+        digests[k] = _digest(f64)
+    return vals, dtypes, digests
+
+
+def decode_payload(entry: dict) -> dict:
+    """Payload arrays of a journal entry, digest-verified, in their
+    original dtypes (f64 -> f32/bf16 casts of values that were stored
+    from those dtypes are exact)."""
+    import jax.numpy as jnp
+
+    out = {}
+    for k, lst in (entry.get("payload") or {}).items():
+        arr = np.asarray(lst, dtype=np.float64)
+        want = entry.get("digest", {}).get(k)
+        if want is not None and _digest(arr) != want:
+            raise JournalCorruptionError(
+                f"journal entry op={entry.get('op')!r} payload {k!r}: "
+                f"digest mismatch")
+        dt = entry.get("dtype", {}).get(k, "float64")
+        if dt.startswith("bfloat"):
+            out[k] = jnp.asarray(arr).astype(jnp.bfloat16)
+        else:
+            out[k] = arr.astype(np.dtype(dt))
+    return out
+
+
+class Journal:
+    """Append-only JSONL op journal with snapshot markers."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def _append(self, entry: dict) -> None:
+        with open(self.path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(entry) + "\n")
+            f.flush()
+
+    def record(self, op: str, *, tenant=None, tenants=None,
+               seed: Optional[int] = None, args: Optional[dict] = None,
+               payload: Optional[dict] = None) -> dict:
+        """Journal one mutating op.  ``payload`` maps name -> array
+        (stored exactly + digested); ``args`` holds plain-JSON scalars
+        (k, steps, lr, lam...); ``seed`` tags seed-derived payloads so
+        drills can regenerate instead of re-reading."""
+        entry: dict[str, Any] = {"op": op}
+        if tenant is not None:
+            entry["tenant"] = tenant
+        if tenants is not None:
+            entry["tenants"] = list(tenants)
+        if seed is not None:
+            entry["seed"] = int(seed)
+        if args:
+            entry["args"] = args
+        if payload:
+            vals, dtypes, digests = _encode(payload)
+            entry["payload"], entry["dtype"] = vals, dtypes
+            entry["digest"] = digests
+        self._append(entry)
+        _trace.REGISTRY.inc("resilience.journal_appends")
+        return entry
+
+    def record_fleet(self, op: str, *, per_tenant: dict,
+                     args: Optional[dict] = None) -> dict:
+        """Journal one grouped fleet launch: {tenant: {name: array}}."""
+        entry: dict[str, Any] = {"op": op, "tenants": list(per_tenant)}
+        if args:
+            entry["args"] = args
+        pl, dt, dg = {}, {}, {}
+        for t, p in per_tenant.items():
+            vals, dtypes, digests = _encode(p or {})
+            for k, v in vals.items():
+                pl[f"{t}{chr(31)}{k}"] = v
+                dt[f"{t}{chr(31)}{k}"] = dtypes[k]
+                dg[f"{t}{chr(31)}{k}"] = digests[k]
+        if pl:
+            entry["payload"], entry["dtype"], entry["digest"] = pl, dt, dg
+        self._append(entry)
+        _trace.REGISTRY.inc("resilience.journal_appends")
+        return entry
+
+    def mark_snapshot(self, step: int) -> None:
+        self._append({"op": "snapshot", "step": int(step)})
+
+    # -- reading ---------------------------------------------------------
+
+    @staticmethod
+    def read(path: str) -> list[dict]:
+        """All well-formed entries; a torn final line is dropped, a torn
+        INTERIOR line is corruption (something after it committed)."""
+        if not os.path.exists(path):
+            return []
+        entries, torn_at = [], None
+        with open(path, encoding="utf-8") as f:
+            for i, line in enumerate(f):
+                if not line.strip():
+                    continue
+                try:
+                    entries.append(json.loads(line))
+                except ValueError:
+                    torn_at = i
+                    entries.append(None)
+        if entries and entries[-1] is None:
+            entries.pop()                       # torn tail: crash mid-append
+        if any(e is None for e in entries):
+            raise JournalCorruptionError(
+                f"torn interior journal line at {path}:{torn_at}")
+        return entries
+
+    @staticmethod
+    def since_snapshot(entries: list[dict],
+                       step: Optional[int] = None) -> list[dict]:
+        """Ops after the LAST snapshot marker (or the marker matching
+        ``step``); the ops a restored process must replay."""
+        idx = -1
+        for i, e in enumerate(entries):
+            if e.get("op") == "snapshot" and (step is None
+                                              or e.get("step") == step):
+                idx = i
+        return [e for e in entries[idx + 1:] if e.get("op") != "snapshot"]
+
+
+def _split_fleet_payload(entry: dict) -> dict:
+    per = {t: {} for t in entry.get("tenants", [])}
+    dec = decode_payload(entry)
+    for key, arr in dec.items():
+        t, k = key.split(chr(31), 1)
+        per[t][k] = arr
+    return per
+
+
+def replay_single(state, entries: list[dict]):
+    """Drive journaled ops through a restored ``GPGState`` — the same
+    host methods, so the same jitted executables, so the same bits."""
+    for e in entries:
+        op = e["op"]
+        p = decode_payload(e)
+        a = e.get("args") or {}
+        if op == "extend":
+            state.extend(p["x"], p["g"], solve=a.get("solve", True))
+        elif op == "evict":
+            state.evict(int(a.get("k", 1)))
+        elif op == "resolve":
+            state.resolve(p["rhs"])
+        elif op == "refactor":
+            state.refactor(a.get("lam"))
+        elif op == "refit":
+            state.refit(steps=int(a.get("steps", 150)),
+                        lr=float(a.get("lr", 0.08)))
+        else:
+            raise JournalCorruptionError(f"unknown single-state op {op!r}")
+        _trace.REGISTRY.inc("resilience.journal_replayed")
+    return state
+
+
+def replay_fleet(fleet, entries: list[dict]):
+    """Drive journaled grouped ops through a restored ``GPFleet``."""
+    for e in entries:
+        op = e["op"]
+        a = e.get("args") or {}
+        if op == "join":
+            fleet.join(e["tenant"], **{k: float(v) for k, v in a.items()})
+        elif op == "leave":
+            fleet.leave(e["tenant"])
+        elif op == "extend":
+            per = _split_fleet_payload(e)
+            fleet.extend({t: (p["x"], p["g"]) for t, p in per.items()})
+        elif op == "evict":
+            fleet.evict(list(e["tenants"]))
+        elif op == "resolve":
+            per = _split_fleet_payload(e)
+            fleet.resolve({t: p["rhs"] for t, p in per.items()})
+        elif op == "refit":
+            fleet.refit(list(e["tenants"]),
+                        steps=int(a.get("steps", 16)),
+                        lr=float(a.get("lr", 0.1)))
+        else:
+            raise JournalCorruptionError(f"unknown fleet op {op!r}")
+        _trace.REGISTRY.inc("resilience.journal_replayed")
+    return fleet

@@ -1,0 +1,316 @@
+"""Snapshot/restore for all three inference-state flavors through the
+existing two-phase ``CheckpointManager``.
+
+What makes this cheap is the paper's decomposition itself: the complete
+posterior is O(N^2 D + (N^2)^2) bytes of factor strips, streams and
+representers — never an (ND, ND) Gram — so a full snapshot is a handful
+of small ``.npy`` leaves plus a JSON extras blob of host scalars
+(hypers, policy, revision counters).
+
+Flavors and their elastic-restore contracts:
+
+  GPGState        exact restore (same capacity); compressed states
+                  persist their reduction frame + raw-stream copies.
+  GPFleet         per-lane snapshot: restores at ANY lane packing / batch
+                  size — tenants re-join in saved-slot order and their
+                  lane leaves are written back verbatim, so every
+                  per-tenant lane is bitwise-identical regardless of the
+                  target batch (vmapped ops are lane-independent).
+  ShardedGPGState D-axis leaves are stored TRIMMED to d_orig and
+                  re-padded for the target mesh (zero pad columns are
+                  exactly inert) — a state snapshotted on one mesh
+                  restores onto any device count.  Same-mesh restore is
+                  bitwise; replay after a cross-mesh restore matches to
+                  accumulation-order rounding.
+
+Restore walks committed checkpoints newest-first and skips corrupted
+ones (typed ``CheckpointCorruptionError`` from the store layer), so a
+torn leaf costs one checkpoint interval, never the state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.checkpoint.store import (CheckpointCorruptionError,
+                                    CheckpointManager, _committed_steps,
+                                    manifest_index, restore_checkpoint)
+from repro.obs import trace as _trace
+
+_DATA_FIELDS = ("X", "G", "Xt", "K1e", "K2e", "L", "Z", "lam", "count",
+                "n_refactor", "n_solve", "cg_iters", "resnorm")
+
+
+def _np(leaf) -> np.ndarray:
+    import jax
+
+    return np.asarray(jax.device_get(leaf))
+
+
+def _data_tree(data, prefix: str = "") -> dict:
+    tree = {prefix + f: _np(getattr(data, f)) for f in _DATA_FIELDS}
+    if data.c is not None:
+        tree[prefix + "c"] = _np(data.c)
+    return tree
+
+
+def _data_from_tree(data, tree: dict, prefix: str = ""):
+    """Rebuild a ``GPGData`` in the image of ``data`` from named leaves."""
+    import jax.numpy as jnp
+
+    kw = {f: jnp.asarray(tree[prefix + f]) for f in _DATA_FIELDS}
+    if prefix + "c" in tree:
+        kw["c"] = jnp.asarray(tree[prefix + "c"])
+    return data._replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Per-flavor snapshot trees
+# ---------------------------------------------------------------------------
+
+
+def _snap_single(st) -> tuple[dict, dict]:
+    tree = _data_tree(st.data)
+    extras = {
+        "flavor": "single", "kernel": st.spec.name, "d": st.d,
+        "capacity": st.data.capacity, "window": st.window,
+        "noise": st.noise, "signal": st.signal, "jitter": st.jitter,
+        "deg_thresh": st.deg_thresh, "tol": st.tol, "maxiter": st.maxiter,
+        "precision": st.precision, "dtype": str(st.data.X.dtype),
+        "policy_mode": st.policy.mode, "policy_capacity": st.policy.capacity,
+        "last_regime": st._last_regime,
+        "revision": st.revision, "factor_revision": st.factor_revision,
+        "reduced": st._reduction is not None,
+    }
+    if st._reduction is not None:
+        red = st._reduction
+        tree["red_basis"] = _np(red.basis)
+        tree["red_base"] = _np(red.base)
+        tree["red_Xr"] = _np(red.Xr)
+        tree["red_Gr"] = _np(red.Gr)
+        tree["red_residual"] = _np(red.residual)
+        tree["raw_X"] = np.stack([_np(r) for r in st._raw_X])
+        tree["raw_G"] = np.stack([_np(r) for r in st._raw_G])
+    return tree, extras
+
+
+def _build_single(tree: dict, extras: dict):
+    import jax.numpy as jnp
+
+    from repro.core.state import GPGState
+    from repro.regime.policy import RegimePolicy
+
+    st = GPGState(
+        extras["kernel"], int(extras["d"]),
+        capacity=int(extras["capacity"]), window=extras["window"],
+        noise=extras["noise"], signal=extras["signal"],
+        jitter=extras["jitter"], deg_thresh=extras["deg_thresh"],
+        tol=extras["tol"], maxiter=extras["maxiter"],
+        dtype=np.dtype(extras["dtype"]), precision=extras["precision"],
+        policy=RegimePolicy(mode=extras["policy_mode"],
+                            capacity=extras["policy_capacity"]))
+    st.data = _data_from_tree(st.data, tree)
+    st._last_regime = extras.get("last_regime")
+    st.revision = int(extras["revision"])
+    st.factor_revision = int(extras["factor_revision"])
+    if extras.get("reduced"):
+        from repro.regime.reduction import Reduction
+
+        st._reduction = Reduction(
+            basis=jnp.asarray(tree["red_basis"]),
+            base=jnp.asarray(tree["red_base"]),
+            Xr=jnp.asarray(tree["red_Xr"]),
+            Gr=jnp.asarray(tree["red_Gr"]),
+            residual=jnp.asarray(tree["red_residual"]))
+        st._raw_X = [jnp.asarray(r) for r in tree["raw_X"]]
+        st._raw_G = [jnp.asarray(r) for r in tree["raw_G"]]
+    return st
+
+
+def _snap_fleet(fl) -> tuple[dict, dict]:
+    tree = _data_tree(fl.fleet.data)
+    tree["noise"] = _np(fl.fleet.noise)
+    tree["signal"] = _np(fl.fleet.signal)
+    tree["active"] = _np(fl.fleet.active)
+    extras = {
+        "flavor": "fleet", "kernel": fl.spec.name, "d": fl.d,
+        "capacity": fl.capacity, "batch": fl.batch, "window": fl.window,
+        "defaults": {k: float(v) for k, v in fl.defaults.items()},
+        "jitter": fl.jitter, "deg_thresh": fl.deg_thresh, "tol": fl.tol,
+        "maxiter": fl.maxiter, "dtype": str(fl.fleet.data.X.dtype),
+        # JSON keys must be strings; the serve layer's tenants are
+        "slots": {str(t): int(s) for t, s in fl._slots.items()},
+        "revision": list(fl.revision),
+        "factor_revision": list(fl.factor_revision),
+    }
+    return tree, extras
+
+
+def _build_fleet(tree: dict, extras: dict, *, batch: Optional[int] = None):
+    import jax.numpy as jnp
+
+    from repro.core.fleet import FleetGPGData, GPFleet
+
+    saved_batch = int(extras["batch"])
+    target = saved_batch if batch is None else int(batch)
+    dd = extras["defaults"]
+    fl = GPFleet(extras["kernel"], int(extras["d"]),
+                 capacity=int(extras["capacity"]), batch=target,
+                 window=extras["window"], lam=dd["lam"], noise=dd["noise"],
+                 signal=dd["signal"], jitter=extras["jitter"],
+                 deg_thresh=extras["deg_thresh"], tol=extras["tol"],
+                 maxiter=extras["maxiter"], dtype=np.dtype(extras["dtype"]))
+    slots = {t: int(s) for t, s in extras["slots"].items()}
+    if target == saved_batch:
+        # same packing: verbatim stacked leaves (bitwise restore)
+        data = _data_from_tree(fl.fleet.data, tree)
+        fl.fleet = FleetGPGData(
+            data=data, noise=jnp.asarray(tree["noise"]),
+            signal=jnp.asarray(tree["signal"]),
+            active=jnp.asarray(tree["active"]))
+        fl._slots = dict(slots)
+        fl._free = [s for s in range(target)
+                    if s not in set(slots.values())][::-1]
+        fl.revision = [int(r) for r in extras["revision"]]
+        fl.factor_revision = [int(r) for r in extras["factor_revision"]]
+        return fl
+    # elastic repack: re-join tenants in saved-slot order, then write
+    # each saved lane back verbatim — per-lane bits are packing-invariant
+    if len(slots) > target:
+        raise ValueError(
+            f"cannot repack {len(slots)} tenants into batch={target}")
+    order = sorted(slots, key=lambda t: slots[t])
+    for t in order:
+        fl.join(t)
+    data, noise, signal = fl.fleet.data, fl.fleet.noise, fl.fleet.signal
+    fields = _DATA_FIELDS + (("c",) if "c" in tree else ())
+    for t in order:
+        src, dst = slots[t], fl._slots[t]
+        data = data._replace(**{
+            f: getattr(data, f).at[dst].set(jnp.asarray(tree[f])[src])
+            for f in fields})
+        noise = noise.at[dst].set(jnp.asarray(tree["noise"])[src])
+        signal = signal.at[dst].set(jnp.asarray(tree["signal"])[src])
+        fl.revision[dst] = int(extras["revision"][src])
+        fl.factor_revision[dst] = int(extras["factor_revision"][src])
+    fl.fleet = FleetGPGData(data=data, noise=noise, signal=signal,
+                            active=fl.fleet.active)
+    return fl
+
+
+def _snap_sharded(st) -> tuple[dict, dict]:
+    tree = st.snapshot_arrays()
+    extras = {
+        "flavor": "sharded", "kernel": st.spec.name, "d": st.d_orig,
+        "capacity": st.data.capacity, "window": st.window,
+        "noise": st.noise, "signal": st.signal, "jitter": st.jitter,
+        "deg_thresh": st.deg_thresh,
+        "dtype": str(np.asarray(tree["X"]).dtype),
+        "revision": st.revision,
+    }
+    return tree, extras
+
+
+def _build_sharded(tree: dict, extras: dict, *, mesh=None):
+    from repro.core.dist_state import ShardedGPGState
+
+    st = ShardedGPGState(
+        extras["kernel"], int(extras["d"]), mesh=mesh,
+        capacity=int(extras["capacity"]), window=extras["window"],
+        noise=extras["noise"], signal=extras["signal"],
+        jitter=extras["jitter"], deg_thresh=extras["deg_thresh"],
+        dtype=np.dtype(extras["dtype"]))
+    st.load_snapshot_arrays(tree)
+    st.revision = int(extras["revision"])
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def snapshot(state, root: str, *, step: int, keep: int = 5,
+             manager: Optional[CheckpointManager] = None,
+             journal=None) -> str:
+    """Write one committed snapshot of any state flavor; returns the
+    checkpoint directory.  With ``journal``, a snapshot marker is
+    appended so replay knows where the journal tail starts."""
+    from repro.core.dist_state import ShardedGPGState
+    from repro.core.fleet import GPFleet
+    from repro.core.state import GPGState
+
+    with _trace.span("resilience.snapshot", step=step):
+        if isinstance(state, GPGState):
+            tree, extras = _snap_single(state)
+        elif isinstance(state, GPFleet):
+            tree, extras = _snap_fleet(state)
+        elif isinstance(state, ShardedGPGState):
+            tree, extras = _snap_sharded(state)
+        else:
+            raise TypeError(f"cannot snapshot {type(state).__name__}")
+        mgr = manager or CheckpointManager(root, keep=keep)
+        mgr.save(step, tree, extras=extras)
+        mgr.wait()
+        if journal is not None:
+            journal.mark_snapshot(step)
+        _trace.REGISTRY.inc("resilience.snapshots")
+        _trace.emit({"type": "resilience", "action": "snapshot",
+                     "step": step, "flavor": extras["flavor"]})
+    path = f"{root}/step_{step:09d}"
+    return path
+
+
+def _abstract_from_index(index: dict) -> dict:
+    import jax
+
+    return {name: jax.ShapeDtypeStruct(tuple(meta["shape"]),
+                                       np.dtype(meta["dtype"]))
+            for name, meta in index.items()}
+
+
+def restore(root: str, *, step: Optional[int] = None, mesh=None,
+            batch: Optional[int] = None) -> Any:
+    """Rebuild a state from the newest good snapshot under ``root``.
+
+    ``step`` pins a specific snapshot; otherwise committed steps are
+    tried newest-first and corrupted ones skipped (counted as
+    ``resilience.checkpoint_fallbacks``).  ``mesh`` retargets a sharded
+    snapshot; ``batch`` repacks a fleet snapshot elastically.
+    """
+    with _trace.span("resilience.restore"):
+        steps = [step] if step is not None else \
+            list(reversed(_committed_steps(root)))
+        if not steps:
+            raise FileNotFoundError(f"no committed snapshots under {root!r}")
+        last_err: Optional[Exception] = None
+        for s in steps:
+            try:
+                abstract = _abstract_from_index(manifest_index(root, s))
+                tree, extras = restore_checkpoint(root, s, abstract)
+                break
+            except CheckpointCorruptionError as e:
+                last_err = e
+                _trace.REGISTRY.inc("resilience.checkpoint_fallbacks")
+                _trace.emit({"type": "resilience",
+                             "action": "checkpoint_fallback",
+                             "skipped_step": s, "error": str(e)})
+        else:
+            raise CheckpointCorruptionError(
+                f"every committed snapshot under {root!r} is corrupt"
+            ) from last_err
+        tree = {k: np.asarray(v) for k, v in tree.items()}
+        flavor = extras["flavor"]
+        if flavor == "single":
+            state = _build_single(tree, extras)
+        elif flavor == "fleet":
+            state = _build_fleet(tree, extras, batch=batch)
+        elif flavor == "sharded":
+            state = _build_sharded(tree, extras, mesh=mesh)
+        else:
+            raise ValueError(f"unknown snapshot flavor {flavor!r}")
+        _trace.REGISTRY.inc("resilience.restores")
+        _trace.emit({"type": "resilience", "action": "restore",
+                     "step": s, "flavor": flavor})
+    return state

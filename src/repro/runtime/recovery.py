@@ -39,6 +39,12 @@ class FailureInjector:
     def maybe_fail(self, step: int) -> None:
         if step in self.fail_at and step not in self._fired:
             self._fired.add(step)
+            # lazy: resilience imports this module (no top-level cycle)
+            from repro.obs import trace as _trace
+
+            _trace.REGISTRY.inc("resilience.faults_injected")
+            _trace.REGISTRY.inc("resilience.injected.crash")
+            _trace.emit({"type": "chaos", "kind": "crash", "step": step})
             raise SimulatedFailure(f"injected failure at step {step}")
 
 
@@ -111,6 +117,9 @@ def run_with_recovery(
             (params, opt_state), _ = _restore(mgr, latest, params, opt_state,
                                               shardings)
             stats["steps_replayed"] += step - latest
+            from repro.resilience import guardrails as _guard
+
+            _guard.record_recovery("crash", restored_step=latest)
             log.warning("%s -> restored step %d (was %d)", e, latest, step)
             step = latest
     mgr.wait()

@@ -24,6 +24,11 @@ from repro.models import (SHAPES, ModelConfig, batch_specs, build_model,
 from repro.obs import compile_watch as _cw
 from repro.obs import cost as _cost
 from repro.obs import trace as _obs
+from repro.resilience import guardrails as _guard
+from repro.resilience.errors import (DeadlineExceededError,
+                                     NonFiniteObservationError,
+                                     RetryExhaustedError, ShedResponse,
+                                     TenantQuarantinedError)
 
 from .sharding import (batch_partition_specs, cache_partition_specs,
                        param_named_shardings, sanitize_spec_tree)
@@ -190,7 +195,29 @@ class GPServeBundle:
         from repro.core.query import PosteriorBatch
 
         with _obs.span("serve.query"):
+            if getattr(self.state, "_reduction", None) is not None:
+                return self._query_reduced(Xq)
             return self._query(Xq, PosteriorBatch)
+
+    def _query_reduced(self, Xq):
+        """Serve through the state's own reduced-frame path (the bundle's
+        compiled step was shaped for the raw frame).  grad_std cannot
+        rotate through the reduction basis — degrade to a grad_std=None
+        answer instead of killing the request (typed, counted)."""
+        from repro.resilience.errors import UnsupportedQueryError
+
+        try:
+            return self.state.posterior(
+                Xq, probe=self.probe, microbatch=self.microbatch,
+                return_std=self.return_std,
+                return_grad_std=self.return_grad_std)
+        except UnsupportedQueryError:
+            if _obs.enabled():
+                _obs.REGISTRY.inc("resilience.degraded_query")
+            _obs.emit({"type": "degraded_query", "want": "grad_std"})
+            return self.state.posterior(
+                Xq, probe=self.probe, microbatch=self.microbatch,
+                return_std=self.return_std, return_grad_std=False)
 
     def _query(self, Xq, PosteriorBatch):
         obs_on = _obs.enabled()
@@ -334,13 +361,24 @@ def build_gp_serve_step(state, *, microbatch: int | None = None, probe=None,
 class FleetRequest:
     """One pending tenant op.  ``result`` is set when the request has been
     packed into a launch (``done`` flips true); queries resolve to a
-    ``PosteriorBatch``, refits to the fitted mll, lifecycle ops to None."""
+    ``PosteriorBatch``, refits to the fitted mll, lifecycle ops to None.
+
+    Failure outcomes complete the request too: ``result`` is then a typed
+    ``ResilienceError`` instance (deadline/retry/quarantine) or a
+    ``ShedResponse`` — callers branch on type, they never block forever.
+    ``deadline``/``not_before`` are server STEP counts (the serve clock),
+    not wall time; ``chaos_kind`` tags injector-corrupted requests so
+    recovery accounting stays exact."""
 
     tenant: Any
     op: str                 # 'extend' | 'evict' | 'resolve' | 'refit' | 'query'
     payload: Any = None
     done: bool = False
     result: Any = None
+    attempts: int = 0
+    deadline: Optional[int] = None
+    not_before: int = 0
+    chaos_kind: Optional[str] = None
 
 
 class GPFleetServer:
@@ -368,7 +406,7 @@ class GPFleetServer:
     """
 
     def __init__(self, fleet=None, *, kernel="rbf", d=None, config=None,
-                 **fleet_kwargs):
+                 injector=None, journal=None, **fleet_kwargs):
         import collections
 
         from repro.configs.paper_gp import GP_FLEET
@@ -384,18 +422,34 @@ class GPFleetServer:
         self._idle: dict = {t: 0 for t in fleet.tenants}
         self._solvers: Any = collections.OrderedDict()
         self.steps = 0
+        # -- resilience wiring (DESIGN.md sec. 17.3) ----------------------
+        self.injector = injector          # ChaosInjector (drills/tests)
+        self.journal = journal            # resilience.Journal (recovery)
+        self._failures: dict = {}         # tenant -> consecutive faults
+        self._quarantined: set = set()
         if _obs.enabled():
             for name in ("fleet.serve.requests", "fleet.serve.steps",
                          "fleet.idle_evictions",
                          "fleet.solver_cache.hits",
-                         "fleet.solver_cache.misses"):
+                         "fleet.solver_cache.misses",
+                         "resilience.load_shed",
+                         "resilience.deadline_expired",
+                         "resilience.retries"):
                 _obs.REGISTRY.inc(name, 0)
 
     # -- tenant lifecycle --------------------------------------------------
 
     def connect(self, tenant, **hypers) -> None:
+        if tenant in self._quarantined:
+            raise TenantQuarantinedError(
+                f"tenant {tenant!r} is quarantined")
         self.fleet.join(tenant, **hypers)
         self._idle[tenant] = 0
+        self._failures.pop(tenant, None)
+        if self.journal is not None:
+            self.journal.record("join", tenant=tenant,
+                                args={k: float(v)
+                                      for k, v in hypers.items()})
 
     def disconnect(self, tenant) -> None:
         self._queue = type(self._queue)(
@@ -405,6 +459,8 @@ class GPFleetServer:
         self._solvers = type(self._solvers)(
             (k, v) for k, v in self._solvers.items() if k[0] != slot)
         self.fleet.leave(tenant)
+        if self.journal is not None:
+            self.journal.record("leave", tenant=tenant)
 
     @property
     def tenants(self):
@@ -414,16 +470,91 @@ class GPFleetServer:
 
     def submit(self, tenant, op: str, payload=None) -> FleetRequest:
         """Enqueue an op; returns the request (poll ``.done``/``.result``
-        after ``step``/``drain``)."""
+        after ``step``/``drain``).
+
+        Admission is where resilience bites first: quarantined tenants are
+        refused, a full queue sheds with a typed ``ShedResponse`` result,
+        and non-finite extend payloads are rejected BEFORE they can touch
+        a factor strip (the request completes with the typed error as its
+        result — repeated offenders get quarantined)."""
+        if tenant in self._quarantined:
+            raise TenantQuarantinedError(f"tenant {tenant!r} is quarantined")
         if tenant not in self._idle:
             raise KeyError(f"tenant {tenant!r} is not connected")
         if op not in ("extend", "evict", "resolve", "refit", "query"):
             raise ValueError(f"unknown fleet op {op!r}")
-        req = FleetRequest(tenant=tenant, op=op, payload=payload)
-        self._queue.append(req)
+        req = FleetRequest(tenant=tenant, op=op, payload=payload,
+                           deadline=self.steps + self.config.deadline_steps)
         if _obs.enabled():
             _obs.REGISTRY.inc("fleet.serve.requests")
+        # load shedding: a bounded queue is the backpressure contract —
+        # the caller gets a typed shed value immediately, never a stall
+        if len(self._queue) >= self.config.max_queue:
+            req.done = True
+            req.result = ShedResponse(reason="queue_full",
+                                      queue_depth=len(self._queue))
+            if _obs.enabled():
+                _obs.REGISTRY.inc("resilience.load_shed")
+            _obs.emit({"type": "load_shed", "tenant": str(tenant)})
+            return req
+        # chaos: corrupt an extend payload on a nan_payload draw (the
+        # admission guardrail below must catch it)
+        if op == "extend" and payload is not None \
+                and self._draw("nan_payload"):
+            x, g = payload
+            req.payload = payload = (self.injector.corrupt_payload(x), g)
+            req.chaos_kind = "nan_payload"
+        # chaos: stragglers park past their own deadline — the sweep in
+        # step() must expire them without stalling anyone else
+        if op == "query" and self._draw("straggler"):
+            req.chaos_kind = "straggler"
+            req.not_before = req.deadline + 1
+        if op == "extend" and payload is not None:
+            try:
+                x, g = payload
+                _guard.check_finite(x, g, what="observation", tenant=tenant)
+            except NonFiniteObservationError as e:
+                req.done = True
+                req.result = e
+                if req.chaos_kind == "nan_payload":
+                    _guard.record_recovery("nan_payload",
+                                           tenant=str(tenant))
+                self._note_failure(tenant)
+                return req
+        self._queue.append(req)
         return req
+
+    def _draw(self, kind: str) -> bool:
+        """One injector Bernoulli draw (False without a ChaosInjector)."""
+        draw = getattr(self.injector, "draw", None)
+        return bool(draw is not None and draw(kind))
+
+    def _note_failure(self, tenant) -> None:
+        """Count a tenant-attributed fault; quarantine past the threshold
+        (mask flip via ``GPFleet.quarantine`` — no repack, no recompile)."""
+        self._failures[tenant] = self._failures.get(tenant, 0) + 1
+        if self._failures[tenant] < self.config.quarantine_threshold:
+            return
+        self._quarantined.add(tenant)
+        self._failures.pop(tenant, None)
+        self._idle.pop(tenant, None)
+        slot = self.fleet.slot_of(tenant)
+        self._solvers = type(self._solvers)(
+            (k, v) for k, v in self._solvers.items() if k[0] != slot)
+        # pending requests fail typed — the queue never wedges on a
+        # quarantined tenant
+        kept = type(self._queue)()
+        for r in self._queue:
+            if r.tenant == tenant:
+                r.done = True
+                r.result = TenantQuarantinedError(
+                    f"tenant {tenant!r} quarantined while queued")
+            else:
+                kept.append(r)
+        self._queue = kept
+        self.fleet.quarantine(tenant)
+        if self.journal is not None:
+            self.journal.record("leave", tenant=tenant)
 
     # -- the packing loop --------------------------------------------------
 
@@ -434,7 +565,12 @@ class GPFleetServer:
         taken, skipped, busy = [], [], set()
         while self._queue:
             r = self._queue.popleft()
-            if r.tenant in busy:
+            if r.not_before > self.steps:
+                # backoff/straggler parking: not eligible yet, but it
+                # still holds its tenant's head-of-line slot (order!)
+                busy.add(r.tenant)
+                skipped.append(r)
+            elif r.tenant in busy:
                 skipped.append(r)
             else:
                 busy.add(r.tenant)
@@ -443,9 +579,20 @@ class GPFleetServer:
         return taken
 
     def step(self) -> list:
-        """Pack + launch one round; returns the completed requests."""
+        """Pack + launch one round; returns the completed requests.
+
+        Hardened path: expired requests are swept out first (typed
+        ``DeadlineExceededError``), then each per-op group launches under
+        the bounded-retry protocol — an injected kill requeues the group
+        with exponential step backoff until ``config.max_retries`` is
+        spent, after which requests complete with ``RetryExhaustedError``.
+        A request never blocks forever and a fault in one op group never
+        poisons the others."""
+        from repro.runtime.recovery import SimulatedFailure
+
         cfg = self.config
         self.steps += 1
+        completed = self._sweep_deadlines()
         batch = self._take_head_of_line()
         with _obs.span("fleet.serve.step", requests=len(batch),
                        queued=len(self._queue)):
@@ -455,24 +602,24 @@ class GPFleetServer:
             # lifecycle before queries: a step's queries see that step's
             # extends only for OTHER tenants (self ops are serialized by
             # head-of-line), so order here is launch-count, not semantics
-            fl = self.fleet
-            if "extend" in by_op:
-                fl.extend({r.tenant: r.payload for r in by_op["extend"]})
-            if "evict" in by_op:
-                fl.evict([r.tenant for r in by_op["evict"]])
-            if "resolve" in by_op:
-                fl.resolve({r.tenant: r.payload for r in by_op["resolve"]})
-            if "refit" in by_op:
-                mlls = fl.refit([r.tenant for r in by_op["refit"]],
-                                steps=cfg.refit_steps, lr=cfg.refit_lr)
-                for r in by_op["refit"]:
-                    r.result = mlls.get(r.tenant)
-            if "query" in by_op:
-                self._serve_queries(by_op["query"])
-            for r in batch:
-                r.done = True
+            for op in ("extend", "evict", "resolve", "refit", "query"):
+                reqs = by_op.get(op)
+                if not reqs:
+                    continue
+                try:
+                    kill = getattr(self.injector, "maybe_kill", None)
+                    if kill is not None:
+                        kill()
+                    self._launch_group(op, reqs)
+                except SimulatedFailure:
+                    _guard.record_recovery("kill_step", op=op)
+                    completed.extend(self._requeue(reqs))
+                    continue
+                for r in reqs:
+                    r.done = True
+                completed.extend(reqs)
             # idle bookkeeping + TTL eviction
-            active = {r.tenant for r in batch}
+            active = {r.tenant for r in completed}
             for t in list(self._idle):
                 self._idle[t] = 0 if t in active else self._idle[t] + 1
                 if self._idle[t] > cfg.idle_ttl:
@@ -483,7 +630,83 @@ class GPFleetServer:
                 _obs.REGISTRY.inc("fleet.serve.steps")
                 _obs.REGISTRY.set_gauge("fleet.serve.queue_depth",
                                         len(self._queue))
-        return batch
+        return completed
+
+    def _launch_group(self, op: str, reqs: list) -> None:
+        """One vmapped launch for an op group (+ journal on success)."""
+        cfg, fl = self.config, self.fleet
+        if op == "extend":
+            fl.extend({r.tenant: r.payload for r in reqs})
+            if self.journal is not None:
+                self.journal.record_fleet("extend", per_tenant={
+                    r.tenant: {"x": r.payload[0], "g": r.payload[1]}
+                    for r in reqs})
+        elif op == "evict":
+            fl.evict([r.tenant for r in reqs])
+            if self.journal is not None:
+                self.journal.record("evict",
+                                    tenants=[r.tenant for r in reqs])
+        elif op == "resolve":
+            fl.resolve({r.tenant: r.payload for r in reqs})
+            if self.journal is not None:
+                self.journal.record_fleet("resolve", per_tenant={
+                    r.tenant: {"rhs": r.payload} for r in reqs})
+        elif op == "refit":
+            mlls = fl.refit([r.tenant for r in reqs],
+                            steps=cfg.refit_steps, lr=cfg.refit_lr)
+            for r in reqs:
+                r.result = mlls.get(r.tenant)
+            if self.journal is not None:
+                self.journal.record("refit",
+                                    tenants=[r.tenant for r in reqs],
+                                    args={"steps": cfg.refit_steps,
+                                          "lr": cfg.refit_lr})
+        elif op == "query":
+            self._serve_queries(reqs)
+
+    def _requeue(self, reqs: list) -> list:
+        """Bounded retry: requeue a killed group with exponential step
+        backoff; past the budget, complete with RetryExhaustedError.
+        Returns the requests that just failed terminally."""
+        failed = []
+        for r in reversed(reqs):            # appendleft: keep FIFO order
+            r.attempts += 1
+            if r.attempts > self.config.max_retries:
+                r.done = True
+                r.result = RetryExhaustedError(
+                    f"{r.op!r} for tenant {r.tenant!r} failed "
+                    f"{r.attempts} times")
+                if _obs.enabled():
+                    _obs.REGISTRY.inc("resilience.retry_exhausted")
+                failed.append(r)
+                continue
+            r.not_before = self.steps + 2 ** r.attempts
+            if _obs.enabled():
+                _obs.REGISTRY.inc("resilience.retries")
+            self._queue.appendleft(r)
+        return failed
+
+    def _sweep_deadlines(self) -> list:
+        """Expire queued requests whose deadline has passed (typed result,
+        never a silent drop); chaos-parked stragglers count as recovered
+        the moment the sweep catches them."""
+        expired, kept = [], type(self._queue)()
+        for r in self._queue:
+            if r.deadline is not None and self.steps > r.deadline:
+                r.done = True
+                r.result = DeadlineExceededError(
+                    f"{r.op!r} for tenant {r.tenant!r} expired at "
+                    f"step {self.steps} (deadline {r.deadline})")
+                if _obs.enabled():
+                    _obs.REGISTRY.inc("resilience.deadline_expired")
+                if r.chaos_kind == "straggler":
+                    _guard.record_recovery("straggler",
+                                           tenant=str(r.tenant))
+                expired.append(r)
+            else:
+                kept.append(r)
+        self._queue = kept
+        return expired
 
     def drain(self, max_steps: int = 10_000) -> int:
         """Step until the queue is empty; returns the number of steps."""

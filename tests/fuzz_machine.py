@@ -346,3 +346,212 @@ def check_fleet_vs_loop(kname: str, d: int, window: int, seed: int,
                     f"posterior err={e:.3e} scale={sc:.1e} [seed={seed} "
                     f"kernel={kname} lane={b} step={step}]")
         compare(f"step{step}:{op}")
+
+
+# ---------------------------------------------------------------------------
+# Crash-consistent recovery trajectories (repro.resilience)
+# ---------------------------------------------------------------------------
+#
+# The recovery invariant under fuzz: a trajectory that snapshots, crashes
+# and restores (snapshot + journal replay) must land on EXACTLY the bits
+# of the uninterrupted run — same host methods, same jitted executables,
+# verbatim leaf restore, digest-checked journal payloads.  The dense
+# oracle still certifies every post-op state, so recovery cannot "pass"
+# by restoring into a subtly wrong posterior.
+
+_RECOVERY_FIELDS = ("X", "G", "Xt", "K1e", "K2e", "L", "Z", "lam", "count")
+
+
+def gen_recovery_ops(seed: int, n_ops: int, cap: int) -> list:
+    """Mutating-op tape for the recovery fuzz (payload sub-seeds)."""
+    rnd = np.random.RandomState(seed)
+    ops, count = [], 0
+    for _ in range(n_ops):
+        cands = ["extend"] if count == 0 else ["extend", "extend", "evict",
+                                               "resolve"]
+        op = cands[rnd.randint(len(cands))]
+        ops.append((op, int(rnd.randint(2**31 - 1))))
+        count = min(cap, count + 1) if op == "extend" else \
+            max(0, count - 1) if op == "evict" else count
+    return ops
+
+
+def _drive_single(st, ops, *, seed, kname, journal=None):
+    """Apply an op tape to a ``GPGState`` (journaling mutations that
+    actually executed), dense-oracle-checking Z after every op."""
+    d = st.d
+    rhs_override = None
+    for step, (op, sub) in enumerate(ops):
+        r = np.random.RandomState(sub)
+        if op == "extend":
+            x, g = r.randn(d), r.randn(d)
+            st.extend(x, g)
+            rhs_override = None
+            if journal is not None:
+                journal.record("extend", payload={"x": x, "g": g})
+        elif op == "evict":
+            if st.n <= 1:
+                continue
+            st.evict()
+            rhs_override = None
+            if journal is not None:
+                journal.record("evict", args={"k": 1})
+        elif op == "resolve":
+            if st.n == 0:
+                continue
+            rhs_override = r.randn(st.n, d)
+            st.resolve(jnp.asarray(rhs_override))
+            if journal is not None:
+                journal.record("resolve", payload={"rhs": rhs_override})
+        n = st.n
+        if n == 0:
+            continue
+        R = st.G if rhs_override is None else jnp.asarray(rhs_override)
+        Z_oracle = dense_solve(st.spec, st.X, R, lam=st.data.lam,
+                               noise=st._noise_eff, jitter=0.0)
+        scale = max(1.0, float(jnp.max(jnp.abs(Z_oracle))))
+        err = float(jnp.max(jnp.abs(st.Z - Z_oracle)))
+        assert err <= TOL * scale, (
+            f"Z vs dense oracle err={err:.3e} scale={scale:.1e} "
+            f"[recovery seed={seed} kernel={kname} step={step} op={op}]")
+    return st
+
+
+def _assert_bitwise(a_data, b_data, *, ctx: str, fields=_RECOVERY_FIELDS):
+    for f in fields:
+        want = np.asarray(getattr(a_data, f))
+        got = np.asarray(getattr(b_data, f))
+        assert np.array_equal(got, want, equal_nan=True), (
+            f"leaf {f!r} differs after recovery (max |diff|="
+            f"{np.max(np.abs(got.astype(np.float64) - want.astype(np.float64))):.3e}) [{ctx}]")
+
+
+def check_recovery_single(kname: str, d: int, cap: int, seed: int,
+                          root: str, n_ops: int = 9,
+                          noise: float = 1e-6, lam: float = 0.7) -> None:
+    """Snapshot / crash / journal-replay a ``GPGState`` trajectory and
+    assert the recovered state is BIT-IDENTICAL to the uninterrupted run
+    (dense-oracle-checked along both paths)."""
+    import os
+
+    from repro.core.state import GPGState
+    from repro.resilience import (Journal, replay_single, restore,
+                                  take_snapshot)
+
+    ops = gen_recovery_ops(seed, n_ops, cap)
+    snap_at, crash_at = max(1, n_ops // 3), max(2, 2 * n_ops // 3)
+    mk = lambda: GPGState(kname, d, window=cap, lam=lam, noise=noise)
+    ctx = f"seed={seed} kernel={kname} d={d} cap={cap}"
+
+    # uninterrupted reference
+    ref = _drive_single(mk(), ops, seed=seed, kname=kname)
+
+    # snapshot -> journal -> crash -> restore -> replay -> tail
+    jpath = os.path.join(root, "ops.jsonl")
+    journal = Journal(jpath)
+    live = _drive_single(mk(), ops[:snap_at], seed=seed, kname=kname)
+    take_snapshot(live, root, step=snap_at, journal=journal)
+    live = _drive_single(live, ops[snap_at:crash_at], seed=seed,
+                         kname=kname, journal=journal)
+    crashed_data = live.data
+    del live                                    # the crash
+    recovered = restore(root)
+    replay_single(recovered,
+                  Journal.since_snapshot(Journal.read(jpath)))
+    _assert_bitwise(crashed_data, recovered.data,
+                    ctx=f"{ctx} at=crash-point")
+    recovered = _drive_single(recovered, ops[crash_at:], seed=seed,
+                              kname=kname)
+    _assert_bitwise(ref.data, recovered.data, ctx=f"{ctx} at=end")
+
+
+def gen_fleet_recovery_ops(seed: int, steps: int, batch: int) -> list:
+    """Per step: (op, tenant index list, payload sub-seed)."""
+    rnd = np.random.RandomState(seed)
+    out = []
+    for _ in range(steps):
+        op = ["extend", "extend", "extend", "evict", "resolve"][
+            rnd.randint(5)]
+        mask = rnd.rand(batch) < 0.7
+        if not mask.any():
+            mask[rnd.randint(batch)] = True
+        out.append((op, [int(b) for b in np.flatnonzero(mask)],
+                    int(rnd.randint(2**31 - 1))))
+    return out
+
+
+def _drive_fleet(fl, ops, tenants, *, journal=None):
+    """Apply a grouped-op tape to a ``GPFleet`` (journaling executed
+    launches with their exact grouping)."""
+    d = fl.d
+    for op, lanes, sub in ops:
+        r = np.random.RandomState(sub)
+        group = [tenants[b] for b in lanes]
+        if op == "extend":
+            obs = {t: (r.randn(d), r.randn(d)) for t in group}
+            fl.extend(obs)
+            if journal is not None:
+                journal.record_fleet("extend", per_tenant={
+                    t: {"x": x, "g": g} for t, (x, g) in obs.items()})
+        elif op == "evict":
+            group = [t for t in group if fl.n(t) > 1]
+            if not group:
+                continue
+            fl.evict(group)
+            if journal is not None:
+                journal.record("evict", tenants=group)
+        elif op == "resolve":
+            group = [t for t in group if fl.n(t) > 0]
+            if not group:
+                continue
+            rhs = {t: r.randn(fl.n(t), d) for t in group}
+            fl.resolve(rhs)
+            if journal is not None:
+                journal.record_fleet("resolve", per_tenant={
+                    t: {"rhs": v} for t, v in rhs.items()})
+    return fl
+
+
+def check_recovery_fleet(kname: str, d: int, window: int, seed: int,
+                         root: str, steps: int = 6, batch: int = 3,
+                         restore_batch: int | None = None) -> None:
+    """Snapshot / crash / journal-replay a ``GPFleet`` trajectory; the
+    recovered fleet must match the uninterrupted run BIT-IDENTICALLY on
+    every tenant lane.  ``restore_batch`` restores into a different lane
+    packing (elastic) — per-lane bits must still match, because the
+    vmapped ops are lane-independent and the journal replays the same
+    grouped launches."""
+    import os
+
+    from repro.core.fleet import GPFleet
+    from repro.resilience import (Journal, replay_fleet, restore,
+                                  take_snapshot)
+
+    tenants = [f"t{b}" for b in range(batch)]
+    ops = gen_fleet_recovery_ops(seed, steps, batch)
+    snap_at, crash_at = max(1, steps // 3), max(2, 2 * steps // 3)
+    ctx = (f"seed={seed} kernel={kname} d={d} window={window} "
+           f"batch={batch}->{restore_batch or batch}")
+
+    def mk():
+        fl = GPFleet(kname, d=d, batch=batch, window=window)
+        for t in tenants:
+            fl.join(t)
+        return fl
+
+    ref = _drive_fleet(mk(), ops, tenants)
+
+    jpath = os.path.join(root, "fleet_ops.jsonl")
+    journal = Journal(jpath)
+    live = _drive_fleet(mk(), ops[:snap_at], tenants)
+    take_snapshot(live, root, step=snap_at, journal=journal)
+    live = _drive_fleet(live, ops[snap_at:crash_at], tenants,
+                        journal=journal)
+    del live                                    # the crash
+    recovered = restore(root, batch=restore_batch)
+    replay_fleet(recovered, Journal.since_snapshot(Journal.read(jpath)))
+    recovered = _drive_fleet(recovered, ops[crash_at:], tenants)
+
+    for t in tenants:
+        _assert_bitwise(ref.state_view(t), recovered.state_view(t),
+                        ctx=f"{ctx} tenant={t}")

@@ -19,6 +19,7 @@ from hypothesis import given, settings, strategies as st
 
 from conftest import arr as _arr
 from fuzz_machine import (FUZZ_KERNELS, check_fleet_vs_loop,
+                          check_recovery_fleet, check_recovery_single,
                           check_regime_trajectory, check_single_trajectory)
 from repro.core import (build_factors, dense_gram, get_kernel, gram_matvec,
                         l_op, lt_op, woodbury_solve)
@@ -141,6 +142,36 @@ def test_fuzz_regime_crossover_vs_dense_oracle(kname, d, seed):
     BOTH regimes (<= 1e-5 rel; regime dispatch must be invisible to the
     posterior)."""
     check_regime_trajectory(kname, d, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kname=st.sampled_from(["rbf", "expdot"]), d=st.integers(2, 5),
+       cap=st.integers(3, 5), seed=st.integers(0, 2**31 - 1))
+def test_fuzz_crash_recovery_single_bitwise(kname, d, cap, seed):
+    """Snapshot/crash/journal-replay interleaved into a random trajectory:
+    the recovered ``GPGState`` must be BIT-IDENTICAL to the uninterrupted
+    run at the crash point AND at the end of the tape (dense-oracle-
+    checked along both paths)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        check_recovery_single(kname, d, cap, seed, td)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kname=st.sampled_from(["rbf", "rq"]), d=st.integers(2, 4),
+       window=st.integers(2, 4), seed=st.integers(0, 2**31 - 1),
+       elastic=st.booleans())
+def test_fuzz_crash_recovery_fleet_bitwise(kname, d, window, seed, elastic):
+    """The fleet flavor of the same invariant — and with ``elastic`` the
+    snapshot restores into a DIFFERENT lane packing (batch 3 -> 5), which
+    must still be bitwise per tenant lane (vmapped ops are
+    lane-independent; the journal replays the exact grouped launches)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        check_recovery_fleet(kname, d, window, seed, td,
+                             restore_batch=5 if elastic else None)
 
 
 @settings(max_examples=15, deadline=None)

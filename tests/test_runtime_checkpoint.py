@@ -56,6 +56,48 @@ def test_uncommitted_checkpoint_ignored(tmp_path):
     assert latest_step(str(tmp_path)) == 1
 
 
+def test_truncated_leaf_detected_and_skipped(tmp_path):
+    """A truncated leaf file inside a COMMITTED checkpoint is detected as
+    typed corruption, and restore_latest falls back to the previous good
+    step instead of dying (or restoring garbage)."""
+    import json
+
+    from repro.checkpoint import (CheckpointCorruptionError, manifest_index,
+                                  restore_latest)
+
+    save_checkpoint(str(tmp_path), 1, tree(1))
+    save_checkpoint(str(tmp_path), 2, tree(2))
+    # truncate one leaf of step 2 mid-byte (a torn write after commit —
+    # e.g. disk corruption; the two-phase rename can't catch this one)
+    idx = manifest_index(str(tmp_path), 2)
+    fname = idx["a"]["file"]
+    leaf = tmp_path / "step_000000002" / fname
+    leaf.write_bytes(leaf.read_bytes()[:-40])
+    abstract = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree())
+    with pytest.raises(CheckpointCorruptionError):
+        restore_checkpoint(str(tmp_path), 2, abstract)
+    step, back, _ = restore_latest(str(tmp_path), abstract)
+    assert step == 1
+    assert jnp.allclose(back["a"], tree(1)["a"])
+    # wrong-shape leaf is corruption too (not a numpy reshape surprise)
+    save_checkpoint(str(tmp_path), 3, tree(3))
+    d3 = tmp_path / "step_000000003"
+    np.save(d3 / manifest_index(str(tmp_path), 3)["a"]["file"],
+            np.zeros((2, 2), np.float32))
+    with pytest.raises(CheckpointCorruptionError):
+        restore_checkpoint(str(tmp_path), 3, abstract)
+    step, _, _ = restore_latest(str(tmp_path), abstract)
+    assert step == 1
+    # every step corrupt -> typed failure, not a silent empty state
+    for s in (1,):
+        idx = manifest_index(str(tmp_path), s)
+        f = tmp_path / f"step_{s:09d}" / idx["a"]["file"]
+        f.write_bytes(b"not-an-npy")
+    with pytest.raises(CheckpointCorruptionError):
+        restore_latest(str(tmp_path), abstract)
+
+
 def test_async_manager(tmp_path):
     mgr = CheckpointManager(str(tmp_path), async_write=True)
     t = tree()

@@ -6,6 +6,7 @@ with ``REPRO_OBS=on REPRO_OBS_JSONL=<log>``), then gates on this script:
     python tools/check_telemetry.py <log.jsonl> [--allow-recompile]
                                     [--require-span NAME ...]
                                     [--expect-regime-switch-at N]
+                                    [--expect-recovery]
 
 Checks (each failure is one line on stderr; exit 1 on any):
 
@@ -49,7 +50,8 @@ REQUIRED_COUNTERS = (
 
 def check(path: str, *, required_spans=DEFAULT_REQUIRED_SPANS,
           allow_recompile: bool = False,
-          expect_regime_switch_at: int | None = None) -> list[str]:
+          expect_regime_switch_at: int | None = None,
+          expect_recovery: bool = False) -> list[str]:
     """Validate one telemetry log; return a list of failure strings."""
     failures: list[str] = []
     events: list[dict] = []
@@ -122,6 +124,29 @@ def check(path: str, *, required_spans=DEFAULT_REQUIRED_SPANS,
     if not any(k.startswith("cost.") for k in gauges):
         failures.append("snapshot has no cost.* modeled gauges")
 
+    if expect_recovery:
+        # the chaos-drill gate: every injected fault was recovered (the
+        # totals MATCH — a drill that injected nothing proves nothing),
+        # and recovery never triggered a recompile (checked above; this
+        # flag refuses --allow-recompile as a matter of policy)
+        inj = int(counters.get("resilience.faults_injected", 0))
+        rec = int(counters.get("resilience.faults_recovered", 0))
+        if "resilience.faults_injected" not in counters:
+            failures.append("--expect-recovery: no "
+                            "resilience.faults_injected counter (the "
+                            "chaos injector never ran)")
+        elif inj == 0:
+            failures.append("--expect-recovery: zero faults injected — "
+                            "the drill proved nothing")
+        elif inj != rec:
+            failures.append(
+                f"--expect-recovery: injected {inj} != recovered {rec} "
+                "(an unhandled fault class, or double-counted recovery)")
+        if allow_recompile:
+            failures.append("--expect-recovery is incompatible with "
+                            "--allow-recompile: zero-recompile recovery "
+                            "IS the claim under test")
+
     # self-consistency: the registry's call counters must agree with the
     # number of span events the same call sites emitted
     for counter, span_name in (("state.extend_calls", "state.extend"),
@@ -149,12 +174,17 @@ def main(argv=None) -> int:
                     help="assert the first exact->iterative regime switch "
                          "event fired at exactly this n (the modeled "
                          "crossover)")
+    ap.add_argument("--expect-recovery", action="store_true",
+                    help="assert resilience.faults_injected == "
+                         "resilience.faults_recovered > 0 and zero "
+                         "recompiles (the chaos-drill gate)")
     args = ap.parse_args(argv)
     required = tuple(args.require_span) if args.require_span \
         else DEFAULT_REQUIRED_SPANS
     failures = check(args.log, required_spans=required,
                      allow_recompile=args.allow_recompile,
-                     expect_regime_switch_at=args.expect_regime_switch_at)
+                     expect_regime_switch_at=args.expect_regime_switch_at,
+                     expect_recovery=args.expect_recovery)
     if failures:
         for f in failures:
             print(f"TELEMETRY FAIL: {f}", file=sys.stderr)
